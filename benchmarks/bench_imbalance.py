@@ -1,0 +1,34 @@
+"""Paper Fig. 4d: load-imbalance factor (max busy / mean busy over physical
+sub-operators) per partitioner and window policy, on a hub-skewed graph."""
+from __future__ import annotations
+
+from repro.core import windowing as win
+from repro.core.explosion import imbalance_factor
+
+from benchmarks.common import fmt_row, make_case, make_pipeline, run_and_time
+
+
+def run(scale: str = "small"):
+    n_edges = {"small": 1500, "full": 20000}[scale]
+    case = make_case(n_edges=n_edges, alpha=1.05)   # heavy skew
+    rows = []
+    for partitioner in ("hdrf", "clda", "random"):
+        for name, policy in (("streaming",
+                              win.WindowConfig(kind=win.STREAMING)),
+                             ("session",
+                              win.WindowConfig(kind=win.SESSION, interval=4))):
+            _, _, pipe = make_pipeline(case, n_parts=8, window=policy,
+                                       partitioner=partitioner,
+                                       base_parallelism=4)
+            wall = run_and_time(pipe, case, tick_edges=64)
+            imb = [imbalance_factor(b) for b in pipe.physical_busy_per_layer()]
+            rows.append(fmt_row(
+                f"fig4d_imbalance[{partitioner},{name}]", 1e6 * wall,
+                f"imb_l1={imb[0]:.2f};imb_l2={imb[-1]:.2f};"
+                f"repl={pipe.part.replication_factor():.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

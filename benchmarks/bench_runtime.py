@@ -1,0 +1,30 @@
+"""Paper Fig. 4c: running time for a bounded stream (runtime measured to
+termination detection), streaming vs windowed, across parallelism."""
+from __future__ import annotations
+
+from repro.core import windowing as win
+
+from benchmarks.common import fmt_row, make_case, make_pipeline, run_and_time
+
+
+def run(scale: str = "small"):
+    n_edges = {"small": 1500, "full": 20000}[scale]
+    case = make_case(n_edges=n_edges)
+    rows = []
+    for name, policy in (("streaming", win.WindowConfig(kind=win.STREAMING)),
+                         ("session", win.WindowConfig(kind=win.SESSION,
+                                                      interval=4))):
+        for par in (2, 4, 8):
+            _, _, pipe = make_pipeline(case, n_parts=8, window=policy,
+                                       base_parallelism=par)
+            wall = run_and_time(pipe, case, tick_edges=128)
+            rows.append(fmt_row(f"fig4c_runtime[{name},p={par}]",
+                                1e6 * wall,
+                                f"ticks={pipe.metrics.ticks};"
+                                f"runtime_s={wall:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

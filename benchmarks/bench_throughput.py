@@ -1,0 +1,40 @@
+"""Paper Fig. 4a: inference throughput scaling — Streaming vs windowed
+(Tumbling/Session/Adaptive) across parallelism levels.
+
+Metric: final-layer representations produced per second (the paper's
+"rate of producing final layer representations").
+"""
+from __future__ import annotations
+
+from repro.core import windowing as win
+
+from benchmarks.common import fmt_row, make_case, make_pipeline, run_and_time
+
+POLICIES = {
+    "streaming": win.WindowConfig(kind=win.STREAMING),
+    "tumbling": win.WindowConfig(kind=win.TUMBLING, interval=4),
+    "session": win.WindowConfig(kind=win.SESSION, interval=4),
+    "adaptive": win.WindowConfig(kind=win.ADAPTIVE),
+}
+
+
+def run(scale: str = "small"):
+    n_edges = {"small": 1500, "full": 20000}[scale]
+    case = make_case(n_edges=n_edges)
+    rows = []
+    for par in (2, 4, 8):
+        for name, policy in POLICIES.items():
+            _, _, pipe = make_pipeline(case, n_parts=8, window=policy,
+                                       base_parallelism=par)
+            wall = run_and_time(pipe, case, tick_edges=128)
+            thr = pipe.metrics.emitted_total / wall
+            rows.append(fmt_row(
+                f"fig4a_throughput[{name},p={par}]",
+                1e6 * wall / max(pipe.metrics.emitted_total, 1),
+                f"emitted={pipe.metrics.emitted_total};rep_per_s={thr:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

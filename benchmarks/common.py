@@ -1,0 +1,64 @@
+"""Shared benchmark scaffolding: synthetic streams, pipeline factory,
+timing helpers. Benchmarks mirror the paper's figures at CPU-feasible
+scale; the semantics (per-figure metrics) match §6.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+
+from repro.core import windowing as win
+from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.graph.graphs import powerlaw_edges
+from repro.graph.sage import GraphSAGE
+
+D_IN = 16
+D_HID = 32
+
+
+@dataclass
+class StreamCase:
+    edges: np.ndarray
+    feats: dict
+    n_nodes: int
+
+
+def make_case(seed=0, n_nodes=400, n_edges=2000, alpha=1.3) -> StreamCase:
+    rng = np.random.default_rng(seed)
+    edges = powerlaw_edges(rng, n_nodes, n_edges, alpha)
+    feats = {v: rng.normal(size=D_IN).astype(np.float32)
+             for v in range(n_nodes)}
+    return StreamCase(edges=edges, feats=feats, n_nodes=n_nodes)
+
+
+def make_pipeline(case: StreamCase, n_parts=8, window=None,
+                  partitioner="hdrf", base_parallelism=2, explosion=1.0,
+                  node_cap=None, edge_cap=None, seed=0):
+    model = GraphSAGE((D_IN, D_HID, D_HID))
+    params = model.init(jax.random.key(0))
+    cfg = PipelineConfig(
+        n_parts=n_parts,
+        node_cap=node_cap or max(128, 4 * case.n_nodes // n_parts),
+        edge_cap=edge_cap or max(256, 4 * len(case.edges) // n_parts),
+        repl_cap=max(256, 2 * case.n_nodes),
+        feat_cap=2048, edge_tick_cap=1024,
+        window=window or win.WindowConfig(kind=win.STREAMING),
+        partitioner=partitioner, base_parallelism=base_parallelism,
+        explosion=explosion, max_nodes=case.n_nodes, seed=seed)
+    return model, params, D3Pipeline(model, params, cfg)
+
+
+def run_and_time(pipe, case: StreamCase, tick_edges=128, flush=True):
+    t0 = time.perf_counter()
+    pipe.run_stream(case.edges, case.feats, tick_edges=tick_edges)
+    if flush:
+        pipe.flush(max_ticks=512)
+    wall = time.perf_counter() - t0
+    return wall
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

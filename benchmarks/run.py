@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract), at
+CPU-feasible scale; pass --scale full for the larger configurations.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_comm_volume, bench_explosion, bench_imbalance,
+                        bench_latency, bench_runtime, bench_throughput,
+                        bench_training, bench_vs_batch)
+
+ALL = {
+    "fig4a_throughput": bench_throughput,
+    "fig4b_comm_volume": bench_comm_volume,
+    "fig4c_runtime": bench_runtime,
+    "fig4d_imbalance": bench_imbalance,
+    "fig5_vs_batch": bench_vs_batch,
+    "fig5d_training": bench_training,
+    "fig6_explosion": bench_explosion,
+    "fig7_latency": bench_latency,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--scale", default="small", choices=["small", "full"])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in ALL.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in mod.run(scale=args.scale):
+                print(row)
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, repr(e)))
+            traceback.print_exc()
+    if failed:
+        for name, err in failed:
+            print(f"{name},FAILED,{err}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

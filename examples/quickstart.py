@@ -1,0 +1,66 @@
+"""Quickstart: stream a graph through D3-GNN, verify exactness, train.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a 2-layer GraphSAGE (the paper's model), streams a synthetic
+power-law edge stream through the windowed pipeline, checks the sink
+against the static oracle, then runs one stale-free training cycle.
+"""
+import numpy as np
+import jax
+
+from repro.core import windowing as win
+from repro.core.oracle import build_snapshot, oracle_embeddings
+from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.core.training import TrainingCoordinator
+from repro.graph.graphs import powerlaw_edges
+from repro.graph.sage import GraphSAGE
+from repro.nn.layers import Linear
+from repro.optim import sgd
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_nodes, d_in = 200, 16
+    edges = powerlaw_edges(rng, n_nodes, 1000)
+    feats = {v: rng.normal(size=d_in).astype(np.float32)
+             for v in range(n_nodes)}
+
+    model = GraphSAGE((d_in, 32, 32))
+    params = model.init(jax.random.key(0))
+    cfg = PipelineConfig(n_parts=8, node_cap=256, edge_cap=1024,
+                         repl_cap=512, feat_cap=1024, edge_tick_cap=256,
+                         max_nodes=n_nodes,
+                         window=win.WindowConfig(kind=win.SESSION, interval=4))
+    pipe = D3Pipeline(model, params, cfg)
+
+    print("== streaming 1000 edges through the windowed pipeline ==")
+    pipe.run_stream(edges, feats, tick_edges=128)
+    pipe.flush()
+    m = pipe.metrics
+    print(f"ticks={m.ticks} emitted={m.emitted_total} "
+          f"reduce_msgs={m.reduce_msgs} cross_part={m.cross_part_msgs} "
+          f"replication={pipe.part.replication_factor():.2f}")
+
+    print("== exactness vs static oracle ==")
+    emb = pipe.embeddings()
+    g, _ = build_snapshot(edges, feats, d_in, n_nodes)
+    ref = np.asarray(oracle_embeddings(model, params, g))
+    err = max(float(np.abs(v - ref[k]).max()) for k, v in emb.items())
+    print(f"embeddings materialized: {len(emb)}; max |err| = {err:.2e}")
+    assert err < 1e-4
+
+    print("== stale-free training cycle (halt -> flush -> train -> rebuild) ==")
+    labels = {v: int(rng.integers(0, 4)) for v in range(n_nodes)}
+    head = Linear(32, 4)
+    coord = TrainingCoordinator(pipe, head, head.init(jax.random.key(1)),
+                                sgd(), lr=0.1, batch_threshold=2)
+    coord.observe_labels(labels)
+    print(f"StartTraining votes: {coord.votes()}/{cfg.n_parts}")
+    res = coord.train(epochs=5)
+    print("losses:", [round(l, 3) for l in res.losses])
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines SPEC: configs.base.ArchSpec with the exact published
+config and its four assigned input shapes. The paper's own evaluation model
+(2-layer GraphSAGE-64 under the D3-GNN streaming engine) is registered as
+`d3gnn-sage` in addition to the 10 assigned architectures.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+_MODULES = {
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "nequip": "repro.configs.nequip",
+    "dimenet": "repro.configs.dimenet",
+    "pna": "repro.configs.pna",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    "d3gnn-sage": "repro.configs.d3gnn_sage",
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "d3gnn-sage"]
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return import_module(_MODULES[arch_id]).SPEC
+
+
+def all_cells(include_extra: bool = False):
+    """Every (arch, shape) cell — 40 assigned (+ the paper's own model)."""
+    ids = list(ARCH_IDS) + (["d3gnn-sage"] if include_extra else [])
+    out = []
+    for a in ids:
+        spec = get_arch(a)
+        for s in spec.shapes:
+            out.append((a, s))
+    return out

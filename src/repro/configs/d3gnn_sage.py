@@ -1,0 +1,113 @@
+"""d3gnn-sage — the paper's own evaluation model under the streaming engine:
+2-layer GraphSAGE, 64-dim output (paper §6), running as the distributed
+micro-tick dataflow. Registered as an EXTRA dry-run cell (the 40 assigned
+cells are the 10 arch x 4 shape grid; this one proves the paper's engine
+itself lowers and compiles on the production mesh).
+
+Scale: 1024 logical parts (= max_parallelism), reddit-scale features
+(d_in=602), per-part caps sized for ~1M vertices / ~16M edges globally.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, ShapeSpec, sds
+from repro.core import windowing as win
+from repro.core.events import EdgeBatch, FeatBatch, ReplBatch
+from repro.core.state import LayerState, TopoState
+from repro.core.tick import layer_tick
+from repro.graph.sage import GraphSAGE
+
+N_PARTS = 1024
+NODE_CAP = 1024          # per-part vertex slots  (~1M vertices w/ replicas)
+EDGE_CAP = 16384         # per-part edge slots    (~16M edges)
+REPL_CAP = 4096
+FEAT_CAP = 16384         # event rows per tick
+EDGE_TICK_CAP = 16384
+D_IN, D_HID = 602, 64
+
+SHAPES = {
+    "stream_tick": ShapeSpec(
+        "stream_tick", "serve",
+        {"n_parts": N_PARTS, "node_cap": NODE_CAP, "edge_cap": EDGE_CAP,
+         "feat_cap": FEAT_CAP, "d_in": D_IN, "d_hid": D_HID}),
+}
+
+
+def build(shape_name=None):
+    return GraphSAGE((D_IN, D_HID, D_HID))
+
+
+def build_reduced(shape_name=None):
+    return GraphSAGE((8, 8, 8))
+
+
+def _topo_specs():
+    P, E, R, N = N_PARTS, EDGE_CAP, REPL_CAP, NODE_CAP
+    i32, b = jnp.int32, jnp.bool_
+    return TopoState(
+        e_src_slot=sds((P, E), i32), e_dst_slot=sds((P, E), i32),
+        e_dst_mpart=sds((P, E), i32), e_dst_mslot=sds((P, E), i32),
+        e_valid=sds((P, E), b),
+        r_master_slot=sds((P, R), i32), r_rep_part=sds((P, R), i32),
+        r_rep_slot=sds((P, R), i32), r_valid=sds((P, R), b),
+        v_exists=sds((P, N), b), is_master=sds((P, N), b))
+
+
+def _layer_specs(d):
+    P, N = N_PARTS, NODE_CAP
+    f32, i32, b = jnp.float32, jnp.int32, jnp.bool_
+    return LayerState(
+        feat=sds((P, N, d), f32), has_feat=sds((P, N), b),
+        x_sent=sds((P, N, d), f32), has_sent=sds((P, N), b),
+        agg=sds((P, N, d), f32), agg_cnt=sds((P, N), f32),
+        red_pending=sds((P, N), b), red_deadline=sds((P, N), i32),
+        fwd_pending=sds((P, N), b), fwd_deadline=sds((P, N), i32),
+        cms=sds((4, 2048), f32), last_touch=sds((P, N), i32))
+
+
+def input_specs(model, shape_name: str) -> dict:
+    C, CE = FEAT_CAP, EDGE_TICK_CAP
+    i32, b, f32 = jnp.int32, jnp.bool_, jnp.float32
+    return {
+        "topo": _topo_specs(),
+        "state0": _layer_specs(D_IN),
+        "state1": _layer_specs(D_HID),
+        "inbox": FeatBatch(part=sds((C,), i32), slot=sds((C,), i32),
+                           feat=sds((C, D_IN), f32), valid=sds((C,), b)),
+        "eb": EdgeBatch(part=sds((CE,), i32), edge_slot=sds((CE,), i32),
+                        src_slot=sds((CE,), i32), dst_slot=sds((CE,), i32),
+                        dst_master_part=sds((CE,), i32),
+                        dst_master_slot=sds((CE,), i32), valid=sds((CE,), b)),
+        "rb": ReplBatch(part=sds((CE,), i32), repl_slot=sds((CE,), i32),
+                        master_slot=sds((CE,), i32), rep_part=sds((CE,), i32),
+                        rep_slot=sds((CE,), i32), valid=sds((CE,), b)),
+        "now": sds((), i32),
+    }
+
+
+def step(model, shape_name: str):
+    wconf = win.WindowConfig(kind=win.TUMBLING, interval=4)
+
+    def stream_step(params, topo, state0, state1, inbox, eb, rb, now):
+        s0, out0, st0 = layer_tick(model.layers[0], params["l0"], topo,
+                                   state0, inbox, eb, rb, now, wconf,
+                                   FEAT_CAP)
+        s1, out1, st1 = layer_tick(model.layers[1], params["l1"], topo,
+                                   state1, out0, eb, rb, now, wconf,
+                                   FEAT_CAP)
+        return s0, s1, out1
+
+    return stream_step
+
+
+SPEC = ArchSpec(
+    name="d3gnn-sage", family="d3gnn",
+    build=build, build_reduced=build_reduced,
+    shapes=SHAPES,
+    input_specs=input_specs,
+    step=step,
+    notes="the paper's streaming engine itself, lowered on the mesh.")

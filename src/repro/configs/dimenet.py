@@ -1,0 +1,40 @@
+"""dimenet [gnn]
+n_blocks=6 d_hidden=128 n_bilinear=8 n_spherical=7 n_radial=6.
+[arXiv:2003.03123; unverified]
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec
+from repro.configs.gnn_common import (GNN_SHAPES, gnn_input_specs,
+                                      make_gnn_train_step)
+from repro.graph.dimenet import DimeNet
+
+# triplet cap = 4 x n_edges (static-shape bound; graph/triplets.py masks)
+T_FACTOR = 4
+
+
+def build(shape_name: str = "molecule"):
+    d = GNN_SHAPES[shape_name].dims
+    return DimeNet(d_in=d["d_feat"], d_hidden=128, n_blocks=6, n_bilinear=8,
+                   n_spherical=7, n_radial=6, n_classes=d["n_classes"])
+
+
+def build_reduced(shape_name: str = "molecule"):
+    d = GNN_SHAPES[shape_name].dims
+    return DimeNet(d_in=16, d_hidden=16, n_blocks=2, n_bilinear=4,
+                   n_spherical=4, n_radial=4, n_classes=d["n_classes"])
+
+
+SPEC = ArchSpec(
+    name="dimenet", family="gnn",
+    build=build, build_reduced=build_reduced,
+    shapes=GNN_SHAPES,
+    input_specs=lambda model, s: gnn_input_specs(GNN_SHAPES[s], needs_pos=True,
+                                                 needs_triplets=True,
+                                                 t_factor=T_FACTOR),
+    step=lambda model, s: make_gnn_train_step(model, GNN_SHAPES[s],
+                                              needs_pos=True,
+                                              needs_triplets=True),
+    batch_style="dict",
+    notes="triplet-gather regime; T_max = 4*E (DESIGN §2: angular basis is "
+          "bessel x cos-series — scipy-free, same flops).")

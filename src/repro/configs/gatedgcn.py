@@ -1,0 +1,64 @@
+"""gatedgcn [gnn]
+n_layers=16 d_hidden=70 aggregator=gated. [arXiv:2003.00982; paper]
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec
+from repro.configs.gnn_common import (GNN_SHAPES, gnn_input_specs,
+                                      make_gnn_train_step)
+from repro.graph.gatedgcn import GatedGCN
+
+
+def build(shape_name: str = "full_graph_sm"):
+    d = GNN_SHAPES[shape_name].dims
+    n_out = d["n_classes"] if d["n_classes"] else 1
+    return GatedGCN(d_in=d["d_feat"], d_hidden=70, n_layers=16,
+                    n_classes=n_out)
+
+
+def build_reduced(shape_name: str = "full_graph_sm"):
+    d = GNN_SHAPES[shape_name].dims
+    n_out = d["n_classes"] if d["n_classes"] else 1
+    return GatedGCN(d_in=16, d_hidden=16, n_layers=3, n_classes=n_out)
+
+
+def _step(model, s):
+    shape = GNN_SHAPES[s]
+    if shape.dims["n_classes"]:
+        return make_gnn_train_step(model, shape, needs_pos=False,
+                                   needs_triplets=False)
+    import jax
+    import jax.numpy as jnp
+    from repro.graph.graphs import Graph
+    from repro.optim import adam, apply_updates, clip_by_global_norm
+    opt = adam()
+
+    def loss_fn(params, batch):
+        g = Graph(senders=batch["senders"], receivers=batch["receivers"],
+                  x=batch["x"], edge_mask=batch["edge_mask"],
+                  node_mask=batch["node_mask"],
+                  graph_ids=batch["graph_ids"], n_graphs=shape.dims["n_graphs"])
+        e_node = model(params, g)[..., 0]
+        e_node = jnp.where(g.node_mask, e_node, 0.0)
+        e = jax.ops.segment_sum(e_node, g.graph_ids, g.n_graphs)
+        return jnp.mean(jnp.square(e - batch["targets"]))
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        upd, opt_state = opt.update(opt_state, grads, params, 1e-3)
+        return apply_updates(params, upd), opt_state, loss
+
+    return train_step
+
+
+SPEC = ArchSpec(
+    name="gatedgcn", family="gnn",
+    build=build, build_reduced=build_reduced,
+    shapes=GNN_SHAPES,
+    input_specs=lambda model, s: gnn_input_specs(GNN_SHAPES[s], needs_pos=False,
+                                                 needs_triplets=False),
+    step=_step,
+    batch_style="dict",
+    notes="edge-featured MPNN with gated aggregation; LayerNorm replaces "
+          "BatchNorm for streaming compatibility (DESIGN §2).")

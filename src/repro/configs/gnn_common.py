@@ -1,0 +1,120 @@
+"""Shared GNN shape definitions + step builders for the four assigned
+GNN architectures.
+
+Shapes (assigned):
+  full_graph_sm : n_nodes=2,708 n_edges=10,556 d_feat=1,433 (cora-scale,
+                  full-batch node classification, 7 classes)
+  minibatch_lg  : global graph n_nodes=232,965 n_edges=114,615,892
+                  (reddit-scale); the training step consumes a SAMPLED
+                  subgraph: batch_nodes=1,024, fanout 15-10 ->
+                  node cap 1,024*(1+15+150), edge cap 1,024*(15+150),
+                  d_feat=602, 41 classes. graph/sampler.py produces these.
+  ogb_products  : n_nodes=2,449,029 n_edges=61,859,140 d_feat=100
+                  (full-batch-large), 47 classes
+  molecule      : 128 graphs x (30 nodes, 64 edges), 3D positions, energy
+                  regression
+
+NequIP/DimeNet need positions: graph shapes without natural coordinates get
+a synthesized `pos` input (assignment: geometric models still run every
+shape). DimeNet additionally consumes triplet indices capped at
+T_max = 4 * n_edges (host-built by graph/triplets.py; DESIGN §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeSpec, sds
+from repro.graph.graphs import Graph
+from repro.graph.sampler import sample_capacities
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec("full_graph_sm", "train",
+                               {"n_nodes": 2708, "n_edges": 10556,
+                                "d_feat": 1433, "n_classes": 7,
+                                "n_graphs": 1}),
+    "minibatch_lg": ShapeSpec("minibatch_lg", "train",
+                              {"n_nodes": sample_capacities(1024, (15, 10))[0],
+                               "n_edges": sample_capacities(1024, (15, 10))[1],
+                               "d_feat": 602, "n_classes": 41,
+                               "n_graphs": 1,
+                               "global_nodes": 232965,
+                               "global_edges": 114615892}),
+    "ogb_products": ShapeSpec("ogb_products", "train",
+                              {"n_nodes": 2449029, "n_edges": 61859140,
+                               "d_feat": 100, "n_classes": 47,
+                               "n_graphs": 1}),
+    "molecule": ShapeSpec("molecule", "train",
+                          {"n_nodes": 128 * 30, "n_edges": 128 * 64,
+                           "d_feat": 16, "n_classes": 0,
+                           "n_graphs": 128}),
+}
+
+
+def pad512(n: int) -> int:
+    """Static capacities are padded to multiples of 512 so arrays shard
+    evenly on both production meshes (256 and 512 chips); the edge/node
+    masks cover the padding rows (the engine is mask-based throughout)."""
+    return -(-n // 512) * 512
+
+
+def gnn_input_specs(shape: ShapeSpec, needs_pos: bool, needs_triplets: bool,
+                    t_factor: int = 4) -> dict:
+    d = shape.dims
+    N, E = pad512(d["n_nodes"]), pad512(d["n_edges"])
+    specs = {
+        "senders": sds((E,), jnp.int32),
+        "receivers": sds((E,), jnp.int32),
+        "x": sds((N, d["d_feat"]), jnp.float32),
+        "edge_mask": sds((E,), jnp.bool_),
+        "node_mask": sds((N,), jnp.bool_),
+    }
+    if needs_pos:
+        specs["pos"] = sds((N, 3), jnp.float32)
+    if d["n_classes"]:
+        specs["labels"] = sds((N,), jnp.int32)
+        specs["label_mask"] = sds((N,), jnp.bool_)
+    else:
+        specs["targets"] = sds((d["n_graphs"],), jnp.float32)
+        specs["graph_ids"] = sds((N,), jnp.int32)
+    if needs_triplets:
+        T = pad512(t_factor * E)
+        specs["t_kj"] = sds((T,), jnp.int32)
+        specs["t_ji"] = sds((T,), jnp.int32)
+        specs["t_mask"] = sds((T,), jnp.bool_)
+    return specs
+
+
+def make_gnn_train_step(model, shape: ShapeSpec, needs_pos: bool,
+                        needs_triplets: bool, lr: float = 1e-3):
+    """Generic full/sampled-batch GNN training step (adam + clip)."""
+    from repro.optim import adam, apply_updates, clip_by_global_norm
+    opt = adam()
+    n_graphs = shape.dims["n_graphs"]
+    classes = shape.dims["n_classes"]
+
+    def loss_fn(params, batch):
+        g = Graph(senders=batch["senders"], receivers=batch["receivers"],
+                  x=batch["x"], edge_mask=batch["edge_mask"],
+                  node_mask=batch["node_mask"],
+                  pos=batch.get("pos"), graph_ids=batch.get("graph_ids"),
+                  n_graphs=n_graphs)
+        extra = ((batch["t_kj"], batch["t_ji"], batch["t_mask"])
+                 if needs_triplets else ())
+        out = model(params, g, *extra)
+        if classes:
+            logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+            gold = jnp.take_along_axis(logp, batch["labels"][:, None],
+                                       axis=-1)[:, 0]
+            m = batch["label_mask"] & batch["node_mask"]
+            return jnp.sum(jnp.where(m, -gold, 0.0)) / jnp.maximum(
+                jnp.sum(m), 1)
+        return jnp.mean(jnp.square(out.astype(jnp.float32) - batch["targets"]))
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        upd, opt_state = opt.update(opt_state, grads, params, lr)
+        return apply_updates(params, upd), opt_state, loss
+
+    return train_step

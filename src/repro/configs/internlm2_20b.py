@@ -1,0 +1,30 @@
+"""internlm2-20b [dense]
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92544.
+[arXiv:2403.17297; hf]
+"""
+from __future__ import annotations
+
+from repro.configs.base import (ArchSpec, LM_SHAPES, lm_donate,
+                                lm_input_specs, lm_step, lm_tune_for_mesh)
+from repro.nn.transformer import TransformerConfig, TransformerLM
+
+CONFIG = TransformerConfig(
+    name="internlm2-20b",
+    n_layers=48, d_model=6144, n_heads=48, n_kv=8, head_dim=128,
+    d_ff=16384, vocab=92544, rope_theta=1000000.0)
+
+REDUCED = TransformerConfig(
+    name="internlm2-reduced",
+    n_layers=4, d_model=64, n_heads=8, n_kv=2, head_dim=8, d_ff=160,
+    vocab=512, dtype="float32", loss_chunks=2)
+
+SPEC = ArchSpec(
+    name="internlm2-20b", family="lm",
+    build=lambda shape_name=None: TransformerLM(CONFIG),
+    build_reduced=lambda shape_name=None: TransformerLM(REDUCED),
+    shapes=LM_SHAPES,
+    input_specs=lm_input_specs,
+    step=lm_step,
+    tune_for_mesh=lm_tune_for_mesh,
+    donate_inputs=lm_donate,
+    notes="dense GQA kv=8.")

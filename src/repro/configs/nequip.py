@@ -1,0 +1,38 @@
+"""nequip [gnn]
+n_layers=5 d_hidden=32 l_max=2 n_rbf=8 cutoff=5 equivariance=E(3)
+tensor-product. [arXiv:2101.03164; paper]
+"""
+from __future__ import annotations
+
+from functools import partial
+
+from repro.configs.base import ArchSpec
+from repro.configs.gnn_common import (GNN_SHAPES, gnn_input_specs,
+                                      make_gnn_train_step)
+from repro.graph.nequip import NequIP
+
+
+def build(shape_name: str = "molecule"):
+    d = GNN_SHAPES[shape_name].dims
+    return NequIP(d_in=d["d_feat"], mult=32, l_max=2, n_layers=5, n_rbf=8,
+                  cutoff=5.0, n_classes=d["n_classes"])
+
+
+def build_reduced(shape_name: str = "molecule"):
+    d = GNN_SHAPES[shape_name].dims
+    return NequIP(d_in=16, mult=4, l_max=2, n_layers=2, n_rbf=4,
+                  cutoff=5.0, n_classes=d["n_classes"])
+
+
+SPEC = ArchSpec(
+    name="nequip", family="gnn",
+    build=build, build_reduced=build_reduced,
+    shapes=GNN_SHAPES,
+    input_specs=lambda model, s: gnn_input_specs(GNN_SHAPES[s], needs_pos=True,
+                                                 needs_triplets=False),
+    step=lambda model, s: make_gnn_train_step(model, GNN_SHAPES[s],
+                                              needs_pos=True,
+                                              needs_triplets=False),
+    batch_style="dict",
+    notes="irrep tensor-product regime; positions synthesized for the "
+          "non-molecular shapes (DESIGN §4).")

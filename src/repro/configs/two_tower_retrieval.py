@@ -1,0 +1,92 @@
+"""two-tower-retrieval [recsys]
+embed_dim=256 tower_mlp=1024-512-256 interaction=dot — sampled-softmax
+retrieval. [RecSys'19 (YouTube); unverified]
+
+Embedding tables: user 10^8 rows, item 10^7 rows x dim 256 — the "huge
+sparse table" regime (taxonomy §B.6). Tables are row-sharded over the whole
+mesh; lookups are EmbeddingBag = take + segment-sum (JAX has no native op).
+
+Shapes:
+  train_batch    batch=65,536  in-batch sampled softmax (+logQ correction)
+  serve_p99      batch=512     online user-tower inference
+  serve_bulk     batch=262,144 offline scoring (paired dot)
+  retrieval_cand batch=1, n_candidates=1,000,000 — one batched matmul
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, ShapeSpec, sds
+from repro.recsys.two_tower import TwoTower, TwoTowerConfig
+
+# vocabs padded to multiples of 512 so the tables row-shard evenly on both
+# production meshes (10^8 / 10^7 rows semantically)
+CONFIG = TwoTowerConfig(embed_dim=256, tower_mlp=(1024, 512, 256),
+                        user_vocab=100_000_256, item_vocab=10_000_384,
+                        user_fields=4, item_fields=2, max_ids_per_field=8)
+
+REDUCED = TwoTowerConfig(embed_dim=32, tower_mlp=(64, 32),
+                         user_vocab=1000, item_vocab=1000,
+                         user_fields=2, item_fields=2, max_ids_per_field=4)
+
+SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", {"batch": 65536}),
+    "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "serve",
+                                {"batch": 1, "n_candidates": 1_000_000}),
+}
+
+
+def input_specs(model, shape_name: str) -> dict:
+    c = model.cfg
+    d = SHAPES[shape_name].dims
+    B = d["batch"]
+    u = (B, c.user_fields, c.max_ids_per_field)
+    i = (B, c.item_fields, c.max_ids_per_field)
+    if shape_name == "train_batch":
+        return {"user_ids": sds(u, jnp.int32), "item_ids": sds(i, jnp.int32),
+                "item_logq": sds((B,), jnp.float32)}
+    if shape_name == "serve_p99":
+        return {"user_ids": sds(u, jnp.int32)}
+    if shape_name == "serve_bulk":
+        return {"user_ids": sds(u, jnp.int32), "item_ids": sds(i, jnp.int32)}
+    nc = -(-d["n_candidates"] // 512) * 512   # pad for even mesh sharding
+    return {"user_ids": sds(u, jnp.int32),
+            "cand_ids": sds((nc, c.item_fields, c.max_ids_per_field),
+                            jnp.int32)}
+
+
+def step(model, shape_name: str):
+    if shape_name == "train_batch":
+        from repro.optim import adam, apply_updates, clip_by_global_norm
+        opt = adam()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(
+                params, batch["user_ids"], batch["item_ids"],
+                batch["item_logq"])
+            grads, _ = clip_by_global_norm(grads, 1.0)
+            upd, opt_state = opt.update(opt_state, grads, params, 1e-3)
+            return apply_updates(params, upd), opt_state, loss
+
+        return train_step
+    if shape_name == "serve_p99":
+        return lambda params, batch: model.user_tower(params, batch["user_ids"])
+    if shape_name == "serve_bulk":
+        return lambda params, batch: model.score(
+            params, batch["user_ids"], batch["item_ids"])
+    return lambda params, batch: model.retrieval_scores(
+        params, batch["user_ids"], batch["cand_ids"])
+
+
+SPEC = ArchSpec(
+    name="two-tower-retrieval", family="recsys",
+    build=lambda shape_name=None: TwoTower(CONFIG),
+    build_reduced=lambda shape_name=None: TwoTower(REDUCED),
+    shapes=SHAPES,
+    input_specs=input_specs,
+    step=step,
+    batch_style="dict",
+    notes="embedding lookup is the hot path; tables row-sharded mesh-wide.")

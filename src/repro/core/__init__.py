@@ -1,0 +1,23 @@
+"""D3-GNN core: the paper's contribution as a composable JAX system.
+
+The Flink event-at-a-time pipeline is adapted to a TPU-native micro-tick
+dataflow (DESIGN §2): the host-side Partitioner assigns logical parts,
+vertex slots and replica records for each streaming event; the device-side
+layer tick is a pure jitted function over statically-shaped, mask-padded
+state. Cross-part message routing is a segment-scatter on one device and an
+all_to_all under shard_map on the production mesh — same math either way.
+
+  events.py       unified event format + padded device batches
+  partitioner.py  streaming vertex-cut (HDRF / CLDA / Random) + master table
+  state.py        per-part topology & per-layer feature/aggregator state
+  aggregators.py  incremental synopsis aggregators (reduce/replace/remove)
+  windowing.py    tumbling / session / adaptive-session + CountMinSketch
+  tick.py         the per-layer streaming / windowed tick (two routing rounds)
+  pipeline.py     multi-layer driver: ingest -> partition -> L ticks -> sink
+  oracle.py       static full-graph reference for exactness tests
+  training.py     stale-free training coordinator (halt, flush, layered
+                  backprop, Alg.3 model averaging, phased rebuild)
+  termination.py  termination detection over pending events and timers
+  explosion.py    explosion factor lambda + Alg.5 logical->physical mapping
+"""
+from repro.core.pipeline import D3Pipeline, PipelineConfig  # noqa: F401

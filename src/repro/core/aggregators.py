@@ -1,0 +1,43 @@
+"""Incremental streaming aggregators (paper §4.2.1).
+
+An AGGREGATOR is a synopsis cached at the master vertex, updated through
+three remote-method-invocation interfaces:
+
+    reduce(msg, count=1)          add a new message
+    replace(msg_new, msg_old)     update an existing message
+    remove(msg, count=1)          delete a message
+
+It must be *mergeable, commutative and invertible*. The engine represents
+all three RMIs as a single additive delta record (delta_vec, delta_cnt):
+
+    reduce   -> (+msg,            +1)
+    replace  -> (msg_new - msg_old, 0)
+    remove   -> (-msg,            -1)
+
+so routing is one segment-sum per tick regardless of RMI mix, and
+concurrent cascades commute (the paper's eventual consistency becomes
+tick-consistency — DESIGN §2).
+
+MEAN / SUM are exactly invertible: state (sigma, n), mean read = sigma/n.
+PNA-style STD rides the same machinery with state (sigma, sigma_sq, n).
+MAX/MIN are not invertible under remove; the streaming engine supports them
+for grow-only streams (reduce/replace-increasing) and re-scans on remove —
+the same restriction the paper's synopsis framing implies.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mean_read(agg_sum: jnp.ndarray, agg_cnt: jnp.ndarray) -> jnp.ndarray:
+    """Read the MEAN synopsis; empty neighborhoods read as zeros."""
+    cnt = jnp.maximum(agg_cnt, 1.0)[..., None]
+    return agg_sum / cnt
+
+
+def sum_read(agg_sum: jnp.ndarray, agg_cnt: jnp.ndarray) -> jnp.ndarray:
+    del agg_cnt
+    return agg_sum
+
+
+READERS = {"mean": mean_read, "sum": sum_read}

@@ -1,0 +1,171 @@
+"""Unified streaming event format (paper §4.1) + padded device batches.
+
+Host events are light dataclasses; the partitioner turns a tick's worth of
+them into fixed-capacity, mask-padded struct-of-arrays batches that the
+jitted layer tick consumes. Every batch row is pre-addressed: the host
+partitioner resolves global vertex ids to (part, slot) coordinates — the
+JVM-side master tables of the paper live in the Partitioner here, so the
+device program never needs a hash lookup.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EDGE_ADD = 1
+FEAT_UPDATE = 3
+
+
+@dataclass(frozen=True)
+class EdgeBatch:
+    """New-edge records for one tick (device-ready).
+
+    Each record scatters one directed edge (u -> v) into the part that the
+    vertex-cut partitioner chose. Both endpoints have (replica) slots there.
+    """
+    part: jnp.ndarray            # [C] int32 destination part of the record
+    edge_slot: jnp.ndarray       # [C] int32 slot in the part's edge table
+    src_slot: jnp.ndarray        # [C] int32 local slot of u in `part`
+    dst_slot: jnp.ndarray        # [C] int32 local slot of v in `part`
+    dst_master_part: jnp.ndarray # [C] int32 master coordinates of v
+    dst_master_slot: jnp.ndarray # [C] int32
+    valid: jnp.ndarray           # [C] bool
+
+    @property
+    def capacity(self):
+        return self.part.shape[0]
+
+
+@dataclass(frozen=True)
+class ReplBatch:
+    """New replica records: master (part, slot) -> replica (part, slot).
+
+    Scattered into the master part's replication adjacency, used for the
+    selectiveBroadcast of features to replicas (paper §5.1).
+    """
+    part: jnp.ndarray            # [C] int32 master part (where record lives)
+    repl_slot: jnp.ndarray       # [C] int32 slot in the replication table
+    master_slot: jnp.ndarray     # [C] int32 master's local slot
+    rep_part: jnp.ndarray        # [C] int32 replica coordinates
+    rep_slot: jnp.ndarray        # [C] int32
+    valid: jnp.ndarray           # [C] bool
+
+
+@dataclass(frozen=True)
+class VertexBatch:
+    """New vertex (replica) records: existence + mastership flags."""
+    part: jnp.ndarray            # [C] int32
+    slot: jnp.ndarray            # [C] int32
+    is_master: jnp.ndarray       # [C] bool
+    valid: jnp.ndarray           # [C] bool
+
+
+@dataclass(frozen=True)
+class FeatBatch:
+    """Feature updates addressed to master (part, slot)."""
+    part: jnp.ndarray            # [C] int32
+    slot: jnp.ndarray            # [C] int32
+    feat: jnp.ndarray            # [C, d] float
+    valid: jnp.ndarray           # [C] bool
+
+    @property
+    def capacity(self):
+        return self.part.shape[0]
+
+
+for _cls, _fields in ((EdgeBatch, ["part", "edge_slot", "src_slot", "dst_slot",
+                                   "dst_master_part", "dst_master_slot", "valid"]),
+                      (ReplBatch, ["part", "repl_slot", "master_slot",
+                                   "rep_part", "rep_slot", "valid"]),
+                      (VertexBatch, ["part", "slot", "is_master", "valid"]),
+                      (FeatBatch, ["part", "slot", "feat", "valid"])):
+    jax.tree_util.register_dataclass(_cls, data_fields=_fields, meta_fields=[])
+
+
+def empty_edge_batch(cap: int) -> EdgeBatch:
+    z = jnp.zeros((cap,), jnp.int32)
+    return EdgeBatch(part=z, edge_slot=z, src_slot=z, dst_slot=z,
+                     dst_master_part=z, dst_master_slot=z,
+                     valid=jnp.zeros((cap,), bool))
+
+
+def empty_repl_batch(cap: int) -> ReplBatch:
+    z = jnp.zeros((cap,), jnp.int32)
+    return ReplBatch(part=z, repl_slot=z, master_slot=z, rep_part=z,
+                     rep_slot=z, valid=jnp.zeros((cap,), bool))
+
+
+def empty_feat_batch(cap: int, d: int) -> FeatBatch:
+    return FeatBatch(part=jnp.zeros((cap,), jnp.int32),
+                     slot=jnp.zeros((cap,), jnp.int32),
+                     feat=jnp.zeros((cap, d), jnp.float32),
+                     valid=jnp.zeros((cap,), bool))
+
+
+def vertex_batch_from_numpy(rows: dict, cap: int) -> VertexBatch:
+    n = len(rows["part"])
+    assert n <= cap, f"vertex batch overflow: {n} > {cap}"
+    p = np.zeros((cap,), np.int32)
+    s = np.zeros((cap,), np.int32)
+    m = np.zeros((cap,), bool)
+    v = np.zeros((cap,), bool)
+    p[:n] = rows["part"]
+    s[:n] = rows["slot"]
+    m[:n] = rows["is_master"]
+    v[:n] = True
+    return VertexBatch(part=jnp.asarray(p), slot=jnp.asarray(s),
+                       is_master=jnp.asarray(m), valid=jnp.asarray(v))
+
+
+def edge_batch_from_numpy(rows: dict, cap: int) -> EdgeBatch:
+    n = len(rows["part"])
+    assert n <= cap, f"edge batch overflow: {n} > {cap}"
+
+    def pad(a, dtype=np.int32):
+        out = np.zeros((cap,), dtype)
+        out[:n] = a
+        return jnp.asarray(out)
+
+    valid = np.zeros((cap,), bool)
+    valid[:n] = True
+    return EdgeBatch(part=pad(rows["part"]), edge_slot=pad(rows["edge_slot"]),
+                     src_slot=pad(rows["src_slot"]), dst_slot=pad(rows["dst_slot"]),
+                     dst_master_part=pad(rows["dst_master_part"]),
+                     dst_master_slot=pad(rows["dst_master_slot"]),
+                     valid=jnp.asarray(valid))
+
+
+def repl_batch_from_numpy(rows: dict, cap: int) -> ReplBatch:
+    n = len(rows["part"])
+    assert n <= cap, f"repl batch overflow: {n} > {cap}"
+
+    def pad(a):
+        out = np.zeros((cap,), np.int32)
+        out[:n] = a
+        return jnp.asarray(out)
+
+    valid = np.zeros((cap,), bool)
+    valid[:n] = True
+    return ReplBatch(part=pad(rows["part"]), repl_slot=pad(rows["repl_slot"]),
+                     master_slot=pad(rows["master_slot"]),
+                     rep_part=pad(rows["rep_part"]), rep_slot=pad(rows["rep_slot"]),
+                     valid=jnp.asarray(valid))
+
+
+def feat_batch_from_numpy(parts, slots, feats, cap: int, d: int) -> FeatBatch:
+    n = len(parts)
+    assert n <= cap, f"feat batch overflow: {n} > {cap}"
+    p = np.zeros((cap,), np.int32)
+    s = np.zeros((cap,), np.int32)
+    f = np.zeros((cap, d), np.float32)
+    v = np.zeros((cap,), bool)
+    p[:n] = parts
+    s[:n] = slots
+    if n:
+        f[:n] = feats
+    v[:n] = True
+    return FeatBatch(part=jnp.asarray(p), slot=jnp.asarray(s),
+                     feat=jnp.asarray(f), valid=jnp.asarray(v))

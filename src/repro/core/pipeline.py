@@ -1,0 +1,237 @@
+"""The D3-GNN dataflow pipeline driver (paper Fig. 1).
+
+Dataset -> Partitioner -> Splitter -> GraphStorage_1 .. GraphStorage_L -> sink
+
+The host side plays Dataset/Partitioner/Splitter: it cuts the stream into
+micro-ticks, assigns parts/slots (partitioner.py) and builds padded device
+batches. The device side runs one `layer_tick` per GraphStorage operator
+per tick; layer l's outbox is layer l+1's inbox (the unrolled computation
+graph). The final outbox materializes into a device-side embedding sink —
+the paper's "materialized embedding table that can be further queried".
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+from repro.core import state as st
+from repro.core import windowing as win
+from repro.core.explosion import layer_parallelisms, physical_busy
+from repro.core.partitioner import StreamingPartitioner
+from repro.core.tick import layer_tick, has_work
+from repro.core.termination import TerminationCoordinator
+
+
+@dataclass
+class PipelineConfig:
+    n_parts: int = 8                  # logical parts (= max_parallelism)
+    node_cap: int = 512               # per-part vertex slots
+    edge_cap: int = 2048              # per-part edge slots
+    repl_cap: int = 1024              # per-part replication records
+    feat_cap: int = 1024              # inbox/outbox rows per tick
+    edge_tick_cap: int = 1024         # new-edge records per tick
+    window: win.WindowConfig = field(default_factory=win.WindowConfig)
+    partitioner: str = "hdrf"
+    base_parallelism: int = 2         # p  (physical, for stats/sharding)
+    explosion: float = 1.0            # lambda
+    max_nodes: int = 100_000          # global id space for the host tables
+    seed: int = 0
+
+
+@dataclass
+class StreamMetrics:
+    ticks: int = 0
+    emitted_total: int = 0
+    reduce_msgs: int = 0
+    broadcast_msgs: int = 0
+    cross_part_msgs: int = 0
+    dropped: int = 0
+    wall_seconds: float = 0.0
+    busy_logical: Optional[np.ndarray] = None
+
+    @property
+    def throughput(self) -> float:
+        return self.emitted_total / self.wall_seconds if self.wall_seconds else 0.0
+
+
+class D3Pipeline:
+    """L chained GraphStorage operators + the host driver."""
+
+    def __init__(self, model, params, cfg: PipelineConfig):
+        """model: graph/sage.GraphSAGE (or compatible stack of layers with
+        .message/.update); params: its param pytree."""
+        self.model = model
+        self.cfg = cfg
+        self.layers = list(model.layers)
+        self.params = params
+        self.part = StreamingPartitioner(
+            cfg.n_parts, cfg.max_nodes, method=cfg.partitioner, seed=cfg.seed)
+        self.topo = st.init_topo(cfg.n_parts, cfg.edge_cap, cfg.repl_cap,
+                                 cfg.node_cap)
+        dims = [l.in_dim for l in self.layers] + [self.layers[-1].out_dim]
+        self.states = [st.init_layer(cfg.n_parts, cfg.node_cap, dims[i],
+                                     dims[i])
+                       for i in range(len(self.layers))]
+        self.d_out = dims[-1]
+        self.sink = jnp.zeros((cfg.n_parts, cfg.node_cap, self.d_out))
+        self.sink_seen = jnp.zeros((cfg.n_parts, cfg.node_cap), bool)
+        self.now = 0
+        self.metrics = StreamMetrics(
+            busy_logical=np.zeros(cfg.n_parts, np.int64))
+        self._empty_feat = ev.empty_feat_batch(cfg.feat_cap, dims[0])
+        self._empty_edges = ev.edge_batch_from_numpy(
+            {k: np.zeros(0, np.int64) for k in
+             ("part", "edge_slot", "src_slot", "dst_slot", "dst_master_part",
+              "dst_master_slot")}, cfg.edge_tick_cap)
+
+    # ------------------------------------------------------------ host side
+    def _build_batches(self, edges: Optional[np.ndarray],
+                       feats: Optional[list]):
+        cfg = self.cfg
+        if edges is not None and len(edges):
+            e_rows, r1, v1 = self.part.ingest_edges(edges)
+        else:
+            e_rows, r1, v1 = None, None, None
+        # feature events may create vertices (cold features)
+        f_parts, f_slots, f_vecs = [], [], []
+        if feats:
+            coalesced = {}
+            for vid, vec in feats:        # host-side coalescing (last wins)
+                coalesced[int(vid)] = vec
+            for vid, vec in coalesced.items():
+                p, s = self.part.locate_master(vid)
+                f_parts.append(p)
+                f_slots.append(s)
+                f_vecs.append(vec)
+        r2, v2 = self.part.drain_allocations()
+        if r1 is not None:
+            r_rows = {k: np.concatenate([r1[k], r2[k]]) for k in r2}
+            v_rows = {k: np.concatenate([v1[k], v2[k]]) for k in v2}
+        else:
+            r_rows, v_rows = r2, v2
+
+        eb = (ev.edge_batch_from_numpy(e_rows, cfg.edge_tick_cap)
+              if e_rows is not None else self._empty_edges)
+        rb = ev.repl_batch_from_numpy(r_rows, max(2 * cfg.edge_tick_cap, 1))
+        vb = ev.vertex_batch_from_numpy(v_rows, max(2 * cfg.edge_tick_cap +
+                                                    cfg.feat_cap, 1))
+        fb = ev.feat_batch_from_numpy(
+            np.asarray(f_parts), np.asarray(f_slots),
+            np.asarray(f_vecs, np.float32).reshape(len(f_parts), -1)
+            if f_parts else np.zeros((0, 1)),
+            cfg.feat_cap, self.states[0].feat.shape[-1])
+        return eb, rb, vb, fb
+
+    # ---------------------------------------------------------- device side
+    def tick(self, edges: Optional[np.ndarray] = None,
+             feats: Optional[list] = None, window=None):
+        """One micro-tick through the full pipeline."""
+        cfg = self.cfg
+        wconf = window or cfg.window
+        t0 = time.perf_counter()
+        eb, rb, vb, fb = self._build_batches(edges, feats)
+        self.topo = st.apply_vertex_batch(self.topo, vb)
+        self.topo = st.apply_repl_batch(self.topo, rb)
+        self.topo = st.apply_edge_batch(self.topo, eb)
+
+        inbox = fb
+        stats_all = []
+        now = jnp.asarray(self.now, jnp.int32)
+        for li, layer in enumerate(self.layers):
+            # topology reaches every layer; features only layer 0 (Splitter)
+            self.states[li], outbox, stats = layer_tick(
+                layer, self.params[f"l{li}"], self.topo, self.states[li],
+                inbox, eb, rb, now, wconf, cfg.feat_cap)
+            stats_all.append(stats)
+            inbox = outbox
+        # sink: final-layer emissions materialize the embedding table
+        self.sink, self.sink_seen = _sink_update(self.sink, self.sink_seen,
+                                                 inbox)
+        self.now += 1
+        self._accumulate(stats_all, time.perf_counter() - t0)
+        return stats_all
+
+    def _accumulate(self, stats_all, dt):
+        m = self.metrics
+        m.ticks += 1
+        m.wall_seconds += dt
+        for s in stats_all:
+            m.reduce_msgs += int(s.reduce_msgs)
+            m.broadcast_msgs += int(s.broadcast_msgs)
+            m.cross_part_msgs += int(s.cross_part_msgs)
+            m.dropped += int(s.dropped)
+            m.busy_logical += np.asarray(s.busy, np.int64)
+        m.emitted_total += int(stats_all[-1].emitted)
+
+    def run_stream(self, edges: np.ndarray, feats: dict,
+                   tick_edges: int = 256, feat_with_first_edge: bool = True):
+        """Stream an edge list (+ node features) through the pipeline.
+
+        feats: {vid: np.ndarray} — each vertex's feature event is injected
+        in the tick its first edge appears (feature stream aligned with the
+        topology stream, as in the paper's temporal edge-list datasets).
+        """
+        seen = set()
+        for lo in range(0, len(edges), tick_edges):
+            chunk = edges[lo: lo + tick_edges]
+            f_events = []
+            if feat_with_first_edge:
+                for u in chunk.reshape(-1):
+                    u = int(u)
+                    if u not in seen and u in feats:
+                        seen.add(u)
+                        f_events.append((u, feats[u]))
+            self.tick(chunk, f_events)
+        return self
+
+    def flush(self, max_ticks: int = 64, drain: bool = True) -> int:
+        """Run empty ticks until the TerminationCoordinator fires.
+
+        drain=True forces pending windows due immediately (streaming
+        eviction) — the training coordinator's flush semantics (§4.3.1).
+        drain=False waits for the scheduled timers (pure §5.3 behaviour)."""
+        term = TerminationCoordinator()
+        override = win.WindowConfig(kind=win.STREAMING) if drain else None
+        for i in range(max_ticks):
+            stats = self.tick(window=override)
+            if term.observe(self.states, stats):
+                return i + 1
+        raise RuntimeError("pipeline failed to terminate "
+                           f"within {max_ticks} flush ticks")
+
+    # ------------------------------------------------------------- queries
+    def embeddings(self) -> dict:
+        """Materialized final-layer embeddings {vid: vector} (masters)."""
+        sink = np.asarray(self.sink)
+        seen = np.asarray(self.sink_seen)
+        t = self.part.t
+        out = {}
+        for vid in range(t.max_nodes):
+            p, s = t.master[vid], t.master_slot[vid]
+            if p >= 0 and seen[p, s]:
+                out[vid] = sink[p, s]
+        return out
+
+    def physical_busy_per_layer(self):
+        """Per-layer physical busy vectors under the explosion factor."""
+        cfg = self.cfg
+        pars = layer_parallelisms(cfg.base_parallelism, cfg.explosion,
+                                  len(self.layers), cfg.n_parts)
+        return [physical_busy(self.metrics.busy_logical, p, cfg.n_parts)
+                for p in pars]
+
+
+@jax.jit
+def _sink_update(sink, seen, fb: ev.FeatBatch):
+    P, N, d = sink.shape
+    idx = jnp.where(fb.valid, fb.part * N + fb.slot, P * N)
+    sink = sink.reshape(P * N, d).at[idx].set(fb.feat, mode="drop")
+    seen = seen.reshape(P * N).at[idx].set(True, mode="drop")
+    return sink.reshape(P, N, d), seen.reshape(P, N)

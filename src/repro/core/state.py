@@ -1,0 +1,155 @@
+"""Device-side operator state (the paper's Graph Storage, §4.1/§5.2).
+
+All arrays are [P, cap, ...] — P logical parts stacked on the leading axis.
+On one device the tick processes all parts with flat indexing; on the
+production mesh the P axis is sharded over ("data",) (and "pod") and the
+routing segment-sums become all_to_all + local scatters (repro/dist).
+
+Topology is stored once and shared by all layer operators (the paper ships
+the same topology events to every GraphStorage; storing it once per job is
+an optimization with identical semantics — DESIGN §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class TopoState:
+    """Shared adjacency + replication tables."""
+    # out-edge records, stored in the part the edge was assigned to
+    e_src_slot: jnp.ndarray       # [P, E] int32 local slot of u
+    e_dst_slot: jnp.ndarray       # [P, E] int32 local slot of v (same part)
+    e_dst_mpart: jnp.ndarray      # [P, E] int32 master part of v
+    e_dst_mslot: jnp.ndarray      # [P, E] int32 master slot of v
+    e_valid: jnp.ndarray          # [P, E] bool
+    # replication records, stored in the master's part
+    r_master_slot: jnp.ndarray    # [P, R] int32
+    r_rep_part: jnp.ndarray       # [P, R] int32
+    r_rep_slot: jnp.ndarray       # [P, R] int32
+    r_valid: jnp.ndarray          # [P, R] bool
+    # vertex flags
+    v_exists: jnp.ndarray         # [P, N] bool
+    is_master: jnp.ndarray        # [P, N] bool
+
+    @property
+    def n_parts(self):
+        return self.e_src_slot.shape[0]
+
+    @property
+    def edge_cap(self):
+        return self.e_src_slot.shape[1]
+
+
+@dataclass(frozen=True)
+class LayerState:
+    """Per-GNN-layer feature/aggregator state (one per GraphStorage op)."""
+    feat: jnp.ndarray             # [P, N, d_in] layer-input features (replicas too)
+    has_feat: jnp.ndarray        # [P, N] bool
+    x_sent: jnp.ndarray           # [P, N, d_in] feature value last pushed into aggs
+    has_sent: jnp.ndarray         # [P, N] bool
+    agg: jnp.ndarray              # [P, N, d_agg] synopsis value (masters only)
+    agg_cnt: jnp.ndarray          # [P, N] float counts
+    # windowing state
+    red_pending: jnp.ndarray      # [P, N] bool   (inter-layer: delayed reduce)
+    red_deadline: jnp.ndarray     # [P, N] int32
+    fwd_pending: jnp.ndarray      # [P, N] bool   (intra-layer: delayed forward)
+    fwd_deadline: jnp.ndarray     # [P, N] int32
+    # adaptive-session state: CountMinSketch of per-vertex update frequency
+    cms: jnp.ndarray              # [depth, width] float32
+    last_touch: jnp.ndarray       # [P, N] int32
+
+    @property
+    def node_cap(self):
+        return self.feat.shape[2 - 1]  # [P, N, d] -> N
+
+
+for _cls, _df in (
+    (TopoState, ["e_src_slot", "e_dst_slot", "e_dst_mpart", "e_dst_mslot",
+                 "e_valid", "r_master_slot", "r_rep_part", "r_rep_slot",
+                 "r_valid", "v_exists", "is_master"]),
+    (LayerState, ["feat", "has_feat", "x_sent", "has_sent", "agg", "agg_cnt",
+                  "red_pending", "red_deadline", "fwd_pending", "fwd_deadline",
+                  "cms", "last_touch"]),
+):
+    jax.tree_util.register_dataclass(_cls, data_fields=_df, meta_fields=[])
+
+
+def init_topo(n_parts: int, edge_cap: int, repl_cap: int,
+              node_cap: int) -> TopoState:
+    zi = lambda *s: jnp.zeros(s, jnp.int32)
+    zb = lambda *s: jnp.zeros(s, bool)
+    return TopoState(
+        e_src_slot=zi(n_parts, edge_cap), e_dst_slot=zi(n_parts, edge_cap),
+        e_dst_mpart=zi(n_parts, edge_cap), e_dst_mslot=zi(n_parts, edge_cap),
+        e_valid=zb(n_parts, edge_cap),
+        r_master_slot=zi(n_parts, repl_cap), r_rep_part=zi(n_parts, repl_cap),
+        r_rep_slot=zi(n_parts, repl_cap), r_valid=zb(n_parts, repl_cap),
+        v_exists=zb(n_parts, node_cap), is_master=zb(n_parts, node_cap))
+
+
+def init_layer(n_parts: int, node_cap: int, d_in: int, d_agg: int,
+               cms_depth: int = 4, cms_width: int = 2048) -> LayerState:
+    zf = lambda *s: jnp.zeros(s, jnp.float32)
+    zi = lambda *s: jnp.zeros(s, jnp.int32)
+    zb = lambda *s: jnp.zeros(s, bool)
+    return LayerState(
+        feat=zf(n_parts, node_cap, d_in), has_feat=zb(n_parts, node_cap),
+        x_sent=zf(n_parts, node_cap, d_in), has_sent=zb(n_parts, node_cap),
+        agg=zf(n_parts, node_cap, d_agg), agg_cnt=zf(n_parts, node_cap),
+        red_pending=zb(n_parts, node_cap), red_deadline=zi(n_parts, node_cap),
+        fwd_pending=zb(n_parts, node_cap), fwd_deadline=zi(n_parts, node_cap),
+        cms=zf(cms_depth, cms_width), last_touch=zi(n_parts, node_cap))
+
+
+def apply_edge_batch(topo: TopoState, eb) -> TopoState:
+    """Scatter new edge records into the adjacency tables."""
+    P, E = topo.e_src_slot.shape
+    flat = lambda a: a.reshape(P * E)
+    idx = eb.part * E + eb.edge_slot
+    idx = jnp.where(eb.valid, idx, P * E)          # OOB drop for padding
+
+    def scat(dst, val):
+        return flat(dst).at[idx].set(val, mode="drop").reshape(P, E)
+
+    from dataclasses import replace as _replace
+    return _replace(
+        topo,
+        e_src_slot=scat(topo.e_src_slot, eb.src_slot),
+        e_dst_slot=scat(topo.e_dst_slot, eb.dst_slot),
+        e_dst_mpart=scat(topo.e_dst_mpart, eb.dst_master_part),
+        e_dst_mslot=scat(topo.e_dst_mslot, eb.dst_master_slot),
+        e_valid=scat(topo.e_valid, eb.valid))
+
+
+def apply_repl_batch(topo: TopoState, rb) -> TopoState:
+    P, R = topo.r_master_slot.shape
+    flat = lambda a: a.reshape(P * R)
+    idx = rb.part * R + rb.repl_slot
+    idx = jnp.where(rb.valid, idx, P * R)
+
+    def scat(dst, val):
+        return flat(dst).at[idx].set(val, mode="drop").reshape(P, R)
+
+    from dataclasses import replace as _replace
+    return _replace(
+        topo,
+        r_master_slot=scat(topo.r_master_slot, rb.master_slot),
+        r_rep_part=scat(topo.r_rep_part, rb.rep_part),
+        r_rep_slot=scat(topo.r_rep_slot, rb.rep_slot),
+        r_valid=scat(topo.r_valid, rb.valid))
+
+
+def apply_vertex_batch(topo: TopoState, vb) -> TopoState:
+    from dataclasses import replace as _replace
+    P, N = topo.v_exists.shape
+    idx = vb.part * N + vb.slot
+    idx = jnp.where(vb.valid, idx, P * N)
+    v_exists = topo.v_exists.reshape(P * N).at[idx].set(
+        True, mode="drop").reshape(P, N)
+    is_master = topo.is_master.reshape(P * N).at[idx].max(
+        vb.is_master, mode="drop").reshape(P, N)
+    return _replace(topo, v_exists=v_exists, is_master=is_master)

@@ -1,0 +1,33 @@
+"""Termination detection (paper §5.3).
+
+The TerminationCoordinator declares the pipeline quiescent when, for one
+full sweep, every layer operator reports (a) no events received since the
+last collection and (b) no scheduled timers (window deadlines still
+pending). Used to compute bounded-run "runtime" (paper Fig. 4c) and to
+flush the pipeline before training (§4.3.1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.tick import has_work
+
+
+class TerminationCoordinator:
+    def __init__(self, quiet_sweeps: int = 2):
+        self.quiet_sweeps = quiet_sweeps
+        self._quiet = 0
+
+    def observe(self, layer_states, tick_stats) -> bool:
+        """Feed one tick's observations; True once terminated."""
+        moved = any(int(s.emitted) + int(s.reduce_msgs) + int(s.broadcast_msgs)
+                    for s in tick_stats)
+        timers = any(bool(has_work(ls)) for ls in layer_states)
+        if moved or timers:
+            self._quiet = 0
+        else:
+            self._quiet += 1
+        return self._quiet >= self.quiet_sweeps
+
+    def reset(self):
+        self._quiet = 0

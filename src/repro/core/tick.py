@@ -1,0 +1,235 @@
+"""The per-layer micro-tick: streaming (Alg. 1) and windowed (Alg. 2)
+forward pass as one pure jitted function.
+
+One tick = two routing rounds (DESIGN §2):
+
+  Round A (replication): master-addressed feature updates land, then
+      selectiveBroadcast pushes them to replicas via the replication
+      adjacency. Cross-part — all_to_all on the mesh, scatter on 1 device.
+  Round B (reduce): per-vertex feature *deltas* are turned into aggregator
+      RMIs over out-edges and routed to destination masters. reduce /
+      replace / remove all collapse to additive (delta, dcnt) records
+      (core/aggregators.py), so a single segment-sum applies any mix.
+
+Windowing replaces "emit now" with deadline tables:
+  inter-layer window -> delays the reduce of a source vertex (red_*),
+  intra-layer window -> delays the forward/psi-emission of a master (fwd_*).
+
+Counts follow Algorithm 1 exactly:
+  addElement(e)   : contributes (x_sent[u], +1) iff u has already sent
+  addElement(u.f) : first send emits (x_u, +1) over ALL out-edges
+  updateElement   : emits (x_new - x_sent, 0) over all out-edges
+so an aggregator count equals the number of in-edges whose source feature
+has been seen — identical to the static oracle's in-degree once quiescent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import windowing as win
+from repro.core.aggregators import mean_read
+from repro.core.events import EdgeBatch, FeatBatch, ReplBatch
+from repro.core.state import LayerState, TopoState
+
+
+@dataclass(frozen=True)
+class TickStats:
+    broadcast_msgs: jnp.ndarray      # round-A replica messages
+    reduce_msgs: jnp.ndarray         # round-B aggregator RMIs routed
+    cross_part_msgs: jnp.ndarray     # messages leaving their part ("network")
+    emitted: jnp.ndarray             # forward emissions to the next layer
+    dropped: jnp.ndarray             # emissions deferred by outbox capacity
+    busy: jnp.ndarray                # [P] per-part processed-event proxy
+
+
+jax.tree_util.register_dataclass(
+    TickStats, data_fields=["broadcast_msgs", "reduce_msgs",
+                            "cross_part_msgs", "emitted", "dropped", "busy"],
+    meta_fields=[])
+
+
+def _flat(part, slot, N):
+    return part * N + slot
+
+
+@partial(jax.jit, static_argnames=("layer", "wconf", "outbox_cap"))
+def layer_tick(layer, params, topo: TopoState, ls: LayerState,
+               inbox: FeatBatch, new_edges: EdgeBatch, new_repl: ReplBatch,
+               now: jnp.ndarray, wconf: win.WindowConfig, outbox_cap: int):
+    """Advance one GNN layer by one tick.
+
+    `layer` supplies message/update (phi/psi): layer.message(params, x) and
+    layer.update(params, x_self, agg_read) — e.g. graph/sage.SAGELayer.
+    Returns (new LayerState, outbox FeatBatch, TickStats).
+    """
+    P, N, d_in = ls.feat.shape
+    busy = jnp.zeros((P,), jnp.int32)
+
+    # ---------------- Round A: apply inbox at masters, broadcast to replicas
+    in_idx = jnp.where(inbox.valid, _flat(inbox.part, inbox.slot, N), P * N)
+    feat_flat = ls.feat.reshape(P * N, d_in)
+    # coalesce duplicate targets within the tick: last-writer-wins is fine
+    # for idempotent feature values; use scatter (later rows overwrite).
+    feat_flat = feat_flat.at[in_idx].set(inbox.feat, mode="drop")
+    changed = jnp.zeros((P * N,), bool).at[in_idx].set(True, mode="drop")
+    has_feat = ls.has_feat.reshape(P * N).at[in_idx].set(True, mode="drop")
+    busy = busy.at[inbox.part].add(inbox.valid.astype(jnp.int32), mode="drop")
+
+    # replica-creation sync: a NEW replica immediately receives its master's
+    # current state (the paper replicates state on placement, §5.1) — mark
+    # the master "changed" so the normal broadcast below covers the new
+    # record; only the new record fires because older replicas already hold
+    # the value (idempotent re-set, coalesced by the same scatter).
+    nr_midx = _flat(new_repl.part, new_repl.master_slot, N)
+    nr_push = new_repl.valid & has_feat[nr_midx]
+    changed = changed.at[jnp.where(nr_push, nr_midx, P * N)].set(
+        True, mode="drop")
+
+    # broadcast: replication records whose master changed this tick
+    r_midx = _flat(jnp.arange(P)[:, None], topo.r_master_slot, N)   # [P,R]
+    r_live = topo.r_valid & changed[r_midx]
+    r_tgt = jnp.where(r_live, _flat(topo.r_rep_part, topo.r_rep_slot, N), P * N)
+    r_val = feat_flat[r_midx.reshape(-1)]
+    feat_flat = feat_flat.at[r_tgt.reshape(-1)].set(
+        jnp.where(r_live.reshape(-1)[:, None], r_val, 0.0), mode="drop")
+    # NOTE .set with masked rows: invalid rows point to OOB (dropped)
+    changed = changed.at[jnp.where(r_live, r_tgt, P * N).reshape(-1)].set(
+        True, mode="drop")
+    has_feat = has_feat.at[jnp.where(r_live, r_tgt, P * N).reshape(-1)].set(
+        True, mode="drop")
+    n_bcast = jnp.sum(r_live)
+    bcast_cross = jnp.sum(r_live & (topo.r_rep_part != jnp.arange(P)[:, None]))
+    busy = busy.at[topo.r_rep_part].add(r_live.astype(jnp.int32), mode="drop")
+
+    # ---------------- Round B(1): new-edge RMIs  (addElement(e), Alg. 1)
+    x_sent_flat = ls.x_sent.reshape(P * N, d_in)
+    has_sent = ls.has_sent.reshape(P * N)
+    e_sidx = _flat(new_edges.part, new_edges.src_slot, N)
+    e_ready = new_edges.valid & has_sent[e_sidx]                 # msgReady
+    e_msg = layer.message(params, x_sent_flat[e_sidx])
+    d_agg = e_msg.shape[-1]
+    e_tgt = jnp.where(e_ready,
+                      _flat(new_edges.dst_master_part, new_edges.dst_master_slot, N),
+                      P * N)
+    busy = busy.at[new_edges.part].add(new_edges.valid.astype(jnp.int32),
+                                       mode="drop")
+
+    # ---------------- Round B(2): per-vertex reduce/replace deltas
+    # decide which touched vertices send this tick (window policy)
+    freq = win.cms_query(ls.cms, jnp.arange(P * N)) if wconf.kind == win.ADAPTIVE \
+        else jnp.zeros((P * N,), jnp.float32)
+    red_pending = ls.red_pending.reshape(P * N) | changed
+    red_deadline = ls.red_deadline.reshape(P * N)
+    touched_deadline = win.next_deadline(
+        wconf, now, red_deadline, ls.red_pending.reshape(P * N), freq)
+    red_deadline = jnp.where(changed, touched_deadline, red_deadline)
+    # STREAMING evicts everything pending (incl. deadlines scheduled by a
+    # previous windowed policy — the drain path of flush())
+    send = red_pending if wconf.kind == win.STREAMING else \
+        red_pending & (red_deadline <= now)
+    # sources: delta = phi(x) - phi(x_sent) if has_sent else (phi(x), +1)
+    msg_new = layer.message(params, feat_flat)
+    msg_old = layer.message(params, x_sent_flat)
+    delta_vec = jnp.where(send[:, None],
+                          msg_new - jnp.where(has_sent[:, None], msg_old, 0.0),
+                          0.0)
+    delta_cnt = jnp.where(send, jnp.where(has_sent, 0.0, 1.0), 0.0)
+
+    # per-edge gather of source deltas -> destination masters
+    pp = jnp.arange(P)[:, None]
+    o_sidx = _flat(pp, topo.e_src_slot, N)                        # [P,E]
+    o_live = topo.e_valid & send[o_sidx]
+    o_tgt = jnp.where(o_live, _flat(topo.e_dst_mpart, topo.e_dst_mslot, N), P * N)
+    o_vec = delta_vec[o_sidx.reshape(-1)]
+    o_cnt = delta_cnt[o_sidx.reshape(-1)] * o_live.reshape(-1)
+
+    # ---------------- apply RMIs at masters (one segment scatter-add)
+    agg_flat = ls.agg.reshape(P * N, d_agg)
+    cnt_flat = ls.agg_cnt.reshape(P * N)
+    agg_flat = agg_flat.at[e_tgt].add(
+        jnp.where(e_ready[:, None], e_msg, 0.0), mode="drop")
+    cnt_flat = cnt_flat.at[e_tgt].add(e_ready.astype(jnp.float32), mode="drop")
+    agg_flat = agg_flat.at[o_tgt.reshape(-1)].add(
+        jnp.where(o_live.reshape(-1)[:, None], o_vec, 0.0), mode="drop")
+    cnt_flat = cnt_flat.at[o_tgt.reshape(-1)].add(o_cnt, mode="drop")
+    agg_dirty = jnp.zeros((P * N,), bool)
+    agg_dirty = agg_dirty.at[e_tgt].set(e_ready, mode="drop")
+    agg_dirty = agg_dirty.at[o_tgt.reshape(-1)].max(o_live.reshape(-1), mode="drop")
+
+    n_reduce = jnp.sum(e_ready) + jnp.sum(o_live)
+    red_cross = (jnp.sum(e_ready & (new_edges.dst_master_part != new_edges.part))
+                 + jnp.sum(o_live & (topo.e_dst_mpart != pp)))
+    busy = busy.at[new_edges.dst_master_part].add(e_ready.astype(jnp.int32),
+                                                  mode="drop")
+    busy = busy.at[topo.e_dst_mpart].add(o_live.astype(jnp.int32), mode="drop")
+
+    # commit send bookkeeping
+    x_sent_flat = jnp.where(send[:, None], feat_flat, x_sent_flat)
+    has_sent = has_sent | send
+    red_pending = red_pending & ~send
+
+    # ---------------- forward/update phase (psi), intra-layer window
+    is_m = topo.is_master.reshape(P * N)
+    dirty = (agg_dirty | (changed & is_m)) & has_feat & is_m
+    fwd_pending = ls.fwd_pending.reshape(P * N) | dirty
+    fwd_deadline = ls.fwd_deadline.reshape(P * N)
+    fwd_touch_dl = win.next_deadline(
+        wconf, now, fwd_deadline, ls.fwd_pending.reshape(P * N), freq)
+    fwd_deadline = jnp.where(dirty, fwd_touch_dl, fwd_deadline)
+    evict = fwd_pending if wconf.kind == win.STREAMING else \
+        fwd_pending & (fwd_deadline <= now)
+
+    # capacity-limited emission: pick the first outbox_cap evicted vertices
+    # (rest stay pending -> natural backpressure)
+    order = jnp.where(evict, jnp.arange(P * N), P * N)
+    k = min(outbox_cap, P * N)
+    picked = jax.lax.top_k(-order, k)[0] * -1                     # ascending
+    picked_valid = picked < P * N
+    picked = jnp.minimum(picked, P * N - 1)
+    emitted_mask = jnp.zeros((P * N,), bool).at[picked].set(
+        picked_valid, mode="drop")
+    deferred = evict & ~emitted_mask
+    n_emit = jnp.sum(emitted_mask)
+    n_drop = jnp.sum(deferred)
+
+    x_self = feat_flat[picked]
+    agg_read = mean_read(agg_flat, cnt_flat)[picked]
+    x_out = layer.update(params, x_self, agg_read)
+    outbox = FeatBatch(part=(picked // N).astype(jnp.int32),
+                       slot=(picked % N).astype(jnp.int32),
+                       feat=x_out, valid=picked_valid)
+    fwd_pending = fwd_pending & ~emitted_mask
+    busy = busy.at[(picked // N)].add(picked_valid.astype(jnp.int32),
+                                      mode="drop")
+
+    # ---------------- adaptive-session CMS update
+    cms = ls.cms
+    if wconf.kind == win.ADAPTIVE:
+        touch_keys = jnp.where(changed, jnp.arange(P * N), 0)
+        cms = win.cms_update(cms, touch_keys, changed.astype(jnp.float32),
+                             decay=wconf.cms_decay)
+
+    new_ls = LayerState(
+        feat=feat_flat.reshape(P, N, d_in), has_feat=has_feat.reshape(P, N),
+        x_sent=x_sent_flat.reshape(P, N, d_in), has_sent=has_sent.reshape(P, N),
+        agg=agg_flat.reshape(P, N, d_agg), agg_cnt=cnt_flat.reshape(P, N),
+        red_pending=red_pending.reshape(P, N),
+        red_deadline=red_deadline.reshape(P, N),
+        fwd_pending=fwd_pending.reshape(P, N),
+        fwd_deadline=fwd_deadline.reshape(P, N),
+        cms=cms, last_touch=jnp.where(changed, now, ls.last_touch.reshape(P * N)
+                                      ).reshape(P, N))
+    stats = TickStats(broadcast_msgs=n_bcast, reduce_msgs=n_reduce,
+                      cross_part_msgs=bcast_cross + red_cross,
+                      emitted=n_emit, dropped=n_drop, busy=busy)
+    return new_ls, outbox, stats
+
+
+def has_work(ls: LayerState) -> jnp.ndarray:
+    """Termination-detection predicate: any pending timer or unsent delta."""
+    return jnp.any(ls.red_pending) | jnp.any(ls.fwd_pending)

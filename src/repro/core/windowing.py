@@ -1,0 +1,99 @@
+"""Windowed forward-pass policies (paper §4.2.4) + CountMinSketch.
+
+Timers are tick-granular (the paper uses a 10ms coalescing interval; one
+tick here plays that role). Policies compute per-vertex eviction deadlines:
+
+  Streaming        : deadline = now                  (evict immediately)
+  Tumbling         : deadline = (now // W + 1) * W   (fixed buckets)
+  Session          : deadline = now + W              (touch extends)
+  AdaptiveSession  : deadline = now + clip(alpha / freq_v)  with freq_v an
+                     exponentially-decayed CountMinSketch estimate of the
+                     vertex's update frequency (paper: "windowed exponential
+                     mean of past frequencies ... thread-safe CountMinSketch
+                     that is periodically averaged").
+
+Intra-layer windows delay the *forward* (psi-emission) per master vertex;
+inter-layer windows delay the *reduce* per source vertex — source-side
+delta batching plus per-tick destination coalescing gives the paper's
+partial-aggregation effect (DESIGN §2 records this adaptation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+STREAMING = "streaming"
+TUMBLING = "tumbling"
+SESSION = "session"
+ADAPTIVE = "adaptive"
+
+
+@dataclass(frozen=True)
+class WindowConfig:
+    kind: str = STREAMING
+    interval: int = 4              # W, in ticks
+    adaptive_min: int = 1
+    adaptive_max: int = 16
+    adaptive_alpha: float = 8.0    # deadline ~= alpha / freq
+    cms_decay: float = 0.9         # exponential decay applied per tick
+
+
+def next_deadline(cfg: WindowConfig, now, cur_deadline, pending, freq):
+    """Deadline for vertices touched at tick `now`.
+
+    pending: whether the vertex already had a scheduled eviction.
+    freq: CMS frequency estimate (only used by ADAPTIVE).
+    """
+    if cfg.kind == STREAMING:
+        return jnp.full_like(cur_deadline, now)
+    if cfg.kind == TUMBLING:
+        bucket = (now // cfg.interval + 1) * cfg.interval
+        # an existing earlier deadline stays (tumbling buckets don't move)
+        return jnp.where(pending, jnp.minimum(cur_deadline, bucket), bucket)
+    if cfg.kind == SESSION:
+        # every touch pushes eviction back
+        return jnp.full_like(cur_deadline, now + cfg.interval)
+    if cfg.kind == ADAPTIVE:
+        interval = jnp.clip(
+            (cfg.adaptive_alpha / jnp.maximum(freq, 1e-3)).astype(jnp.int32),
+            cfg.adaptive_min, cfg.adaptive_max)
+        return (now + interval).astype(cur_deadline.dtype)
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------- sketch
+_CMS_PRIMES = (1000003, 1000033, 1000037, 1000039, 1000081, 1000099)
+
+
+def cms_hash(keys: jnp.ndarray, depth: int, width: int) -> jnp.ndarray:
+    """[depth, n] bucket indices via multiply-shift hashing."""
+    ks = keys.astype(jnp.uint32)
+    rows = []
+    for d in range(depth):
+        h = (ks * jnp.uint32(_CMS_PRIMES[d % len(_CMS_PRIMES)])
+             + jnp.uint32((d * 0x9E3779B9) & 0xFFFFFFFF))
+        h ^= h >> 16
+        h *= jnp.uint32(0x85EBCA6B)
+        h ^= h >> 13
+        rows.append((h % jnp.uint32(width)).astype(jnp.int32))
+    return jnp.stack(rows)
+
+
+def cms_update(cms: jnp.ndarray, keys: jnp.ndarray, weights: jnp.ndarray,
+               decay: float = 1.0) -> jnp.ndarray:
+    """Add `weights` at `keys`; optionally decay the whole sketch first."""
+    depth, width = cms.shape
+    idx = cms_hash(keys, depth, width)                       # [depth, n]
+    cms = cms * decay
+    for d in range(depth):
+        cms = cms.at[d].add(
+            jnp.zeros((width,), cms.dtype).at[idx[d]].add(weights))
+    return cms
+
+
+def cms_query(cms: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    depth, width = cms.shape
+    idx = cms_hash(keys, depth, width)
+    ests = jnp.stack([cms[d][idx[d]] for d in range(depth)])
+    return jnp.min(ests, axis=0)

@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic stand-ins for the paper's streams + LM tokens."""
+from repro.data.streams import (edge_stream, feature_stream,  # noqa: F401
+                                temporal_stream, token_batches)

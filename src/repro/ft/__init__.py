@@ -1,0 +1,5 @@
+"""Fault tolerance: consistent-cut checkpointing (incl. in-flight iteration
+state), Alg. 5 elastic rescale, straggler mitigation."""
+from repro.ft.checkpoint import CheckpointManager  # noqa: F401
+from repro.ft.elastic import rescale_parts  # noqa: F401
+from repro.ft.stragglers import StragglerMitigator  # noqa: F401

@@ -1,0 +1,68 @@
+"""Elastic re-scaling of physical sub-operators (paper §4.4.2).
+
+Logical parts are fixed at max_parallelism; the physical placement of a
+logical part under `parallelism` is Algorithm 5. A re-scale (node failure,
+scale-up) therefore never re-partitions the graph — Keyed State moves with
+its logical part to the new physical owner; Alg. 5's fixed mapping makes
+recovery deterministic.
+
+In the mesh runtime, "physical sub-operator" = mesh shard: re-scaling is a
+re-sharding of the [P_logical, ...] state arrays onto a different number of
+data-axis shards. On one host this is a pure relayout (the arrays are
+already keyed by logical part); the function below verifies the invariants
+and produces the shard assignment + per-shard state views used by the
+launcher and the benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.explosion import physical_part
+
+
+@dataclass
+class RescalePlan:
+    old_parallelism: int
+    new_parallelism: int
+    max_parallelism: int
+    moves: list          # (logical_part, old_phys, new_phys)
+
+    @property
+    def moved_fraction(self) -> float:
+        return len(self.moves) / self.max_parallelism
+
+
+def rescale_parts(old_parallelism: int, new_parallelism: int,
+                  max_parallelism: int) -> RescalePlan:
+    logical = np.arange(max_parallelism)
+    old = physical_part(logical, old_parallelism, max_parallelism)
+    new = physical_part(logical, new_parallelism, max_parallelism)
+    moves = [(int(l), int(o), int(n))
+             for l, o, n in zip(logical, old, new) if o != n]
+    return RescalePlan(old_parallelism, new_parallelism, max_parallelism,
+                       moves)
+
+
+def shard_views(state_leading_parts: int, parallelism: int,
+                max_parallelism: int):
+    """Which logical parts each physical sub-operator owns."""
+    assert state_leading_parts == max_parallelism
+    phys = physical_part(np.arange(max_parallelism), parallelism,
+                         max_parallelism)
+    return [np.nonzero(phys == p)[0] for p in range(parallelism)]
+
+
+def simulate_failure_and_recover(pipe, ckpt_mgr, step: int,
+                                 new_parallelism: int):
+    """Fail-stop drill: restore the latest checkpoint into a fresh pipeline
+    and re-map logical parts onto `new_parallelism` sub-operators. Returns
+    (restored_step, RescalePlan). The engine state arrays are keyed by
+    logical part, so no graph data is touched — exactly the paper's claim.
+    """
+    restored = ckpt_mgr.restore_pipeline(pipe, step)
+    plan = rescale_parts(pipe.cfg.base_parallelism, new_parallelism,
+                         pipe.cfg.n_parts)
+    pipe.cfg.base_parallelism = new_parallelism
+    return restored, plan

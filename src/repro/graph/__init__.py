@@ -1,0 +1,20 @@
+"""Graph-learning substrate.
+
+JAX has no sparse message-passing primitives beyond BCOO, so the
+message-passing core here is built on ``jax.ops.segment_sum`` /
+``segment_max`` over edge-index arrays (senders/receivers) — this IS part of
+the system, not a stub. All models consume the same `Graph` struct:
+
+  graphs.py    Graph container (edge index + masks + features + positions)
+  segment.py   masked segment reduce ops (sum/mean/max/min/std/softmax)
+  mp.py        generic MPGNN layer (phi / rho / psi), the paper's Section 3.3
+  sage.py      GraphSAGE + GCN (the paper's evaluation models)
+  pna.py       Principal Neighbourhood Aggregation (assigned arch)
+  gatedgcn.py  GatedGCN (assigned arch)
+  so3.py       real spherical harmonics + real Clebsch-Gordan coupling
+  nequip.py    E(3)-equivariant interatomic potential (assigned arch)
+  dimenet.py   directional message passing w/ triplet gather (assigned arch)
+  sampler.py   fanout neighbor sampler (minibatch_lg shape)
+  triplets.py  triplet index construction for DimeNet
+"""
+from repro.graph.graphs import Graph  # noqa: F401

@@ -1,0 +1,162 @@
+"""DimeNet — directional message passing (arXiv:2003.03123).
+
+Assigned config: n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7,
+n_radial=6.
+
+Messages live on directed edges m_ji; interaction blocks aggregate over
+triplets (k->j->i):
+
+    m_ji' = W m_ji + sum_k  a_SBF(r_kj, angle_kji) (x) W_bilinear (x) m_kj
+
+The 2D spherical basis is factorized as bessel(r) x cos(l * angle)
+(l = 0..n_spherical-1): exact spherical-Bessel roots require scipy (not in
+this environment); the cosine angular basis spans the same angular
+frequencies and keeps flops/shape identical. Noted in DESIGN §2.
+
+The triplet gather is the taxonomy's "triplet/quadruplet gather" kernel
+regime: indices come precomputed (triplets.py), compute is gather -> dense
+bilinear einsum -> segment_sum, mapping onto kernels/segment_reduce on TPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.graph.graphs import Graph
+from repro.graph.nequip import bessel_basis
+from repro.nn import initializers as init
+from repro.nn.layers import MLP, Linear
+from repro.nn.module import Module
+
+
+def angular_basis(cos_angle: jnp.ndarray, n_spherical: int) -> jnp.ndarray:
+    """cos(l * theta) via Chebyshev recurrence, [T, n_spherical]."""
+    c = jnp.clip(cos_angle, -1.0, 1.0)
+    outs = [jnp.ones_like(c), c]
+    for _ in range(2, n_spherical):
+        outs.append(2 * c * outs[-1] - outs[-2])
+    return jnp.stack(outs[:n_spherical], axis=-1)
+
+
+@dataclass(frozen=True)
+class DimeNetBlock(Module):
+    d_hidden: int
+    n_radial: int
+    n_spherical: int
+    n_bilinear: int
+
+    def __post_init__(self):
+        d = self.d_hidden
+        object.__setattr__(self, "w_msg", Linear(d, d))
+        object.__setattr__(self, "w_kj", Linear(d, d, use_bias=False))
+        object.__setattr__(self, "mlp_out", MLP((d, d, d), act=jax.nn.silu))
+
+    def init(self, key):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        nb = self.n_bilinear
+        return {
+            "w_msg": self.w_msg.init(k1),
+            "w_kj": self.w_kj.init(k2),
+            "w_sbf": init.lecun_normal(
+                k3, (self.n_radial * self.n_spherical, nb)),
+            # bilinear tensor [n_bilinear, d, d]
+            "bilinear": init.normal(1.0 / self.d_hidden)(
+                k4, (nb, self.d_hidden, self.d_hidden)),
+            "mlp_out": self.mlp_out.init(k5),
+        }
+
+    def __call__(self, params, m, sbf, t_kj, t_ji, t_mask, n_edges):
+        """m: [E,d] edge messages; sbf: [T, n_rad*n_sph]; t_*: [T] indices."""
+        m_kj = self.w_kj(params["w_kj"], m)[t_kj]              # [T, d]
+        a = sbf @ params["w_sbf"]                               # [T, nb]
+        # bilinear: sum_b a[t,b] * (m_kj[t] @ bilinear[b]) -> [T, d]
+        inter = jnp.einsum("tb,td,bdf->tf", a, m_kj, params["bilinear"])
+        agg = segment.segment_sum(inter, t_ji, n_edges, t_mask)  # [E, d]
+        h = self.w_msg(params["w_msg"], m) + agg
+        return m + self.mlp_out(params["mlp_out"], jax.nn.silu(h))
+
+
+@dataclass(frozen=True)
+class DimeNet(Module):
+    d_in: int
+    d_hidden: int = 128
+    n_blocks: int = 6
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_classes: int = 0
+
+    def __post_init__(self):
+        d = self.d_hidden
+        object.__setattr__(self, "embed_x", Linear(self.d_in, d))
+        object.__setattr__(self, "embed_m",
+                           MLP((2 * d + self.n_radial, d), act=jax.nn.silu))
+        blocks = tuple(DimeNetBlock(d, self.n_radial, self.n_spherical,
+                                    self.n_bilinear)
+                       for _ in range(self.n_blocks))
+        object.__setattr__(self, "blocks", blocks)
+        out_dim = self.n_classes if self.n_classes else 1
+        object.__setattr__(self, "readout", MLP((d, d, out_dim), act=jax.nn.silu))
+
+    def init(self, key):
+        keys = jax.random.split(key, self.n_blocks + 3)
+        p = {"embed_x": self.embed_x.init(keys[0]),
+             "embed_m": self.embed_m.init(keys[1]),
+             "readout": self.readout.init(keys[-1])}
+        for i, b in enumerate(self.blocks):
+            p[f"b{i}"] = b.init(keys[2 + i])
+        return p
+
+    def _geometry(self, g: Graph, t_kj, t_ji):
+        vec = g.pos[g.receivers] - g.pos[g.senders]             # edge j->i vector
+        r = jnp.linalg.norm(vec + 1e-9, axis=-1)
+        rbf = bessel_basis(r, self.n_radial, self.cutoff)       # [E, n_radial]
+        # angle between edge (k->j) and edge (j->i): vectors -v_kj and v_ji
+        v_ji = vec[t_ji]
+        v_kj = vec[t_kj]
+        cos_a = jnp.sum(v_ji * (-v_kj), axis=-1) / (
+            jnp.linalg.norm(v_ji + 1e-9, axis=-1)
+            * jnp.linalg.norm(v_kj + 1e-9, axis=-1))
+        ang = angular_basis(cos_a, self.n_spherical)            # [T, n_sph]
+        sbf = (rbf[t_kj][:, :, None] * ang[:, None, :]).reshape(
+            t_kj.shape[0], self.n_radial * self.n_spherical)
+        return rbf, sbf
+
+    def edge_messages(self, params, g: Graph, t_kj, t_ji, t_mask):
+        assert g.pos is not None, "DimeNet needs positions"
+        rbf, sbf = self._geometry(g, t_kj, t_ji)
+        x = self.embed_x(params["embed_x"], g.x)
+        m = self.embed_m(params["embed_m"], jnp.concatenate(
+            [x[g.senders], x[g.receivers], rbf], axis=-1))      # [E, d]
+        if g.edge_mask is not None:
+            m = jnp.where(g.edge_mask[:, None], m, 0.0)
+        for i, b in enumerate(self.blocks):
+            m = b(params[f"b{i}"], m, sbf, t_kj, t_ji, t_mask, g.n_edges)
+        return m
+
+    def __call__(self, params, g: Graph, t_kj, t_ji, t_mask):
+        m = self.edge_messages(params, g, t_kj, t_ji, t_mask)
+        node_h = segment.segment_sum(m, g.receivers, g.n_nodes, g.edge_mask)
+        out = self.readout(params["readout"], node_h)
+        if self.n_classes:
+            return out
+        e_node = out[..., 0]
+        if g.node_mask is not None:
+            e_node = jnp.where(g.node_mask, e_node, 0.0)
+        gids = g.graph_ids if g.graph_ids is not None else jnp.zeros(
+            (g.n_nodes,), jnp.int32)
+        return jax.ops.segment_sum(e_node, gids, g.n_graphs)
+
+    def loss(self, params, g: Graph, targets, t_kj, t_ji, t_mask):
+        out = self(params, g, t_kj, t_ji, t_mask)
+        if self.n_classes:
+            labels, mask = targets
+            logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+            gold = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+            return jnp.sum(jnp.where(mask, -gold, 0.0)) / jnp.maximum(
+                jnp.sum(mask), 1)
+        return jnp.mean(jnp.square(out.astype(jnp.float32) - targets))

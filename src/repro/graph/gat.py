@@ -1,0 +1,88 @@
+"""Graph Attention Network (arXiv:1710.10903) — one of the paper's
+supported MPGNN instantiations (§3.3: "GCN, GraphSAGE, GAT, JK").
+
+Edge attention is a segment-softmax over in-edges; note the STREAMING
+caveat: softmax normalization is not an invertible synopsis, so GAT runs
+exactly in the static/rebuild path while the streaming engine supports it
+via windowed re-normalization (the paper's aggregator restrictions apply —
+DESIGN §8)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.graph.graphs import Graph
+from repro.nn import initializers as init
+from repro.nn.layers import Linear
+from repro.nn.module import Module
+
+
+@dataclass(frozen=True)
+class GATLayer(Module):
+    in_dim: int
+    out_dim: int
+    n_heads: int = 4
+    act: bool = True
+
+    def __post_init__(self):
+        assert self.out_dim % self.n_heads == 0
+        object.__setattr__(self, "w", Linear(self.in_dim, self.out_dim,
+                                             use_bias=False))
+
+    def init(self, key):
+        kw, ka, kb = jax.random.split(key, 3)
+        dh = self.out_dim // self.n_heads
+        return {"w": self.w.init(kw),
+                "a_src": init.lecun_normal(ka, (self.n_heads, dh)),
+                "a_dst": init.lecun_normal(kb, (self.n_heads, dh))}
+
+    def __call__(self, params, g: Graph, x):
+        N, H = g.n_nodes, self.n_heads
+        dh = self.out_dim // H
+        h = self.w(params["w"], x).reshape(N, H, dh)
+        e_src = jnp.einsum("nhd,hd->nh", h, params["a_src"].astype(h.dtype))
+        e_dst = jnp.einsum("nhd,hd->nh", h, params["a_dst"].astype(h.dtype))
+        scores = jax.nn.leaky_relu(
+            e_src[g.senders] + e_dst[g.receivers], 0.2)     # [E, H]
+        alpha = jnp.stack(
+            [segment.segment_softmax(scores[:, i], g.receivers, N,
+                                     g.edge_mask) for i in range(H)], axis=1)
+        msgs = h[g.senders] * alpha[..., None]
+        agg = segment.segment_sum(msgs, g.receivers, N, g.edge_mask)
+        out = agg.reshape(N, self.out_dim)
+        return jax.nn.elu(out) if self.act else out
+
+
+@dataclass(frozen=True)
+class GAT(Module):
+    dims: tuple
+    n_heads: int = 4
+    n_classes: int = 0
+
+    def __post_init__(self):
+        n = len(self.dims) - 1
+        layers = tuple(GATLayer(self.dims[i], self.dims[i + 1], self.n_heads,
+                                act=(i < n - 1 or self.n_classes > 0))
+                       for i in range(n))
+        object.__setattr__(self, "layers", layers)
+        if self.n_classes:
+            object.__setattr__(self, "head", Linear(self.dims[-1],
+                                                    self.n_classes))
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.layers) + 1)
+        p = {f"l{i}": l.init(keys[i]) for i, l in enumerate(self.layers)}
+        if self.n_classes:
+            p["head"] = self.head.init(keys[-1])
+        return p
+
+    def __call__(self, params, g: Graph, x=None):
+        x = g.x if x is None else x
+        for i, l in enumerate(self.layers):
+            x = l(params[f"l{i}"], g, x)
+        if self.n_classes:
+            return self.head(params["head"], x)
+        return x

@@ -1,0 +1,106 @@
+"""GatedGCN — arXiv:1711.07553 / benchmarking-gnns (arXiv:2003.00982).
+
+Assigned config: n_layers=16, d_hidden=70, gated aggregator.
+
+    e_ij' = e_ij + ReLU(Norm(A x_i + B x_j + C e_ij))
+    eta   = sigma(e_ij') / (sum_j sigma(e_ij') + eps)
+    x_i'  = x_i + ReLU(Norm(U x_i + sum_j eta_ij * (V x_j)))
+
+We use LayerNorm rather than BatchNorm: the streaming engine processes
+events in micro-ticks where batch statistics are ill-defined (DESIGN §2);
+LayerNorm is the standard drop-in for streaming/inference-first use.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.graph.graphs import Graph
+from repro.nn.layers import LayerNorm, Linear
+from repro.nn.module import Module
+
+
+@dataclass(frozen=True)
+class GatedGCNLayer(Module):
+    dim: int
+
+    def __post_init__(self):
+        d = self.dim
+        for name in ("A", "B", "C", "U", "V"):
+            object.__setattr__(self, name, Linear(d, d))
+        object.__setattr__(self, "norm_e", LayerNorm(d))
+        object.__setattr__(self, "norm_x", LayerNorm(d))
+
+    def init(self, key):
+        ks = jax.random.split(key, 7)
+        return {"A": self.A.init(ks[0]), "B": self.B.init(ks[1]),
+                "C": self.C.init(ks[2]), "U": self.U.init(ks[3]),
+                "V": self.V.init(ks[4]), "norm_e": self.norm_e.init(ks[5]),
+                "norm_x": self.norm_x.init(ks[6])}
+
+    def __call__(self, params, g: Graph, x, e):
+        """x: [N,d], e: [E,d] -> (x', e')."""
+        xi, xj = x[g.receivers], x[g.senders]
+        e_hat = (self.A(params["A"], xi) + self.B(params["B"], xj)
+                 + self.C(params["C"], e))
+        e_new = e + jax.nn.relu(self.norm_e(params["norm_e"], e_hat))
+        gate = jax.nn.sigmoid(e_new)
+        vj = self.V(params["V"], xj) * gate
+        num = segment.segment_sum(vj, g.receivers, g.n_nodes, g.edge_mask)
+        den = segment.segment_sum(gate, g.receivers, g.n_nodes, g.edge_mask)
+        agg = num / (den + 1e-6)
+        h = self.U(params["U"], x) + agg
+        x_new = x + jax.nn.relu(self.norm_x(params["norm_x"], h))
+        return x_new, e_new
+
+
+@dataclass(frozen=True)
+class GatedGCN(Module):
+    d_in: int
+    d_hidden: int = 70
+    n_layers: int = 16
+    n_classes: int = 0
+    d_edge_in: int = 0              # 0 = no input edge features
+
+    def __post_init__(self):
+        object.__setattr__(self, "embed_x", Linear(self.d_in, self.d_hidden))
+        object.__setattr__(self, "embed_e",
+                           Linear(max(self.d_edge_in, 1), self.d_hidden))
+        layers = tuple(GatedGCNLayer(self.d_hidden) for _ in range(self.n_layers))
+        object.__setattr__(self, "layers", layers)
+        if self.n_classes:
+            object.__setattr__(self, "head", Linear(self.d_hidden, self.n_classes))
+
+    def init(self, key):
+        keys = jax.random.split(key, self.n_layers + 3)
+        p = {"embed_x": self.embed_x.init(keys[0]),
+             "embed_e": self.embed_e.init(keys[1])}
+        for i, l in enumerate(self.layers):
+            p[f"l{i}"] = l.init(keys[2 + i])
+        if self.n_classes:
+            p["head"] = self.head.init(keys[-1])
+        return p
+
+    def __call__(self, params, g: Graph, x=None):
+        x = g.x if x is None else x
+        x = self.embed_x(params["embed_x"], x)
+        if g.edge_attr is not None:
+            e = self.embed_e(params["embed_e"], g.edge_attr)
+        else:
+            e = self.embed_e(params["embed_e"],
+                             jnp.ones((g.n_edges, 1), x.dtype))
+        for i, l in enumerate(self.layers):
+            x, e = l(params[f"l{i}"], g, x, e)
+        if self.n_classes:
+            return self.head(params["head"], x)
+        return x
+
+    def loss(self, params, g: Graph, labels, label_mask):
+        logits = self(params, g).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        gold = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        ce = jnp.where(label_mask, -gold, 0.0)
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(label_mask), 1)

@@ -1,0 +1,48 @@
+"""Generic MPGNN layer — the paper's §3.3 formulation.
+
+    m_e  = phi(x_u, x_v, x_e)        per incoming edge (u -> v)
+    a_v  = rho({m_e})                permutation-invariant aggregation
+    x_v' = psi(x_v, a_v)             update
+
+`rho` must be a synopsis (mergeable / commutative / invertible) for the
+streaming engine (repro/core) to maintain it incrementally; the aggregators
+offered here (sum / mean / max*) satisfy that (max is invertible only via
+re-scan on remove — see core/aggregators.py for the exact contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.graph.graphs import Graph
+from repro.nn.module import Module
+
+AGGREGATORS = {
+    "sum": segment.segment_sum,
+    "mean": segment.segment_mean,
+    "max": segment.segment_max,
+    "min": segment.segment_min,
+}
+
+
+@dataclass(frozen=True)
+class MPLayer(Module):
+    """phi/psi supplied as sub-modules; rho by name."""
+    phi: Module                     # (params, x_u, x_v, x_e) -> messages
+    psi: Module                     # (params, x_v, a_v) -> x_v'
+    rho: str = "mean"
+
+    def init(self, key):
+        import jax
+        k1, k2 = jax.random.split(key)
+        return {"phi": self.phi.init(k1), "psi": self.psi.init(k2)}
+
+    def __call__(self, params, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
+        xu = x[g.senders]
+        xv = x[g.receivers]
+        m = self.phi(params["phi"], xu, xv, g.edge_attr)
+        agg = AGGREGATORS[self.rho](m, g.receivers, g.n_nodes, g.edge_mask)
+        return self.psi(params["psi"], x, agg)

@@ -1,0 +1,96 @@
+"""Principal Neighbourhood Aggregation (PNA) — arXiv:2004.05718.
+
+Assigned config: n_layers=4, d_hidden=75, aggregators mean/max/min/std,
+scalers identity/amplification/attenuation. Message = MLP([x_u ; x_v]);
+the 4 aggregators × 3 scalers concat to 12·d, compressed by a linear.
+
+All four aggregators are synopses (std via (Σm, Σm², n)), so PNA is fully
+streaming-compatible in the D3-GNN engine (DESIGN §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.graph.graphs import Graph, in_degree
+from repro.nn.layers import Linear, MLP
+from repro.nn.module import Module
+
+
+@dataclass(frozen=True)
+class PNALayer(Module):
+    in_dim: int
+    out_dim: int
+    avg_log_deg: float = 1.0        # dataset statistic 'delta' from the paper
+    act: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "pre", MLP((2 * self.in_dim, self.in_dim),
+                                            act=jax.nn.relu))
+        object.__setattr__(self, "post", Linear(12 * self.in_dim + self.in_dim,
+                                                self.out_dim))
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"pre": self.pre.init(k1), "post": self.post.init(k2)}
+
+    def __call__(self, params, g: Graph, x):
+        m = self.pre(params["pre"],
+                     jnp.concatenate([x[g.senders], x[g.receivers]], axis=-1))
+        N, r, mask = g.n_nodes, g.receivers, g.edge_mask
+        aggs = jnp.concatenate([
+            segment.segment_mean(m, r, N, mask),
+            segment.segment_max(m, r, N, mask),
+            segment.segment_min(m, r, N, mask),
+            segment.segment_std(m, r, N, mask),
+        ], axis=-1)                                             # [N, 4d]
+        deg = in_degree(g)
+        logd = jnp.log(deg + 1.0)
+        amp = (logd / self.avg_log_deg)[:, None]
+        att = (self.avg_log_deg / jnp.maximum(logd, 1e-6))[:, None]
+        scaled = jnp.concatenate([aggs, aggs * amp, aggs * att], axis=-1)  # [N,12d]
+        h = self.post(params["post"], jnp.concatenate([x, scaled], axis=-1))
+        return jax.nn.relu(h) if self.act else h
+
+
+@dataclass(frozen=True)
+class PNA(Module):
+    d_in: int
+    d_hidden: int = 75
+    n_layers: int = 4
+    n_classes: int = 0
+    avg_log_deg: float = 1.0
+
+    def __post_init__(self):
+        dims = [self.d_in] + [self.d_hidden] * self.n_layers
+        layers = tuple(PNALayer(dims[i], dims[i + 1], self.avg_log_deg)
+                       for i in range(self.n_layers))
+        object.__setattr__(self, "layers", layers)
+        if self.n_classes:
+            object.__setattr__(self, "head", Linear(self.d_hidden, self.n_classes))
+
+    def init(self, key):
+        keys = jax.random.split(key, self.n_layers + 1)
+        p = {f"l{i}": l.init(keys[i]) for i, l in enumerate(self.layers)}
+        if self.n_classes:
+            p["head"] = self.head.init(keys[-1])
+        return p
+
+    def __call__(self, params, g: Graph, x=None):
+        x = g.x if x is None else x
+        for i, l in enumerate(self.layers):
+            x = l(params[f"l{i}"], g, x)
+        if self.n_classes:
+            return self.head(params["head"], x)
+        return x
+
+    def loss(self, params, g: Graph, labels, label_mask):
+        logits = self(params, g).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        gold = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        ce = jnp.where(label_mask, -gold, 0.0)
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(label_mask), 1)

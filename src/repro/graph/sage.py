@@ -1,0 +1,109 @@
+"""GraphSAGE + GCN — the paper's evaluation models (2-layer SAGE, dim 64).
+
+SAGE-mean layer:  x_v' = act( W_self x_v + W_neigh mean_{u in N_in(v)} x_u )
+GCN layer:        x_v' = act( W sum_u  x_u / sqrt(d_u d_v) )
+
+Both `mean` and deg-normalized `sum` are invertible synopses, which is what
+makes the D3-GNN streaming aggregators exact for these models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import segment
+from repro.graph.graphs import Graph, in_degree
+from repro.nn import initializers as init
+from repro.nn.layers import Linear
+from repro.nn.module import Module
+
+
+@dataclass(frozen=True)
+class SAGELayer(Module):
+    in_dim: int
+    out_dim: int
+    act: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "w_self", Linear(self.in_dim, self.out_dim))
+        object.__setattr__(self, "w_neigh", Linear(self.in_dim, self.out_dim,
+                                                   use_bias=False))
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"self": self.w_self.init(k1), "neigh": self.w_neigh.init(k2)}
+
+    def message(self, params, x_u):
+        """phi: identity on source features (SAGE-mean)."""
+        return x_u
+
+    def update(self, params, x_v, agg):
+        """psi: W_self x_v + W_neigh agg (then relu if not final)."""
+        h = self.w_self(params["self"], x_v) + self.w_neigh(params["neigh"], agg)
+        return jax.nn.relu(h) if self.act else h
+
+    def __call__(self, params, g: Graph, x):
+        agg = segment.segment_mean(x[g.senders], g.receivers, g.n_nodes, g.edge_mask)
+        return self.update(params, x, agg)
+
+
+@dataclass(frozen=True)
+class GCNLayer(Module):
+    in_dim: int
+    out_dim: int
+    act: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "w", Linear(self.in_dim, self.out_dim))
+
+    def init(self, key):
+        return {"w": self.w.init(key)}
+
+    def __call__(self, params, g: Graph, x):
+        deg = in_degree(g) + 1.0
+        norm = jax.lax.rsqrt(deg)
+        msg = (x * norm[:, None])[g.senders]
+        agg = segment.segment_sum(msg, g.receivers, g.n_nodes, g.edge_mask)
+        h = self.w(params["w"], (agg + x * norm[:, None]) * norm[:, None])
+        return jax.nn.relu(h) if self.act else h
+
+
+@dataclass(frozen=True)
+class GraphSAGE(Module):
+    """Stack of SAGE layers; the paper's model is dims=(in, 64, 64)."""
+    dims: Sequence[int]
+    n_classes: int = 0              # 0 = produce embeddings only
+
+    def __post_init__(self):
+        n = len(self.dims) - 1
+        layers = tuple(
+            SAGELayer(self.dims[i], self.dims[i + 1], act=(i < n - 1 or self.n_classes > 0))
+            for i in range(n))
+        object.__setattr__(self, "layers", layers)
+        if self.n_classes:
+            object.__setattr__(self, "head", Linear(self.dims[-1], self.n_classes))
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.layers) + 1)
+        p = {f"l{i}": l.init(keys[i]) for i, l in enumerate(self.layers)}
+        if self.n_classes:
+            p["head"] = self.head.init(keys[-1])
+        return p
+
+    def __call__(self, params, g: Graph, x=None):
+        x = g.x if x is None else x
+        for i, l in enumerate(self.layers):
+            x = l(params[f"l{i}"], g, x)
+        if self.n_classes:
+            return self.head(params["head"], x)
+        return x
+
+    def loss(self, params, g: Graph, labels, label_mask):
+        logits = self(params, g).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        gold = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        ce = jnp.where(label_mask, -gold, 0.0)
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(label_mask), 1)

@@ -1,0 +1,72 @@
+"""Masked segment reductions — the message-passing primitive.
+
+All ops take `data [E, ...]`, `segment_ids [E]`, `num_segments` (static) and
+an optional boolean `mask [E]` for padded edges. Invalid edges contribute
+nothing. `segment_ids` of padded edges may be arbitrary in [0, num_segments).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _masked(data, mask, fill=0.0):
+    if mask is None:
+        return data
+    # dtype-preserving fill: a Python-float fill would weak-type-promote
+    # bf16 data to f32 and silently double the memory traffic
+    fill = jnp.asarray(fill, data.dtype)
+    return jnp.where(mask.reshape(mask.shape + (1,) * (data.ndim - 1)), data, fill)
+
+
+def segment_sum(data, segment_ids, num_segments, mask=None):
+    return jax.ops.segment_sum(_masked(data, mask), segment_ids, num_segments)
+
+
+def segment_count(segment_ids, num_segments, mask=None):
+    ones = jnp.ones(segment_ids.shape, jnp.float32)
+    if mask is not None:
+        ones = jnp.where(mask, ones, 0.0)
+    return jax.ops.segment_sum(ones, segment_ids, num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments, mask=None):
+    s = segment_sum(data, segment_ids, num_segments, mask)
+    n = segment_count(segment_ids, num_segments, mask).astype(s.dtype)
+    n = n.reshape(n.shape + (1,) * (s.ndim - 1))
+    return s / jnp.maximum(n, jnp.asarray(1.0, s.dtype))
+
+
+def segment_max(data, segment_ids, num_segments, mask=None):
+    d = _masked(data, mask, NEG_INF)
+    m = jax.ops.segment_max(d, segment_ids, num_segments)
+    return jnp.where(m <= NEG_INF / 2, jnp.asarray(0.0, m.dtype), m)
+
+
+def segment_min(data, segment_ids, num_segments, mask=None):
+    return -segment_max(-data, segment_ids, num_segments, mask)
+
+
+def segment_std(data, segment_ids, num_segments, mask=None, eps=1e-5):
+    """Per-segment standard deviation (PNA's std aggregator).
+
+    Maintained as the invertible synopsis (Σm, Σm², n) — see DESIGN §4: this
+    is exactly why PNA remains streaming-compatible in the D3-GNN sense.
+    """
+    s1 = segment_sum(data, segment_ids, num_segments, mask)
+    s2 = segment_sum(jnp.square(data), segment_ids, num_segments, mask)
+    n = segment_count(segment_ids, num_segments, mask).astype(s1.dtype)
+    n = jnp.maximum(n, 1).reshape(n.shape + (1,) * (s1.ndim - 1))
+    var = s2 / n - jnp.square(s1 / n)
+    return jnp.sqrt(jnp.maximum(var, jnp.asarray(0.0, var.dtype))
+                    + jnp.asarray(eps, var.dtype))
+
+
+def segment_softmax(scores, segment_ids, num_segments, mask=None):
+    """Edge softmax per destination segment (GAT / attention aggregators)."""
+    m = segment_max(scores, segment_ids, num_segments, mask)
+    z = jnp.exp(_masked(scores - m[segment_ids], mask, NEG_INF))
+    denom = jax.ops.segment_sum(z, segment_ids, num_segments)
+    return z / jnp.maximum(denom[segment_ids], 1e-30)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  segment_reduce/  fused per-destination segment-sum over sorted edges —
+                   the scatter half of every MPGNN layer and of the paper's
+                   windowed evictReduce (GNN hot path). One-hot x message
+                   matmul per tile => the reduction runs on the MXU.
+  flash_attention/ block-tiled online-softmax attention (LM prefill path).
+  embedding_bag/   bag-reduce over gathered table rows (recsys hot path;
+                   JAX has no native EmbeddingBag).
+
+Each kernel ships kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper + layout preprocessing) and ref.py (pure-jnp
+oracle). Tests sweep shapes/dtypes in interpret mode against the oracle —
+TPU is the compile target, CPU interpret is the correctness harness.
+"""

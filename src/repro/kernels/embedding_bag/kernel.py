@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: bag-reduce (sum/mean) of gathered embedding rows.
+
+EmbeddingBag = ragged gather over a [V, d] table + per-bag reduce. The
+gather half is XLA's native strength on TPU (dynamic-gather HBM streams);
+the fusion win is the reduce half: instead of materializing [B, W, d]
+gathered rows and reducing in a second pass, the kernel consumes gathered
+rows tile-by-tile and reduces them into [B, d] bags in VMEM via a one-hot
+MXU matmul (B rows per tile x W slots).
+
+Layout contract (ops.py): rows arrive as [B*W, d] where bag b owns rows
+[b*W, (b+1)*W); a weights vector [B*W] carries the padding mask (0 for
+padded ids) and 1/count for mean mode — so sum and mean are one kernel.
+
+Grid: (n_bag_blocks,), each step consuming (BLOCK_B * W, d) rows and
+writing a (BLOCK_B, d) output tile. VMEM: BLOCK_B*W*d + BLOCK_B*d floats;
+BLOCK_B=64, W=8, d=256 ≈ 0.6 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 64
+
+
+def _kernel(rows_ref, w_ref, out_ref, *, width: int, block_b: int):
+    rows = rows_ref[...]                          # [block_b*W, d]
+    w = w_ref[...]                                # [block_b*W]
+    # selector [block_b*W, block_b]: row r belongs to bag r // W
+    bag_of = jax.lax.broadcasted_iota(jnp.int32, (block_b * width, block_b), 0
+                                      ) // width
+    bag_id = jax.lax.broadcasted_iota(jnp.int32, (block_b * width, block_b), 1)
+    sel = (bag_of == bag_id).astype(rows.dtype) * w[:, None].astype(rows.dtype)
+    out_ref[...] = jax.lax.dot_general(
+        sel, rows, (((0,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_b", "interpret"))
+def embedding_bag_kernel(rows, weights, width: int,
+                         block_b: int = DEFAULT_BLOCK_B,
+                         interpret: bool = True):
+    """rows: [B*W, d] gathered table rows; weights: [B*W] per-row weight.
+    Returns [B, d] reduced bags."""
+    BW, d = rows.shape
+    B = BW // width
+    assert B * width == BW
+    block_b = min(block_b, B)
+    nb = B // block_b
+    assert nb * block_b == B, (B, block_b)
+
+    kern = functools.partial(_kernel, width=width, block_b=block_b)
+    return pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b * width, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b * width,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), rows.dtype),
+        interpret=interpret,
+    )(rows, weights)

@@ -1,0 +1,36 @@
+"""jit'd wrapper: gather + weight/mask prep + kernel dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import (DEFAULT_BLOCK_B,
+                                                embedding_bag_kernel)
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("mode", "block_b", "interpret"))
+def embedding_bag(table, ids, mode: str = "mean",
+                  block_b: int = DEFAULT_BLOCK_B,
+                  interpret: bool | None = None):
+    """table: [V, d]; ids: [B, W] int32, -1 = padding. Returns [B, d]."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    B, W = ids.shape
+    valid = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    rows = jnp.take(table, safe.reshape(-1), axis=0)       # [B*W, d]
+    if mode == "sum":
+        w = valid.astype(table.dtype)
+    elif mode == "mean":
+        cnt = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+        w = (valid / cnt).astype(table.dtype)
+    else:
+        raise ValueError(mode)
+    return embedding_bag_kernel(rows, w.reshape(-1), width=W,
+                                block_b=block_b, interpret=interpret)

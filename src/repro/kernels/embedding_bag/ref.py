@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the embedding-bag kernel (and the torch
+nn.EmbeddingBag semantics it mirrors)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.recsys.embedding_bag import embedding_bag_lookup
+
+
+def embedding_bag_ref(table, ids, mode: str = "mean"):
+    """ids: [B, W] with -1 padding -> [B, d]."""
+    return embedding_bag_lookup(table, ids, mode)

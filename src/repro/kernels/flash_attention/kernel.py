@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: block-tiled online-softmax attention (FlashAttention,
+arXiv:2205.14135, re-tiled for VMEM/MXU).
+
+Grid: (batch*kv_heads*q_per_kv, n_q_blocks, n_kv_blocks) — the kv loop is
+the innermost (sequential) dimension so the running (max, sumexp, acc)
+state lives in VMEM scratch across kv steps of one q block.
+
+Per step the kernel computes
+    s   = q_blk @ k_blk^T * scale            (MXU, f32 accum)
+    m'  = max(m, rowmax(s));  p = exp(s - m')
+    acc = acc * exp(m - m') + p @ v_blk       (MXU)
+and normalizes by the final sumexp on the last kv step. Causal masking
+skips nothing structurally (masked blocks still run — the ops.py wrapper
+chooses grid bounds so fully-masked tail blocks are never launched).
+
+VMEM per step: q/k/v blocks (block_q|block_k x d) + acc (block_q x d) f32 +
+two (block_q,) vectors — block_q=block_k=256, d<=128 is ~0.8 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, s_scr, acc_scr,
+            *, scale: float, causal: bool, block_q: int, block_k: int,
+            n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                     # [block_q, d]
+    k = k_ref[0]                                     # [block_k, d]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    s_scr[...] = s_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(s_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_kernel(q, k, v, causal: bool = True, block_q: int = 256,
+                           block_k: int = 256, interpret: bool = True):
+    """q: [BH, S, D]; k/v: [BH, T, D] (kv heads already broadcast).
+
+    Returns [BH, S, D] in q.dtype.
+    """
+    BH, S, D = q.shape
+    T = k.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    nq, nk = S // block_q, T // block_k
+    assert nq * block_q == S and nk * block_k == T, (S, T, block_q, block_k)
+    scale = 1.0 / (D ** 0.5)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             block_q=block_q, block_k=block_k, n_kv_blocks=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""jit'd wrapper: GQA layout -> kernel layout, head broadcast, dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool | None = None):
+    """GQA flash attention. q: [B,S,H,D]; k/v: [B,T,Kh,D] -> [B,S,H,D]."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    B, S, H, D = q.shape
+    T, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    # fold (B, Kh, G) into one batch axis; kv broadcast over G
+    qk = q.reshape(B, S, Kh, G, D).transpose(0, 2, 3, 1, 4).reshape(
+        B * Kh * G, S, D)
+    kk = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, Kh, G, T, D)).reshape(B * Kh * G, T, D)
+    vv = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, Kh, G, T, D)).reshape(B * Kh * G, T, D)
+    out = flash_attention_kernel(qk, kk, vv, causal=causal, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    return out.reshape(B, Kh, G, S, D).transpose(0, 3, 1, 2, 4).reshape(
+        B, S, H, D)

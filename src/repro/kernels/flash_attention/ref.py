@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: [BH, S, D]; k/v: [BH, T, D]. f32 softmax, matches kernel contract."""
+    D = q.shape[-1]
+    s = jnp.einsum("bsd,btd->bst", q, k).astype(jnp.float32) / (D ** 0.5)
+    if causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bst,btd->bsd", w, v)
+
+
+def gqa_attention_ref(q, k, v, causal: bool = True):
+    """q: [B,S,H,D]; k/v: [B,T,Kh,D] — the nn.attention layout."""
+    from repro.nn.attention import causal_mask, mha
+    mask = causal_mask(q.shape[1], k.shape[1]) if causal else None
+    return mha(q, k, v, mask=mask)

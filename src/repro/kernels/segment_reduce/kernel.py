@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: segment-sum of sorted messages via one-hot MXU matmul.
+
+Layout contract (prepared by ops.py):
+  * messages [E_pad, d] sorted by destination, padded so that no BLOCK_E
+    edge block spans two BLOCK_V output blocks;
+  * seg_local [E_pad] — destination index *within* its output block
+    (BLOCK_V sentinel = padding row, contributes nothing);
+  * eblk_to_vblk [n_eblk] (scalar-prefetch) — which output tile each edge
+    block accumulates into (non-decreasing);
+  * first_visit [n_eblk] (scalar-prefetch) — 1 where this edge block is the
+    first to touch its output tile (zero-initialize then).
+
+Grid is 1-D over edge blocks; the output BlockSpec's index_map reads the
+scalar-prefetched eblk_to_vblk, so consecutive grid steps can revisit the
+same output tile and accumulate in VMEM (the standard TPU reduction
+pattern). The inner op is onehot^T @ msgs — an (BLOCK_V x BLOCK_E) x
+(BLOCK_E x d) matmul on the MXU with f32 accumulation.
+
+VMEM budget per step: BLOCK_E*d (msgs) + BLOCK_V*d (out tile) + BLOCK_E
+(ids) floats. Defaults BLOCK_E=512, BLOCK_V=256, d<=512 stay well under
+16 MB VMEM with MXU-aligned (multiple-of-128) matmul dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_E = 512
+DEFAULT_BLOCK_V = 256
+
+
+def _kernel(eblk_to_vblk, first_visit,      # scalar prefetch
+            seg_ref, msg_ref, out_ref, *, block_v: int):
+    i = pl.program_id(0)
+
+    @pl.when(first_visit[i] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seg = seg_ref[...]                                  # [BLOCK_E]
+    msgs = msg_ref[...]                                 # [BLOCK_E, d]
+    # one-hot [BLOCK_E, BLOCK_V]; padding rows (seg == block_v) select none
+    rows = jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], block_v), 1)
+    onehot = (rows == seg[:, None]).astype(msgs.dtype)
+    out_ref[...] += jax.lax.dot_general(
+        onehot, msgs, (((0,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_vblocks", "block_e",
+                                             "block_v", "interpret"))
+def segment_sum_kernel(msgs, seg_local, eblk_to_vblk, first_visit,
+                       n_vblocks: int, block_e: int = DEFAULT_BLOCK_E,
+                       block_v: int = DEFAULT_BLOCK_V,
+                       interpret: bool = True):
+    """msgs [E_pad, d] (sorted/padded), returns [n_vblocks*block_v, d]."""
+    e_pad, d = msgs.shape
+    n_eblk = e_pad // block_e
+    assert n_eblk * block_e == e_pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_eblk,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i, ev, fv: (i,)),
+            pl.BlockSpec((block_e, d), lambda i, ev, fv: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_v, d), lambda i, ev, fv: (ev[i], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_v=block_v),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_vblocks * block_v, d), msgs.dtype),
+        interpret=interpret,
+    )(eblk_to_vblk, first_visit, seg_local, msgs)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the segment-reduce kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_segment_sum_ref(x, senders, receivers, n_nodes, edge_mask=None):
+    """out[v] = sum_{e: receivers[e]=v} x[senders[e]]  (masked)."""
+    msgs = x[senders]
+    if edge_mask is not None:
+        msgs = jnp.where(edge_mask[:, None], msgs, 0.0)
+    return jax.ops.segment_sum(msgs, receivers, n_nodes)
+
+
+def segment_sum_sorted_ref(msgs, seg_ids, n_segments):
+    """Plain sorted segment-sum (the layout ops.py feeds the kernel)."""
+    return jax.ops.segment_sum(msgs, seg_ids, n_segments)

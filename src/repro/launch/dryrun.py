@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...) \
+                      .lower(*arg_specs, **input_specs(arch, shape))
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes(HLO parse)
+
+proves the distribution config is coherent: sharding mismatches, compile
+OOMs and unsupported collectives all fail here. Results are cached as JSON
+(results/dryrun/<arch>__<shape>__<mesh>.json) and feed EXPERIMENTS.md
+§Dry-run and §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch nequip --shape molecule
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_cells, get_arch
+from repro.dist.sharding import (FAMILY_INPUT_RULES, FAMILY_PARAM_RULES,
+                                 spec_tree)
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import analyze_compiled
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _needs_opt(shape_kind: str) -> bool:
+    return shape_kind == "train"
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             save: bool = True, donate: bool = True) -> dict:
+    spec = get_arch(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    model = spec.build(shape_name)
+    model = spec.tune_for_mesh(model, mesh)
+    shape = spec.shapes[shape_name]
+    step = spec.step(model, shape_name)
+    in_specs = spec.input_specs(model, shape_name)
+
+    # parameter / optimizer-state shape trees without allocation
+    params_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    param_rule = FAMILY_PARAM_RULES[spec.family]
+    params_sh = spec_tree(params_shapes, param_rule, mesh)
+    input_sh = FAMILY_INPUT_RULES[spec.family](in_specs, mesh, shape.kind)
+
+    args, in_shardings = [params_shapes], [params_sh]
+    donate_argnums: tuple = ()
+    if _needs_opt(shape.kind) and spec.family != "d3gnn":
+        from repro.configs.base import make_optimizer
+        opt = make_optimizer(getattr(spec, "optimizer", "adam"))
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_sh = spec_tree(opt_shapes, param_rule, mesh)
+        args.append(opt_shapes)
+        in_shardings.append(opt_sh)
+        donate_argnums = (0, 1) if donate else ()
+    if donate:
+        keys = list(in_specs)
+        base = len(args)
+        extra = tuple(base + keys.index(k) for k in spec.donate_inputs(shape_name))
+        donate_argnums = donate_argnums + extra
+
+    if spec.batch_style == "dict":
+        all_args = args + [in_specs]
+        all_shardings = tuple(in_shardings) + (input_sh,)
+    else:
+        all_args = args + [in_specs[k] for k in in_specs]
+        all_shardings = tuple(in_shardings) + tuple(
+            input_sh[k] for k in in_specs)
+
+    t0 = time.perf_counter()
+    with mesh:
+        jitted = jax.jit(step, in_shardings=all_shardings,
+                         donate_argnums=donate_argnums)
+        lowered = jitted.lower(*all_args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    result = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": int(mesh.size),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    result.update(analyze_compiled(compiled, mesh))
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        out = RESULTS_DIR / f"{arch_id}__{shape_name}__{mesh_name}.json"
+        out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-extra", action="store_true",
+                    help="also run the d3gnn-sage streaming cell")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells(include_extra=args.include_extra)
+    else:
+        assert args.arch, "--arch required unless --all"
+        spec = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        cells = [(args.arch, s) for s in shapes]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch_id, shape_name in cells:
+        for multi in meshes:
+            mesh_name = "multi" if multi else "single"
+            tag = f"{arch_id} x {shape_name} x {mesh_name}"
+            out = RESULTS_DIR / f"{arch_id}__{shape_name}__{mesh_name}.json"
+            if args.skip_existing and out.exists():
+                print(f"[skip] {tag}")
+                continue
+            try:
+                r = run_cell(arch_id, shape_name, multi)
+                print(f"[ok] {tag}: compile={r['compile_s']}s "
+                      f"peak/dev={r.get('peak_memory_gb', '?')}GB "
+                      f"flops={r.get('hlo_gflops', '?')}G "
+                      f"coll={r.get('collective_gb', '?')}GB "
+                      f"bound={r.get('bottleneck', '?')}")
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

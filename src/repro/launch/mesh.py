@@ -1,0 +1,27 @@
+"""Production mesh definition (dry-run target: TPU v5e pods).
+
+single-pod: (16, 16)    axes ("data", "model")          = 256 chips
+multi-pod : (2, 16, 16) axes ("pod", "data", "model")   = 512 chips
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init;
+smoke tests must keep seeing one real device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes: ("pod","data") on multi-pod else ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

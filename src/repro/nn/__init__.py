@@ -1,0 +1,13 @@
+"""Neural-network substrate: a small functional module system on JAX pytrees.
+
+No flax / optax in this environment — the substrate is built here:
+  module.py       parameter-pytree module protocol
+  initializers.py weight initializers
+  layers.py       Linear / RMSNorm / LayerNorm / Embedding / MLP / SwiGLU
+  rotary.py       rotary position embeddings
+  attention.py    GQA attention with optional KV cache + distributed decode
+  moe.py          top-k token-choice MoE with capacity-sorted dispatch
+  transformer.py  scanned decoder-only transformer (dense + MoE)
+"""
+from repro.nn import initializers, layers, rotary, attention, moe, transformer  # noqa: F401
+from repro.nn.module import Module  # noqa: F401

@@ -1,0 +1,195 @@
+"""Grouped-query attention with RoPE and KV-cache decode.
+
+The training/prefill path can route through the Pallas flash-attention
+kernel (kernels/flash_attention) when `use_flash=True`; the pure-jnp path is
+the oracle and the CPU default. Decode attends one (or a few) new tokens
+against a cache; the distributed sequence-sharded decode lives in
+repro/dist/decode.py (LSE-combine across shards).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.module import Module
+from repro.nn.rotary import apply_rope
+
+NEG_INF = -1e30
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset=0) -> jnp.ndarray:
+    """[q_len, kv_len] boolean mask; True = attend."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return kv_pos <= q_pos
+
+
+def mha(q, k, v, mask=None, scale=None):
+    """Reference attention. q: [B,S,H,D]; k/v: [B,T,Kh,D] with H % Kh == 0."""
+    B, S, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh  # queries per kv head
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D)
+    qg = q.reshape(B, S, Kh, G, D)
+    # scores in f32 for numerical stability
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, D)
+
+
+def mha_chunked(q, k, v, q_chunk: int = 256, causal: bool = True,
+                q_offset=0):
+    """Query-chunked attention: scan over q blocks, full softmax over KV per
+    block. Peak memory O(B * H * q_chunk * T) instead of O(B * H * S * T) —
+    the XLA-native analogue of flash attention's outer loop (the Pallas
+    kernel in kernels/flash_attention is the TPU fused version; this path
+    lowers on every backend and bounds dry-run memory).
+
+    q: [B,S,H,D]; k/v: [B,T,Kh,D]. Returns [B,S,H,D].
+    """
+    B, S, H, D = q.shape
+    T, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    nq = S // q_chunk
+    assert nq * q_chunk == S, (S, q_chunk)
+    scale = 1.0 / jnp.sqrt(D)
+    qs = q.reshape(B, nq, q_chunk, Kh, G, D).transpose(1, 0, 3, 4, 2, 5)
+
+    def block(carry, xs):
+        qi, idx = xs                                  # [B,Kh,G,qc,D], scalar
+        logits = jnp.einsum("bkgqd,btkd->bkgqt", qi, k).astype(jnp.float32)
+        logits = logits * scale
+        if causal:
+            q_pos = idx * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+            kv_pos = jnp.arange(T)[None, :]
+            logits = jnp.where(kv_pos <= q_pos, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgqt,btkd->bkgqd", w, v)
+        return carry, out
+
+    _, outs = jax.lax.scan(block, 0, (qs, jnp.arange(nq)))
+    # outs: [nq, B, Kh, G, qc, D] -> [B, S, H, D]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+
+
+@dataclass(frozen=True)
+class GQAAttention(Module):
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    use_flash: bool = False  # route prefill through Pallas kernel (TPU target)
+    q_chunk: int = 0         # >0: chunked attention (memory-bounded)
+
+    def init(self, key):
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        return {
+            "wq": init.lecun_normal(kq, (self.d_model, self.n_heads * self.head_dim)),
+            "wk": init.lecun_normal(kk, (self.d_model, self.n_kv * self.head_dim)),
+            "wv": init.lecun_normal(kv, (self.d_model, self.n_kv * self.head_dim)),
+            "wo": init.lecun_normal(
+                ko, (self.n_heads * self.head_dim, self.d_model)),
+        }
+
+    def _qkv(self, params, x, positions):
+        B, S, _ = x.shape
+        q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, self.n_heads, self.head_dim)
+        k = (x @ params["wk"].astype(x.dtype)).reshape(B, S, self.n_kv, self.head_dim)
+        v = (x @ params["wv"].astype(x.dtype)).reshape(B, S, self.n_kv, self.head_dim)
+        q = apply_rope(q, positions, self.rope_theta)
+        k = apply_rope(k, positions, self.rope_theta)
+        return q, k, v
+
+    def __call__(self, params, x, positions=None):
+        """Full (training/prefill) causal self-attention. x: [B,S,d_model]."""
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q, k, v = self._qkv(params, x, positions)
+        if self.use_flash:
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(q, k, v, causal=True)
+        elif self.q_chunk and S > self.q_chunk:
+            out = mha_chunked(q, k, v, q_chunk=self.q_chunk, causal=True)
+        else:
+            out = mha(q, k, v, mask=causal_mask(S, S))
+        out = out.reshape(B, S, self.n_heads * self.head_dim)
+        return out @ params["wo"].astype(x.dtype)
+
+    def decode(self, params, x, cache_k, cache_v, cache_len):
+        """One-token decode. x: [B,1,d]; cache_k/v: [B,T,Kh,D]; cache_len: [B].
+
+        Returns (out [B,1,d], new_cache_k, new_cache_v).
+        """
+        B, S, _ = x.shape
+        assert S == 1
+        positions = cache_len[:, None]
+        q, k, v = self._qkv(params, x, positions)
+
+        # write the new kv at cache_len: per-row dynamic_update_slice under
+        # vmap (a scatter) — a full-tensor where() here makes XLA rewrite
+        # (and, fused with mixed dtypes, f32-roundtrip) the entire cache
+        # every step (§Perf cell B, iteration 2)
+        def _write_row(cache_b, val_b, pos_b):
+            return jax.lax.dynamic_update_slice(
+                cache_b, val_b[None].astype(cache_b.dtype), (pos_b, 0, 0))
+
+        cache_k = jax.vmap(_write_row)(cache_k, k[:, 0], cache_len)
+        cache_v = jax.vmap(_write_row)(cache_v, v[:, 0], cache_len)
+        valid = (jnp.arange(cache_k.shape[1])[None, :] <= cache_len[:, None])
+        out = decode_attend(q, cache_k, cache_v, valid)
+        out = out.reshape(B, 1, self.n_heads * self.head_dim)
+        return out @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def decode_attend(q, cache_k, cache_v, valid):
+    """Attend q [B,1,H,D] over cache [B,T,Kh,D] with validity mask [B,T]."""
+    B, _, H, D = q.shape
+    Kh = cache_k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, D)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(D)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, cache_v)
+    return out.reshape(B, 1, H, D)
+
+
+def decode_attend_partial(q, cache_k, cache_v, valid):
+    """Partial decode attention for sequence-sharded caches.
+
+    Returns (unnormalized out [B,1,H,D] f32, lse-style (max, sumexp)) so shards
+    can be combined with a global log-sum-exp reduction (flash-decoding).
+    """
+    B, _, H, D = q.shape
+    Kh = cache_k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, D)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(D)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)                  # [B,Kh,G,1]
+    # guard fully-masked shards
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(logits - m_safe)
+    s = jnp.sum(p, axis=-1, keepdims=True)                       # [B,Kh,G,1]
+    out = jnp.einsum("bkgt,btkd->bkgd", p, cache_v.astype(jnp.float32))
+    return out.reshape(B, 1, H, D), m_safe.reshape(B, 1, H, 1), s.reshape(B, 1, H, 1)
+
+
+def combine_partial_decodes(outs, ms, ss):
+    """Combine per-shard partial attention (lists or stacked axis 0)."""
+    m_all = jnp.max(ms, axis=0)                                   # [B,1,H,1]
+    corr = jnp.exp(ms - m_all)
+    s_all = jnp.sum(ss * corr, axis=0)
+    o_all = jnp.sum(outs * corr, axis=0)
+    return o_all / jnp.maximum(s_all, 1e-30)

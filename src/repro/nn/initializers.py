@@ -1,0 +1,67 @@
+"""Weight initializers (lecun/glorot/he/truncated-normal), f32 by default.
+
+Params are created in float32 and cast to the compute dtype at the edge of
+the step function; optimizer state stays f32 (mixed-precision discipline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _fans(shape: tuple[int, ...], in_axis: int = -2, out_axis: int = -1):
+    if len(shape) < 1:
+        return 1, 1
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    receptive = int(np.prod([s for i, s in enumerate(shape)
+                             if i not in (in_axis % len(shape), out_axis % len(shape))]))
+    return shape[in_axis] * receptive, shape[out_axis] * receptive
+
+
+def variance_scaling(scale: float, mode: str, distribution: str,
+                     in_axis: int = -2, out_axis: int = -1):
+    def init(key, shape, dtype=jnp.float32, in_axis=in_axis, out_axis=out_axis,
+             batch_axes: tuple[int, ...] = ()):
+        fans_shape = tuple(s for i, s in enumerate(shape)
+                           if i not in {a % len(shape) for a in batch_axes})
+        fan_in, fan_out = _fans(fans_shape, in_axis, out_axis)
+        denom = {"fan_in": fan_in, "fan_out": fan_out,
+                 "fan_avg": (fan_in + fan_out) / 2}[mode]
+        var = scale / max(1.0, denom)
+        if distribution == "truncated_normal":
+            # stddev correction for truncation at 2 sigma
+            std = jnp.sqrt(var) / 0.87962566103423978
+            return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+        if distribution == "normal":
+            return jnp.sqrt(var) * jax.random.normal(key, shape, dtype)
+        if distribution == "uniform":
+            lim = jnp.sqrt(3 * var)
+            return jax.random.uniform(key, shape, dtype, -lim, lim)
+        raise ValueError(distribution)
+
+    return init
+
+
+lecun_normal = variance_scaling(1.0, "fan_in", "truncated_normal")
+glorot_uniform = variance_scaling(1.0, "fan_avg", "uniform")
+glorot_normal = variance_scaling(1.0, "fan_avg", "truncated_normal")
+he_normal = variance_scaling(2.0, "fan_in", "truncated_normal")
+
+
+def normal(std: float = 0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return std * jax.random.normal(key, shape, dtype)
+
+    return init
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,137 @@
+"""Core layers: Linear, norms, Embedding, MLPs."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.module import Module
+
+
+@dataclass(frozen=True)
+class Linear(Module):
+    in_dim: int
+    out_dim: int
+    use_bias: bool = True
+    kernel_init: Callable = init.lecun_normal
+    name: str = "linear"
+
+    def init(self, key):
+        kk, kb = jax.random.split(key)
+        p = {"w": self.kernel_init(kk, (self.in_dim, self.out_dim))}
+        if self.use_bias:
+            p["b"] = init.zeros(kb, (self.out_dim,))
+        return p
+
+    def __call__(self, params, x):
+        y = x @ params["w"].astype(x.dtype)
+        if self.use_bias:
+            y = y + params["b"].astype(x.dtype)
+        return y
+
+
+@dataclass(frozen=True)
+class RMSNorm(Module):
+    dim: int
+    eps: float = 1e-6
+
+    def init(self, key):
+        return {"scale": init.ones(key, (self.dim,))}
+
+    def __call__(self, params, x):
+        # reduce in f32 for stability regardless of compute dtype
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + self.eps).astype(x.dtype)
+        return y * params["scale"].astype(x.dtype)
+
+
+@dataclass(frozen=True)
+class LayerNorm(Module):
+    dim: int
+    eps: float = 1e-5
+    use_bias: bool = True
+
+    def init(self, key):
+        p = {"scale": init.ones(key, (self.dim,))}
+        if self.use_bias:
+            p["bias"] = init.zeros(key, (self.dim,))
+        return p
+
+    def __call__(self, params, x):
+        xf = x.astype(jnp.float32)
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = ((xf - mean) * jax.lax.rsqrt(var + self.eps)).astype(x.dtype)
+        y = y * params["scale"].astype(x.dtype)
+        if self.use_bias:
+            y = y + params["bias"].astype(x.dtype)
+        return y
+
+
+@dataclass(frozen=True)
+class Embedding(Module):
+    vocab: int
+    dim: int
+    emb_init: Callable = init.normal(0.02)
+
+    def init(self, key):
+        return {"table": self.emb_init(key, (self.vocab, self.dim))}
+
+    def __call__(self, params, ids):
+        return jnp.take(params["table"], ids, axis=0)
+
+    def attend(self, params, x):
+        """Tied-output-head logits: x @ table.T."""
+        return x @ params["table"].astype(x.dtype).T
+
+
+@dataclass(frozen=True)
+class MLP(Module):
+    """Plain MLP with configurable hidden widths and activation."""
+    dims: Sequence[int]                      # [in, h1, ..., out]
+    act: Callable = jax.nn.relu
+    use_bias: bool = True
+    final_act: bool = False
+    layers: tuple = field(init=False)
+
+    def __post_init__(self):
+        ls = tuple(
+            Linear(self.dims[i], self.dims[i + 1], use_bias=self.use_bias)
+            for i in range(len(self.dims) - 1)
+        )
+        object.__setattr__(self, "layers", ls)
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.layers))
+        return {f"l{i}": l.init(k) for i, (l, k) in enumerate(zip(self.layers, keys))}
+
+    def __call__(self, params, x):
+        n = len(self.layers)
+        for i, l in enumerate(self.layers):
+            x = l(params[f"l{i}"], x)
+            if i < n - 1 or self.final_act:
+                x = self.act(x)
+        return x
+
+
+@dataclass(frozen=True)
+class SwiGLU(Module):
+    """Gated FFN: (silu(x W_g) * x W_u) W_d — the LLaMA-family FFN."""
+    dim: int
+    hidden: int
+
+    def init(self, key):
+        kg, ku, kd = jax.random.split(key, 3)
+        return {
+            "wg": init.lecun_normal(kg, (self.dim, self.hidden)),
+            "wu": init.lecun_normal(ku, (self.dim, self.hidden)),
+            "wd": init.lecun_normal(kd, (self.hidden, self.dim)),
+        }
+
+    def __call__(self, params, x):
+        g = jax.nn.silu(x @ params["wg"].astype(x.dtype))
+        u = x @ params["wu"].astype(x.dtype)
+        return (g * u) @ params["wd"].astype(x.dtype)

@@ -1,0 +1,50 @@
+"""Minimal functional module protocol.
+
+A Module is a plain Python object carrying *configuration only* (dims,
+dtypes, flags). Parameters live in explicit pytrees:
+
+    mod = Linear(4, 8)
+    params = mod.init(jax.random.key(0))
+    y = mod(params, x)
+
+This keeps everything jit/vmap/scan-friendly: stacking `vmap(mod.init)`
+over a key batch yields scanned per-layer parameters.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+PyTree = Any
+
+
+class Module:
+    """Base class; subclasses implement init(key)->params and __call__(params, ...)."""
+
+    def init(self, key: jax.Array) -> PyTree:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def __call__(self, params: PyTree, *args, **kwargs):  # pragma: no cover
+        raise NotImplementedError
+
+
+def param_count(params: PyTree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def tree_cast(params: PyTree, dtype) -> PyTree:
+    """Cast all floating leaves to `dtype` (leave ints alone)."""
+    import jax.numpy as jnp
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, params)

@@ -1,0 +1,168 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-sorted dispatch.
+
+Two execution paths:
+  * `moe_dense_oracle` — every token through every expert, exact; used by
+    tests as the reference (equals sorted dispatch when nothing is dropped).
+  * sorted dispatch — tokens argsorted by expert id, packed into a static
+    [E, C, d] buffer (capacity C), batched expert GEMMs, scattered back with
+    router weights. This is the MegaBlocks-style static-shape TPU mapping;
+    overflowing tokens are dropped (standard capacity-factor semantics).
+
+Expert parallelism over the `model` mesh axis lives in repro/dist/moe_ep.py
+(shard_map all_to_all dispatch); this module is the single-shard compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.module import Module
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                 # per-expert hidden
+    every: int = 1            # MoE layer every `every` layers (rest dense)
+    n_shared: int = 0         # shared experts always applied
+    capacity_factor: float = 1.25
+    # explicit expert parallelism: shard_map all_to_all dispatch over this
+    # mesh axis (None = let GSPMD infer — it falls back to all-gathers)
+    ep_axis: tuple = ()       # e.g. ("model",); dp axes for the token dim
+    dp_axes: tuple = ()       # e.g. ("data",) or ("pod", "data")
+
+
+@dataclass(frozen=True)
+class MoELayer(Module):
+    d_model: int
+    cfg: MoEConfig
+
+    def init(self, key):
+        E, d, h = self.cfg.num_experts, self.d_model, self.cfg.d_ff
+        kr, kg, ku, kd, ks = jax.random.split(key, 5)
+        p = {
+            "router": init.normal(0.006)(kr, (d, E)),
+            "wg": init.lecun_normal(kg, (E, d, h), batch_axes=(0,)),
+            "wu": init.lecun_normal(ku, (E, d, h), batch_axes=(0,)),
+            "wd": init.lecun_normal(kd, (E, h, d), batch_axes=(0,)),
+        }
+        if self.cfg.n_shared:
+            kgs, kus, kds = jax.random.split(ks, 3)
+            hs = self.cfg.d_ff * self.cfg.n_shared
+            p["shared"] = {
+                "wg": init.lecun_normal(kgs, (d, hs)),
+                "wu": init.lecun_normal(kus, (d, hs)),
+                "wd": init.lecun_normal(kds, (hs, d)),
+            }
+        return p
+
+    def route(self, params, x):
+        """x: [T, d] → (expert ids [T,k], weights [T,k], router probs [T,E])."""
+        logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, self.cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+        return ids, w.astype(x.dtype), probs
+
+    def __call__(self, params, x):
+        """x: [T, d] (caller flattens batch×seq). Returns (out [T,d], aux)."""
+        if self.cfg.ep_axis:
+            return self._ep_call(params, x)
+        T, d = x.shape
+        cfg = self.cfg
+        E, K = cfg.num_experts, cfg.top_k
+        ids, w, probs = self.route(params, x)
+
+        # ---- sorted capacity dispatch ----
+        # small token counts (decode steps) get dropless capacity: the
+        # buffer is tiny there and capacity drops would corrupt decoding.
+        if T <= 4 * E:
+            C = T * K
+        else:
+            C = max(1, int(T * K * cfg.capacity_factor / E))
+        e_flat = ids.reshape(-1)                                   # [T*K]
+        tok_flat = jnp.repeat(jnp.arange(T), K)                    # [T*K]
+        w_flat = w.reshape(-1)
+        order = jnp.argsort(e_flat, stable=True)
+        e_sorted = e_flat[order]
+        tok_sorted = tok_flat[order]
+        w_sorted = w_flat[order]
+        # position of each entry within its expert segment
+        seg_pos = _segment_positions(e_sorted, E)
+        keep = seg_pos < C
+        slot = jnp.where(keep, e_sorted * C + seg_pos, E * C)      # E*C = trash slot
+        # gather tokens into [E*C+1, d] buffer
+        buf = jnp.zeros((E * C + 1, d), x.dtype)
+        buf = buf.at[slot].set(jnp.where(keep[:, None], x[tok_sorted], 0))
+        xe = buf[: E * C].reshape(E, C, d)
+        # expert FFN (SwiGLU) as batched GEMMs
+        g = jax.nn.silu(jnp.einsum("ecd,edh->ech", xe, params["wg"].astype(x.dtype)))
+        u = jnp.einsum("ecd,edh->ech", xe, params["wu"].astype(x.dtype))
+        ye = jnp.einsum("ech,ehd->ecd", g * u, params["wd"].astype(x.dtype))
+        # scatter back, weighted
+        y_flat = ye.reshape(E * C, d)
+        contrib = jnp.where(keep[:, None], y_flat[jnp.minimum(slot, E * C - 1)]
+                            * w_sorted[:, None], 0)
+        out = jnp.zeros_like(x).at[tok_sorted].add(contrib)
+
+        if cfg.n_shared:
+            sp = params["shared"]
+            sg = jax.nn.silu(x @ sp["wg"].astype(x.dtype))
+            su = x @ sp["wu"].astype(x.dtype)
+            out = out + (sg * su) @ sp["wd"].astype(x.dtype)
+
+        aux = load_balance_loss(probs, ids, E)
+        return out, aux
+
+    def _ep_call(self, params, x):
+        """Explicit expert parallelism: shard_map all_to_all dispatch over
+        cfg.ep_axis (tokens sharded over cfg.dp_axes). Wire bytes are
+        2 x tokens x d instead of GSPMD's all-gather fallbacks."""
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.moe_ep import moe_ep_apply
+        cfg = self.cfg
+        ep = cfg.ep_axis[0]
+        p_specs = {"router": P(), "wg": P(ep), "wu": P(ep), "wd": P(ep)}
+        if cfg.n_shared:
+            p_specs["shared"] = {k: P() for k in ("wg", "wu", "wd")}
+        fn = jax.shard_map(
+            lambda p, xx: moe_ep_apply(self, p, xx, ep),
+            in_specs=(p_specs, P(cfg.dp_axes, None)),
+            out_specs=P(cfg.dp_axes, None), check_vma=False)
+        return fn(params, x), jnp.zeros((), jnp.float32)
+
+    def dense_oracle(self, params, x):
+        """Exact MoE (no capacity drops): all experts, weighted combine."""
+        ids, w, probs = self.route(params, x)
+        g = jax.nn.silu(jnp.einsum("td,edh->teh", x, params["wg"].astype(x.dtype)))
+        u = jnp.einsum("td,edh->teh", x, params["wu"].astype(x.dtype))
+        y = jnp.einsum("teh,ehd->ted", g * u, params["wd"].astype(x.dtype))
+        mask = jax.nn.one_hot(ids, self.cfg.num_experts, dtype=x.dtype)  # [T,K,E]
+        comb = jnp.einsum("tke,tk->te", mask, w)
+        out = jnp.einsum("ted,te->td", y, comb)
+        if self.cfg.n_shared:
+            sp = params["shared"]
+            sg = jax.nn.silu(x @ sp["wg"].astype(x.dtype))
+            su = x @ sp["wu"].astype(x.dtype)
+            out = out + (sg * su) @ sp["wd"].astype(x.dtype)
+        return out, load_balance_loss(probs, ids, self.cfg.num_experts)
+
+
+def _segment_positions(sorted_ids: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    """Rank of each element within its (sorted) segment: 0,1,2,... per id."""
+    n = sorted_ids.shape[0]
+    counts = jnp.zeros((num_segments,), jnp.int32).at[sorted_ids].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    return jnp.arange(n, dtype=jnp.int32) - starts[sorted_ids]
+
+
+def load_balance_loss(probs: jnp.ndarray, ids: jnp.ndarray, E: int) -> jnp.ndarray:
+    """Switch-style aux loss: E * <f_e . p_e> over experts."""
+    T = probs.shape[0]
+    f = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (T * ids.shape[-1])
+    p = jnp.mean(probs, axis=0)
+    return E * jnp.sum(f * p)

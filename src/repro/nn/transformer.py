@@ -1,0 +1,236 @@
+"""Decoder-only transformer (dense + MoE) with scan-over-layers.
+
+Layers are grouped into repeating patterns so MoE-every-N archs scan over
+homogeneous "groups" (e.g. llama4-maverick: [dense, moe] × 24). Parameters
+for all groups are stacked on a leading axis and consumed by jax.lax.scan —
+this keeps the HLO size O(1) in depth (critical for the 88-layer config and
+for CPU compile times in the dry-run).
+
+The loss head is chunked (scan over sequence chunks, rematerialized) so the
+[tokens, vocab] logits tensor is never fully materialized — with 202k vocab
+that tensor would otherwise dominate memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.attention import GQAAttention
+from repro.nn.layers import Embedding, RMSNorm, SwiGLU
+from repro.nn.moe import MoEConfig, MoELayer
+from repro.nn.module import Module
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 500000.0
+    dtype: str = "bfloat16"
+    loss_chunks: int = 8          # sequence chunks for the CE loss head
+    remat: bool = True
+    q_chunk: int = 256            # chunked-attention block (0 = full)
+    act_pspec: Optional[tuple] = None  # residual-stream sharding constraint
+                                       # e.g. (("data",), None, "model")
+
+    @property
+    def pattern(self) -> tuple[str, ...]:
+        """Block pattern within one scan group."""
+        if self.moe is None:
+            return ("dense",)
+        every = self.moe.every
+        return tuple(["dense"] * (every - 1) + ["moe"])
+
+    @property
+    def n_groups(self) -> int:
+        p = len(self.pattern)
+        assert self.n_layers % p == 0, (self.n_layers, p)
+        return self.n_layers // p
+
+
+@dataclass(frozen=True)
+class Block(Module):
+    """Pre-norm block: x += attn(norm(x)); x += ffn(norm(x))."""
+    cfg: TransformerConfig
+    kind: str  # "dense" | "moe"
+
+    def __post_init__(self):
+        c = self.cfg
+        object.__setattr__(self, "attn", GQAAttention(
+            c.d_model, c.n_heads, c.n_kv, c.head_dim, c.rope_theta,
+            q_chunk=c.q_chunk))
+        object.__setattr__(self, "norm1", RMSNorm(c.d_model))
+        object.__setattr__(self, "norm2", RMSNorm(c.d_model))
+        if self.kind == "moe":
+            object.__setattr__(self, "ffn", MoELayer(c.d_model, c.moe))
+        else:
+            object.__setattr__(self, "ffn", SwiGLU(c.d_model, c.d_ff))
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {"norm1": self.norm1.init(k1), "attn": self.attn.init(k2),
+                "norm2": self.norm2.init(k3), "ffn": self.ffn.init(k4)}
+
+    def __call__(self, params, x, positions):
+        h = self.attn(params["attn"], self.norm1(params["norm1"], x), positions)
+        x = x + h
+        h_in = self.norm2(params["norm2"], x)
+        if self.kind == "moe":
+            B, S, d = h_in.shape
+            h, aux = self.ffn(params["ffn"], h_in.reshape(B * S, d))
+            h = h.reshape(B, S, d)
+        else:
+            h, aux = self.ffn(params["ffn"], h_in), jnp.zeros((), jnp.float32)
+        return x + h, aux
+
+    def decode(self, params, x, ck, cv, cache_len):
+        h, ck, cv = self.attn.decode(
+            params["attn"], self.norm1(params["norm1"], x), ck, cv, cache_len)
+        x = x + h
+        h_in = self.norm2(params["norm2"], x)
+        if self.kind == "moe":
+            B, S, d = h_in.shape
+            h, _ = self.ffn(params["ffn"], h_in.reshape(B * S, d))
+            h = h.reshape(B, S, d)
+        else:
+            h = self.ffn(params["ffn"], h_in)
+        return x + h, ck, cv
+
+
+@dataclass(frozen=True)
+class TransformerLM(Module):
+    cfg: TransformerConfig
+
+    def __post_init__(self):
+        blocks = tuple(Block(self.cfg, kind) for kind in self.cfg.pattern)
+        object.__setattr__(self, "blocks", blocks)
+        object.__setattr__(self, "embed", Embedding(self.cfg.vocab, self.cfg.d_model))
+        object.__setattr__(self, "final_norm", RMSNorm(self.cfg.d_model))
+
+    def init(self, key):
+        c = self.cfg
+        ke, kb, kh = jax.random.split(key, 3)
+        gkeys = jax.random.split(kb, c.n_groups)
+
+        def one_group(k):
+            ks = jax.random.split(k, len(self.blocks))
+            return {f"b{i}": b.init(ks[i]) for i, b in enumerate(self.blocks)}
+
+        return {
+            "embed": self.embed.init(ke),
+            "groups": jax.vmap(one_group)(gkeys),   # stacked [n_groups, ...]
+            "final_norm": self.final_norm.init(kh),
+            "lm_head": init.lecun_normal(kh, (c.d_model, c.vocab)),
+        }
+
+    # ---- forward ----
+    def hidden_states(self, params, tokens):
+        """tokens [B,S] -> final hidden [B,S,d]."""
+        c = self.cfg
+        dtype = jnp.dtype(c.dtype)
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = self.embed(params["embed"], tokens).astype(dtype)
+
+        def group_fn(x, gp):
+            aux = jnp.zeros((), jnp.float32)
+            for i, b in enumerate(self.blocks):
+                x, a = b(gp[f"b{i}"], x, positions)
+                aux = aux + a
+            if c.act_pspec is not None:
+                from jax.sharding import PartitionSpec
+                x = jax.lax.with_sharding_constraint(
+                    x, PartitionSpec(*c.act_pspec))
+            return x, aux
+
+        if c.remat:
+            group_fn = jax.checkpoint(group_fn,
+                                      policy=jax.checkpoint_policies.nothing_saveable)
+        x, auxs = jax.lax.scan(lambda h, gp: group_fn(h, gp), x, params["groups"])
+        x = self.final_norm(params["final_norm"], x)
+        return x, jnp.sum(auxs)
+
+    def loss(self, params, tokens, labels):
+        """Mean next-token CE (labels = tokens shifted by caller; -100 = pad)."""
+        c = self.cfg
+        x, aux = self.hidden_states(params, tokens)
+        B, S, d = x.shape
+        n_chunks = min(c.loss_chunks, S)
+        while S % n_chunks:
+            n_chunks -= 1
+        xc = x.reshape(B, n_chunks, S // n_chunks, d).swapaxes(0, 1)
+        lc = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+        head = params["lm_head"]
+
+        @jax.checkpoint
+        def chunk_loss(carry, xl):
+            xi, li = xl
+            logits = (xi @ head.astype(xi.dtype)).astype(jnp.float32)
+            valid = li >= 0
+            li = jnp.maximum(li, 0)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+            ce = jnp.where(valid, logz - gold, 0.0)
+            return (carry[0] + jnp.sum(ce), carry[1] + jnp.sum(valid)), None
+
+        (tot, cnt), _ = jax.lax.scan(chunk_loss, (0.0, 0), (xc, lc))
+        lb = 0.01 * aux if c.moe is not None else 0.0
+        return tot / jnp.maximum(cnt, 1) + lb
+
+    def logits(self, params, tokens):
+        x, _ = self.hidden_states(params, tokens)
+        return (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+
+    # ---- decode ----
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        c = self.cfg
+        dtype = dtype or jnp.dtype(c.dtype)
+        shape = (c.n_groups, len(self.blocks), batch, max_len, c.n_kv, c.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "len": jnp.zeros((batch,), jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens [B,1] -> (logits [B,1,vocab], new cache).
+
+        The cache rides in the scan CARRY and is updated with per-layer
+        dynamic_update_slice — one aliased buffer instead of the xs/ys
+        double-buffer pair (§Perf cell B iteration 3: the ys-stacking form
+        makes XLA shuffle two full cache-sized buffers per step)."""
+        c = self.cfg
+        dtype = jnp.dtype(c.dtype)
+        x = self.embed(params["embed"], tokens).astype(dtype)
+        cache_len = cache["len"]
+
+        def group_fn(carry, xs):
+            x, ck_all, cv_all, gi = carry
+            gp = xs
+            for i, b in enumerate(self.blocks):
+                ck = ck_all[gi, i]
+                cv = cv_all[gi, i]
+                x, nk, nv = b.decode(gp[f"b{i}"], x, ck, cv, cache_len)
+                ck_all = jax.lax.dynamic_update_slice(
+                    ck_all, nk[None, None], (gi, i, 0, 0, 0, 0))
+                cv_all = jax.lax.dynamic_update_slice(
+                    cv_all, nv[None, None], (gi, i, 0, 0, 0, 0))
+            return (x, ck_all, cv_all, gi + 1), None
+
+        (x, nk, nv, _), _ = jax.lax.scan(
+            group_fn, (x, cache["k"], cache["v"], jnp.asarray(0, jnp.int32)),
+            params["groups"])
+        x = self.final_norm(params["final_norm"], x)
+        logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+        new_cache = {"k": nk, "v": nv, "len": cache_len + 1}
+        return logits, new_cache

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adam, adamax, sgd, clip_by_global_norm, apply_updates  # noqa: F401
+from repro.optim.schedules import cosine_decay, warmup_cosine, constant  # noqa: F401

@@ -1,0 +1,99 @@
+"""Optimizers as (init, update) pairs over param pytrees (optax-style API,
+built from scratch — optax is not available in this environment).
+
+update(opt_state, grads, params, lr) -> (updates, new_state); caller applies
+`params + updates` via apply_updates. Optimizer state is kept in f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(state, grads, params, lr):
+        g = _f32(grads)
+        if momentum == 0.0:
+            return jax.tree.map(lambda gi: -lr * gi, g), state
+        mu = jax.tree.map(lambda m, gi: momentum * m + gi, state["mu"], g)
+        if nesterov:
+            upd = jax.tree.map(lambda m, gi: -lr * (momentum * m + gi), mu, g)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, mu)
+        return upd, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(state, grads, params, lr):
+        g = _f32(grads)
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi, state["m"], g)
+        v = jax.tree.map(lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, state["v"], g)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(mi, vi, pi):
+            step = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * pi.astype(jnp.float32)
+            return (-lr * step).astype(pi.dtype)
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adamax(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "u": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(state, grads, params, lr):
+        g = _f32(grads)
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi, state["m"], g)
+        u = jax.tree.map(lambda ui, gi: jnp.maximum(b2 * ui, jnp.abs(gi)), state["u"], g)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda mi, ui, pi: (-lr * (mi / bc1) / (ui + eps)).astype(pi.dtype),
+            m, u, params)
+        return upd, {"m": m, "u": u, "t": t}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), grads), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

@@ -1,0 +1,27 @@
+"""Learning-rate schedules as step -> lr callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, steps: int, final_frac: float = 0.1):
+    def f(step):
+        warm = lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+        t = jnp.clip((step - warmup) / jnp.maximum(steps - warmup, 1), 0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f

@@ -1,0 +1,3 @@
+"""§Perf hillclimb experiments: optimized step variants per target cell,
+measured with the same lower+compile+analyze loop as the baseline dry-run.
+"""

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-variant runner: lower+compile an optimized step variant and record
+its roofline terms next to the baseline.
+
+    PYTHONPATH=src python -m repro.perf.run --variant pna_ogb_locality
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import analyze_compiled
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+def run_variant(name: str, multi_pod: bool = False, save: bool = True):
+    from repro.perf import variants
+    build = getattr(variants, name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = build(mesh)
+    t0 = time.perf_counter()
+    with mesh, jax.set_mesh(mesh):
+        jitted = jax.jit(spec["step"], in_shardings=spec.get("in_shardings"),
+                         donate_argnums=spec.get("donate_argnums", ()))
+        lowered = jitted.lower(*spec["args"])
+        compiled = lowered.compile()
+    result = {"variant": name,
+              "mesh": "multi" if multi_pod else "single",
+              "n_devices": int(mesh.size),
+              "compile_s": round(time.perf_counter() - t0, 2),
+              "baseline": spec.get("baseline", "")}
+    result.update(analyze_compiled(compiled, mesh))
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        out = RESULTS_DIR / f"{name}__{result['mesh']}.json"
+        out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    args = ap.parse_args()
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for m in meshes:
+        r = run_variant(args.variant, multi_pod=m)
+        print(f"[ok] {args.variant} x {r['mesh']}: "
+              f"compile={r['compile_s']}s peak={r.get('peak_memory_gb')}GB "
+              f"flops={r.get('hlo_gflops')}G mem={r.get('hlo_bytes_gb')}GB "
+              f"coll={r.get('collective_gb')}GB "
+              f"t=({r.get('t_compute_s')},{r.get('t_memory_s')},"
+              f"{r.get('t_collective_s')}) bound={r.get('bottleneck')}")
+
+
+if __name__ == "__main__":
+    main()

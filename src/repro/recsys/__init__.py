@@ -1,0 +1,8 @@
+"""RecSys substrate: sparse embedding tables + two-tower retrieval.
+
+JAX has no native EmbeddingBag and no CSR sparse — the EmbeddingBag here is
+built from jnp.take + segment_sum (as the assignment requires); the Pallas
+fused version lives in kernels/embedding_bag.
+"""
+from repro.recsys.embedding_bag import EmbeddingBag  # noqa: F401
+from repro.recsys.two_tower import TwoTower, TwoTowerConfig  # noqa: F401

@@ -1,0 +1,62 @@
+"""EmbeddingBag: ragged multi-hot gather + segment reduce.
+
+Input is a padded [B, max_ids] id matrix with -1 padding (equivalent to the
+offsets form; the data pipeline produces this layout). Modes: sum / mean.
+
+The lookup is the recsys hot path (taxonomy §B.6): jnp.take over a
+[vocab, dim] table then per-row reduce. Row-sharded tables route lookups
+with all_to_all in repro/dist/embedding_sharding.py; the fused TPU kernel is
+kernels/embedding_bag.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+from repro.nn.module import Module
+
+
+@dataclass(frozen=True)
+class EmbeddingBag(Module):
+    vocab: int
+    dim: int
+    mode: str = "mean"          # "sum" | "mean"
+    init_std: float = 0.01
+
+    def init(self, key):
+        return {"table": init.normal(self.init_std)(key, (self.vocab, self.dim))}
+
+    def __call__(self, params, ids):
+        """ids: [B, max_ids] int32, -1 = padding. Returns [B, dim]."""
+        return embedding_bag_lookup(params["table"], ids, self.mode)
+
+
+def embedding_bag_lookup(table: jnp.ndarray, ids: jnp.ndarray,
+                         mode: str = "mean") -> jnp.ndarray:
+    valid = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    emb = jnp.take(table, safe.reshape(-1), axis=0)
+    emb = emb.reshape(ids.shape + (table.shape[1],))
+    emb = jnp.where(valid[..., None], emb, 0.0)
+    s = jnp.sum(emb, axis=-2)
+    if mode == "sum":
+        return s
+    n = jnp.sum(valid, axis=-1, keepdims=True).astype(s.dtype)
+    return s / jnp.maximum(n, 1.0)
+
+
+def embedding_bag_segment(table: jnp.ndarray, flat_ids: jnp.ndarray,
+                          segment_ids: jnp.ndarray, n_bags: int,
+                          mode: str = "mean") -> jnp.ndarray:
+    """Offsets-form EmbeddingBag: flat id list + bag segment ids
+    (torch nn.EmbeddingBag semantics; used by the kernel oracle)."""
+    emb = jnp.take(table, flat_ids, axis=0)
+    s = jax.ops.segment_sum(emb, segment_ids, n_bags)
+    if mode == "sum":
+        return s
+    n = jax.ops.segment_sum(jnp.ones_like(flat_ids, table.dtype),
+                            segment_ids, n_bags)
+    return s / jnp.maximum(n, 1.0)[:, None]

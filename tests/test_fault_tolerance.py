@@ -1,0 +1,135 @@
+"""Checkpoint/restore (incl. mid-window in-flight state), elastic rescale,
+straggler planning."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import windowing as win
+from repro.core.oracle import build_snapshot, oracle_embeddings
+from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.elastic import rescale_parts, shard_views
+from repro.ft.stragglers import StragglerMitigator, speculative_chunks
+from repro.graph.sage import GraphSAGE
+
+
+def make_pipe(window=None, seed=0, n_nodes=40):
+    model = GraphSAGE((6, 12, 12))
+    params = model.init(jax.random.key(0))
+    cfg = PipelineConfig(n_parts=4, node_cap=64, edge_cap=256, repl_cap=256,
+                         feat_cap=256, edge_tick_cap=64, max_nodes=n_nodes,
+                         window=window or win.WindowConfig(kind=win.SESSION,
+                                                           interval=4),
+                         seed=seed)
+    return model, params, D3Pipeline(model, params, cfg)
+
+
+def make_stream(seed=0, n_nodes=40, n_edges=120, d=6):
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, n_nodes, n_edges),
+                      rng.integers(0, n_nodes, n_edges)], 1)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    feats = {v: rng.normal(size=d).astype(np.float32) for v in range(n_nodes)}
+    return edges, feats
+
+
+def test_checkpoint_restart_mid_stream(tmp_path):
+    """Kill the pipeline mid-stream (with windows pending = in-flight
+    events) and restore into a FRESH pipeline; the continued run must equal
+    the uninterrupted run AND the static oracle."""
+    edges, feats = make_stream()
+    half = len(edges) // 2
+
+    model, params, pipe = make_pipe()
+    pipe.run_stream(edges[:half], feats, tick_edges=16)
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    mgr.save_pipeline(step=1, pipe=pipe)     # windows still pending here
+
+    # "crash": build a brand-new pipeline and restore
+    _, _, pipe2 = make_pipe()
+    got = mgr.restore_pipeline(pipe2)
+    assert got == 1
+    pipe2.run_stream(edges[half:], feats, tick_edges=16)
+    pipe2.flush(max_ticks=128)
+
+    g, _ = build_snapshot(edges, feats, 6, 40)
+    ref = np.asarray(oracle_embeddings(model, params, g))
+    emb = pipe2.embeddings()
+    touched = set(np.unique(edges).tolist())   # isolated vertices never emit
+    assert len(emb) == len(touched)
+    for vid, vec in emb.items():
+        np.testing.assert_allclose(vec, ref[vid], rtol=1e-4, atol=1e-4)
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"a": np.arange(4)})
+    assert mgr.latest().step == 4
+    assert len(list(tmp_path.glob("*.ckpt"))) == 2
+    tree, step = mgr.restore({"a": np.zeros(4, np.int64)})
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.arange(4))
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=True)
+    mgr.save(7, {"x": np.ones((8, 8))})
+    mgr.wait()
+    tree, step = mgr.restore({"x": np.zeros((8, 8))})
+    assert step == 7
+
+
+def test_rescale_plan_properties():
+    plan = rescale_parts(8, 16, 64)
+    # every logical part lands on a valid new shard; moves are minimal-ish
+    for lp, old, new in plan.moves:
+        assert 0 <= new < 16
+    # scale-up never leaves a new shard empty
+    views = shard_views(64, 16, 64)
+    assert all(len(v) > 0 for v in views)
+    # scale-down to 5 (non-divisor) still covers all shards
+    views5 = shard_views(64, 5, 64)
+    assert all(len(v) > 0 for v in views5)
+    assert sum(len(v) for v in views5) == 64
+
+
+def test_failure_recovery_rescale(tmp_path):
+    """Checkpoint, 'lose a machine' (parallelism 2 -> 1), restore, verify
+    exactness — the Alg. 5 remap moves keyed state without repartitioning."""
+    edges, feats = make_stream(seed=2)
+    model, params, pipe = make_pipe(seed=2)
+    pipe.cfg.base_parallelism = 2
+    pipe.run_stream(edges[:60], feats, tick_edges=16)
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_pipeline(step=5, pipe=pipe)
+
+    _, _, pipe2 = make_pipe(seed=2)
+    from repro.ft.elastic import simulate_failure_and_recover
+    step, plan = simulate_failure_and_recover(pipe2, mgr, 5,
+                                              new_parallelism=1)
+    assert step == 5 and pipe2.cfg.base_parallelism == 1
+    pipe2.run_stream(edges[60:], feats, tick_edges=16)
+    pipe2.flush(max_ticks=128)
+    g, _ = build_snapshot(edges, feats, 6, 40)
+    ref = np.asarray(oracle_embeddings(model, params, g))
+    for vid, vec in pipe2.embeddings().items():
+        np.testing.assert_allclose(vec, ref[vid], rtol=1e-4, atol=1e-4)
+
+
+def test_straggler_detection_and_steal():
+    m = StragglerMitigator(n_shards=4, patience=2)
+    busy = np.array([10, 10, 10, 100])
+    m.observe_tick(1.0, busy)          # establishes EWMA
+    for _ in range(3):
+        m.observe_tick(5.0, busy)      # shard 3 consistently slow
+    assert 3 in m.persistent_stragglers()
+    parts = [np.arange(i * 16, (i + 1) * 16) for i in range(4)]
+    overrides = m.plan_work_steal(parts, busy)
+    assert overrides and all(v != 3 for v in overrides.values())
+
+
+def test_speculative_chunks():
+    started = {0: 0.0, 1: 5.0, 2: 9.0}
+    assert speculative_chunks([0, 1, 2], started, now_s=10.0,
+                              timeout_s=4.0) == [0, 1]

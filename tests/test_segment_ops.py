@@ -1,0 +1,92 @@
+"""Property tests (hypothesis) for the masked segment reductions — the
+message-passing primitive everything sits on."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.graph import segment
+
+
+def _case(draw):
+    n_seg = draw(st.integers(1, 16))
+    n = draw(st.integers(1, 64))
+    data = draw(hnp.arrays(np.float32, (n, 4),
+                           elements=st.floats(-100, 100, width=32)))
+    ids = draw(hnp.arrays(np.int64, (n,),
+                          elements=st.integers(0, n_seg - 1)))
+    mask = draw(hnp.arrays(np.bool_, (n,)))
+    return n_seg, data, ids, mask
+
+
+case = st.composite(_case)()
+
+
+@given(case)
+@settings(max_examples=60, deadline=None)
+def test_segment_sum_matches_numpy(c):
+    n_seg, data, ids, mask = c
+    out = np.asarray(segment.segment_sum(jnp.asarray(data), jnp.asarray(ids),
+                                         n_seg, jnp.asarray(mask)))
+    ref = np.zeros((n_seg, 4), np.float32)
+    for i in range(len(ids)):
+        if mask[i]:
+            ref[ids[i]] += data[i]
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@given(case)
+@settings(max_examples=60, deadline=None)
+def test_segment_mean_max_min(c):
+    n_seg, data, ids, mask = c
+    out_mean = np.asarray(segment.segment_mean(
+        jnp.asarray(data), jnp.asarray(ids), n_seg, jnp.asarray(mask)))
+    out_max = np.asarray(segment.segment_max(
+        jnp.asarray(data), jnp.asarray(ids), n_seg, jnp.asarray(mask)))
+    out_min = np.asarray(segment.segment_min(
+        jnp.asarray(data), jnp.asarray(ids), n_seg, jnp.asarray(mask)))
+    for s in range(n_seg):
+        rows = data[(ids == s) & mask]
+        if len(rows):
+            np.testing.assert_allclose(out_mean[s], rows.mean(0), rtol=1e-4,
+                                       atol=1e-4)
+            np.testing.assert_allclose(out_max[s], rows.max(0), rtol=1e-4,
+                                       atol=1e-4)
+            np.testing.assert_allclose(out_min[s], rows.min(0), rtol=1e-4,
+                                       atol=1e-4)
+        else:
+            np.testing.assert_array_equal(out_mean[s], 0)
+            np.testing.assert_array_equal(out_max[s], 0)
+            np.testing.assert_array_equal(out_min[s], 0)
+
+
+@given(case)
+@settings(max_examples=40, deadline=None)
+def test_segment_std_synopsis_invariance(c):
+    """std must be computable from the invertible synopsis (sum, sumsq, n) —
+    identical under any permutation of rows (streaming commutativity)."""
+    n_seg, data, ids, mask = c
+    perm = np.random.default_rng(0).permutation(len(ids))
+    a = np.asarray(segment.segment_std(jnp.asarray(data), jnp.asarray(ids),
+                                       n_seg, jnp.asarray(mask)))
+    b = np.asarray(segment.segment_std(jnp.asarray(data[perm]),
+                                       jnp.asarray(ids[perm]), n_seg,
+                                       jnp.asarray(mask[perm])))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+@given(case)
+@settings(max_examples=40, deadline=None)
+def test_segment_softmax_normalized(c):
+    n_seg, data, ids, mask = c
+    scores = data[:, 0]
+    w = np.asarray(segment.segment_softmax(jnp.asarray(scores),
+                                           jnp.asarray(ids), n_seg,
+                                           jnp.asarray(mask)))
+    sums = np.zeros(n_seg)
+    for i in range(len(ids)):
+        if mask[i]:
+            sums[ids[i]] += w[i]
+    for s in range(n_seg):
+        if ((ids == s) & mask).any():
+            np.testing.assert_allclose(sums[s], 1.0, rtol=1e-3)
