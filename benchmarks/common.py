@@ -36,7 +36,8 @@ def make_case(seed=0, n_nodes=400, n_edges=2000, alpha=1.3) -> StreamCase:
 
 def make_pipeline(case: StreamCase, n_parts=8, window=None,
                   partitioner="hdrf", base_parallelism=2, explosion=1.0,
-                  node_cap=None, edge_cap=None, seed=0):
+                  node_cap=None, edge_cap=None, feat_cap=2048,
+                  edge_tick_cap=1024, seed=0):
     model = GraphSAGE((D_IN, D_HID, D_HID))
     params = model.init(jax.random.key(0))
     cfg = PipelineConfig(
@@ -44,7 +45,7 @@ def make_pipeline(case: StreamCase, n_parts=8, window=None,
         node_cap=node_cap or max(128, 4 * case.n_nodes // n_parts),
         edge_cap=edge_cap or max(256, 4 * len(case.edges) // n_parts),
         repl_cap=max(256, 2 * case.n_nodes),
-        feat_cap=2048, edge_tick_cap=1024,
+        feat_cap=feat_cap, edge_tick_cap=edge_tick_cap,
         window=window or win.WindowConfig(kind=win.STREAMING),
         partitioner=partitioner, base_parallelism=base_parallelism,
         explosion=explosion, max_nodes=case.n_nodes, seed=seed)

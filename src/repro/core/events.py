@@ -105,9 +105,14 @@ def empty_feat_batch(cap: int, d: int) -> FeatBatch:
                      valid=jnp.zeros((cap,), bool))
 
 
-def vertex_batch_from_numpy(rows: dict, cap: int) -> VertexBatch:
+def vertex_batch_from_numpy(rows: dict, cap: int,
+                            device: bool = True) -> VertexBatch:
+    """device=False keeps numpy leaves — the super-tick staging path stacks
+    T batches on host and ships ONE transfer per field, so materializing
+    each tick's batch on device first would round-trip every row twice."""
     n = len(rows["part"])
     assert n <= cap, f"vertex batch overflow: {n} > {cap}"
+    conv = jnp.asarray if device else (lambda a: a)
     p = np.zeros((cap,), np.int32)
     s = np.zeros((cap,), np.int32)
     m = np.zeros((cap,), bool)
@@ -116,18 +121,20 @@ def vertex_batch_from_numpy(rows: dict, cap: int) -> VertexBatch:
     s[:n] = rows["slot"]
     m[:n] = rows["is_master"]
     v[:n] = True
-    return VertexBatch(part=jnp.asarray(p), slot=jnp.asarray(s),
-                       is_master=jnp.asarray(m), valid=jnp.asarray(v))
+    return VertexBatch(part=conv(p), slot=conv(s),
+                       is_master=conv(m), valid=conv(v))
 
 
-def edge_batch_from_numpy(rows: dict, cap: int) -> EdgeBatch:
+def edge_batch_from_numpy(rows: dict, cap: int,
+                          device: bool = True) -> EdgeBatch:
     n = len(rows["part"])
     assert n <= cap, f"edge batch overflow: {n} > {cap}"
+    conv = jnp.asarray if device else (lambda a: a)
 
     def pad(a, dtype=np.int32):
         out = np.zeros((cap,), dtype)
         out[:n] = a
-        return jnp.asarray(out)
+        return conv(out)
 
     valid = np.zeros((cap,), bool)
     valid[:n] = True
@@ -135,29 +142,49 @@ def edge_batch_from_numpy(rows: dict, cap: int) -> EdgeBatch:
                      src_slot=pad(rows["src_slot"]), dst_slot=pad(rows["dst_slot"]),
                      dst_master_part=pad(rows["dst_master_part"]),
                      dst_master_slot=pad(rows["dst_master_slot"]),
-                     valid=jnp.asarray(valid))
+                     valid=conv(valid))
 
 
-def repl_batch_from_numpy(rows: dict, cap: int) -> ReplBatch:
+def repl_batch_from_numpy(rows: dict, cap: int,
+                          device: bool = True) -> ReplBatch:
     n = len(rows["part"])
     assert n <= cap, f"repl batch overflow: {n} > {cap}"
+    conv = jnp.asarray if device else (lambda a: a)
 
     def pad(a):
         out = np.zeros((cap,), np.int32)
         out[:n] = a
-        return jnp.asarray(out)
+        return conv(out)
 
     valid = np.zeros((cap,), bool)
     valid[:n] = True
     return ReplBatch(part=pad(rows["part"]), repl_slot=pad(rows["repl_slot"]),
                      master_slot=pad(rows["master_slot"]),
                      rep_part=pad(rows["rep_part"]), rep_slot=pad(rows["rep_slot"]),
-                     valid=jnp.asarray(valid))
+                     valid=conv(valid))
 
 
-def feat_batch_from_numpy(parts, slots, feats, cap: int, d: int) -> FeatBatch:
+def stack_batches(batches):
+    """Stack same-capacity event batches along a new leading tick axis.
+
+    Host staging for the super-tick driver: T per-tick padded batches become
+    one pytree whose leaves carry a leading [T] axis, so `lax.scan` can slice
+    one micro-tick per step with zero host round-trips. Stacking happens in
+    numpy and ships each field to the device in ONE transfer instead of T.
+    All batches must share capacities (they do: capacities derive from the
+    PipelineConfig, not from the tick's payload).
+    """
+    assert batches, "cannot stack an empty batch list"
+    return jax.tree.map(
+        lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])),
+        *batches)
+
+
+def feat_batch_from_numpy(parts, slots, feats, cap: int, d: int,
+                          device: bool = True) -> FeatBatch:
     n = len(parts)
     assert n <= cap, f"feat batch overflow: {n} > {cap}"
+    conv = jnp.asarray if device else (lambda a: a)
     p = np.zeros((cap,), np.int32)
     s = np.zeros((cap,), np.int32)
     f = np.zeros((cap, d), np.float32)
@@ -167,5 +194,4 @@ def feat_batch_from_numpy(parts, slots, feats, cap: int, d: int) -> FeatBatch:
     if n:
         f[:n] = feats
     v[:n] = True
-    return FeatBatch(part=jnp.asarray(p), slot=jnp.asarray(s),
-                     feat=jnp.asarray(f), valid=jnp.asarray(v))
+    return FeatBatch(part=conv(p), slot=conv(s), feat=conv(f), valid=conv(v))

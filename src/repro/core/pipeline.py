@@ -8,6 +8,36 @@ batches. The device side runs one `layer_tick` per GraphStorage operator
 per tick; layer l's outbox is layer l+1's inbox (the unrolled computation
 graph). The final outbox materializes into a device-side embedding sink —
 the paper's "materialized embedding table that can be further queried".
+
+Two drivers share that device program:
+
+  * `tick()` — the per-tick REFERENCE path. One host round-trip per
+    micro-tick: rebuild numpy batches, launch L `layer_tick` jit calls,
+    block on the tick's stats. Simple to step through; use it for
+    debugging, for tests, and whenever events must be injected with
+    tick-level control flow on the host.
+
+  * `run_super_tick()` — the device-resident SUPER-TICK path (the paper's
+    always-on unrolled dataflow). The host pre-stages T micro-ticks of
+    padded batches (stacked along a leading T axis, one transfer per
+    field), then a single jitted `jax.lax.scan` advances all L layers
+    through all T ticks: topology application, every `layer_tick` body,
+    sink materialization, TickStats accumulation AND quiescence tracking
+    all run inside the scan. The `PipelineCarry` pytree is donated at the
+    jit boundary (`donate_argnums`) so topology/layer/sink buffers are
+    reused in place, and exactly ONE host sync happens per super-tick (the
+    summed stats + quiescence flag read). Same math, same event order —
+    the golden-equivalence test pins the two drivers to the static oracle.
+
+Staging model / constraints:
+  - batch capacities derive from PipelineConfig, so every tick's batches
+    have identical shapes and stack cleanly along T;
+  - the streaming partitioner stays host-side and sequential: staging T
+    ticks replays host partitioning for each tick up front, which is valid
+    because partitioner state never depends on device results;
+  - donation invalidates the previous device buffers — never hold
+    references to `pipe.topo`/`pipe.states`/`pipe.sink` across a
+    super-tick; re-read them from the pipeline object.
 """
 from __future__ import annotations
 
@@ -25,8 +55,9 @@ from repro.core import state as st
 from repro.core import windowing as win
 from repro.core.explosion import layer_parallelisms, physical_busy
 from repro.core.partitioner import StreamingPartitioner
-from repro.core.tick import layer_tick, has_work
-from repro.core.termination import TerminationCoordinator
+from repro.core.tick import (add_stats, has_work, layer_tick,
+                             layer_tick_body, zero_stats)
+from repro.core.termination import TerminationCoordinator, quiet_update
 
 
 @dataclass
@@ -86,14 +117,20 @@ class D3Pipeline:
         self.metrics = StreamMetrics(
             busy_logical=np.zeros(cfg.n_parts, np.int64))
         self._empty_feat = ev.empty_feat_batch(cfg.feat_cap, dims[0])
+        empty_rows = {k: np.zeros(0, np.int64) for k in
+                      ("part", "edge_slot", "src_slot", "dst_slot",
+                       "dst_master_part", "dst_master_slot")}
         self._empty_edges = ev.edge_batch_from_numpy(
-            {k: np.zeros(0, np.int64) for k in
-             ("part", "edge_slot", "src_slot", "dst_slot", "dst_master_part",
-              "dst_master_slot")}, cfg.edge_tick_cap)
+            empty_rows, cfg.edge_tick_cap)
+        # host-resident twin for super-tick staging (stacked before upload)
+        self._empty_edges_np = ev.edge_batch_from_numpy(
+            empty_rows, cfg.edge_tick_cap, device=False)
 
     # ------------------------------------------------------------ host side
     def _build_batches(self, edges: Optional[np.ndarray],
-                       feats: Optional[list]):
+                       feats: Optional[list], device: bool = True):
+        """One tick's padded batches. device=False keeps numpy leaves for
+        the super-tick staging path (stack first, upload once)."""
         cfg = self.cfg
         if edges is not None and len(edges):
             e_rows, r1, v1 = self.part.ingest_edges(edges)
@@ -117,16 +154,18 @@ class D3Pipeline:
         else:
             r_rows, v_rows = r2, v2
 
-        eb = (ev.edge_batch_from_numpy(e_rows, cfg.edge_tick_cap)
-              if e_rows is not None else self._empty_edges)
-        rb = ev.repl_batch_from_numpy(r_rows, max(2 * cfg.edge_tick_cap, 1))
+        eb = (ev.edge_batch_from_numpy(e_rows, cfg.edge_tick_cap, device)
+              if e_rows is not None
+              else (self._empty_edges if device else self._empty_edges_np))
+        rb = ev.repl_batch_from_numpy(r_rows, max(2 * cfg.edge_tick_cap, 1),
+                                      device)
         vb = ev.vertex_batch_from_numpy(v_rows, max(2 * cfg.edge_tick_cap +
-                                                    cfg.feat_cap, 1))
+                                                    cfg.feat_cap, 1), device)
         fb = ev.feat_batch_from_numpy(
             np.asarray(f_parts), np.asarray(f_slots),
             np.asarray(f_vecs, np.float32).reshape(len(f_parts), -1)
             if f_parts else np.zeros((0, 1)),
-            cfg.feat_cap, self.states[0].feat.shape[-1])
+            cfg.feat_cap, self.states[0].feat.shape[-1], device)
         return eb, rb, vb, fb
 
     # ---------------------------------------------------------- device side
@@ -158,9 +197,12 @@ class D3Pipeline:
         self._accumulate(stats_all, time.perf_counter() - t0)
         return stats_all
 
-    def _accumulate(self, stats_all, dt):
+    def _accumulate(self, stats_all, dt, ticks: int = 1):
+        """Fold per-layer stats into StreamMetrics — one tick's stats from
+        the per-tick driver, or `ticks` micro-ticks' summed stats from a
+        super-tick (the counters are additive either way)."""
         m = self.metrics
-        m.ticks += 1
+        m.ticks += ticks
         m.wall_seconds += dt
         for s in stats_all:
             m.reduce_msgs += int(s.reduce_msgs)
@@ -170,15 +212,13 @@ class D3Pipeline:
             m.busy_logical += np.asarray(s.busy, np.int64)
         m.emitted_total += int(stats_all[-1].emitted)
 
-    def run_stream(self, edges: np.ndarray, feats: dict,
-                   tick_edges: int = 256, feat_with_first_edge: bool = True):
-        """Stream an edge list (+ node features) through the pipeline.
-
-        feats: {vid: np.ndarray} — each vertex's feature event is injected
-        in the tick its first edge appears (feature stream aligned with the
-        topology stream, as in the paper's temporal edge-list datasets).
-        """
+    def _chunk_stream(self, edges, feats, tick_edges: int,
+                      feat_with_first_edge: bool):
+        """Cut an edge stream into micro-tick chunks + aligned feature
+        events (each vertex's feature fires in the tick of its first edge).
+        Shared by both drivers so their tick boundaries always agree."""
         seen = set()
+        e_chunks, f_chunks = [], []
         for lo in range(0, len(edges), tick_edges):
             chunk = edges[lo: lo + tick_edges]
             f_events = []
@@ -188,6 +228,117 @@ class D3Pipeline:
                     if u not in seen and u in feats:
                         seen.add(u)
                         f_events.append((u, feats[u]))
+            e_chunks.append(chunk)
+            f_chunks.append(f_events)
+        return e_chunks, f_chunks
+
+    # ------------------------------------------------------ super-tick path
+    def _stage_super_batches(self, edge_chunks, feat_chunks):
+        """Host staging: build T per-tick padded batches, stack along T.
+
+        Returns (fb, eb, rb, vb) pytrees with a leading [T] axis — the xs of
+        the super-tick scan. Host partitioner state advances tick by tick
+        exactly as the per-tick driver would have advanced it.
+        """
+        ebs, rbs, vbs, fbs = [], [], [], []
+        for edges_t, feats_t in zip(edge_chunks, feat_chunks):
+            eb, rb, vb, fb = self._build_batches(edges_t, feats_t,
+                                                 device=False)
+            ebs.append(eb)
+            rbs.append(rb)
+            vbs.append(vb)
+            fbs.append(fb)
+        return (ev.stack_batches(fbs), ev.stack_batches(ebs),
+                ev.stack_batches(rbs), ev.stack_batches(vbs))
+
+    def run_super_tick(self, edge_chunks=None, feat_chunks=None,
+                       T: Optional[int] = None, window=None,
+                       quiet0: int = 0):
+        """Advance T micro-ticks in ONE device program (`lax.scan`).
+
+        edge_chunks: list of per-tick edge arrays (or None entries);
+        feat_chunks: list of per-tick [(vid, vec), ...] lists (or None).
+        Shorter lists are padded with empty ticks up to T.
+        quiet0 seeds the consecutive-quiet-tick counter (flush chaining).
+
+        Returns (per-layer summed TickStats tuple, quiet_ticks) — the ONLY
+        host sync of the super-tick.
+        """
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        edge_chunks = list(edge_chunks) if edge_chunks is not None else []
+        feat_chunks = list(feat_chunks) if feat_chunks is not None else []
+        n = max(len(edge_chunks), len(feat_chunks), 1)
+        T = int(T) if T is not None else n
+        assert T >= n, f"T={T} smaller than the {n} staged ticks"
+        edge_chunks += [None] * (T - len(edge_chunks))
+        feat_chunks += [None] * (T - len(feat_chunks))
+        batches = self._stage_super_batches(edge_chunks, feat_chunks)
+
+        carry = st.PipelineCarry(
+            topo=self.topo, layers=tuple(self.states), sink=self.sink,
+            sink_seen=self.sink_seen, now=jnp.asarray(self.now, jnp.int32),
+            quiet=jnp.asarray(quiet0, jnp.int32))
+        final, stats_sum = _super_tick_scan(
+            tuple(self.layers), self.params, carry, batches,
+            window or cfg.window, cfg.feat_cap)
+        self.topo = final.topo
+        self.states = list(final.layers)
+        self.sink = final.sink
+        self.sink_seen = final.sink_seen
+        self.now += T
+        # the one host sync per super-tick: summed stats + quiet counter
+        host_stats, quiet = jax.device_get((stats_sum, final.quiet))
+        self._accumulate(host_stats, time.perf_counter() - t0, ticks=T)
+        return host_stats, int(quiet)
+
+    def run_stream_super(self, edges: np.ndarray, feats: dict,
+                         tick_edges: int = 256, super_ticks: int = 16,
+                         feat_with_first_edge: bool = True):
+        """`run_stream`, but T micro-ticks per device launch.
+
+        Cuts the stream into `tick_edges`-sized micro-ticks, groups them
+        into super-ticks of `super_ticks` ticks each (the tail group is
+        padded with empty ticks so every launch reuses one compiled scan).
+        """
+        e_chunks, f_chunks = self._chunk_stream(edges, feats, tick_edges,
+                                                feat_with_first_edge)
+        for lo in range(0, len(e_chunks), super_ticks):
+            self.run_super_tick(e_chunks[lo: lo + super_ticks],
+                                f_chunks[lo: lo + super_ticks],
+                                T=super_ticks)
+        return self
+
+    def flush_super(self, max_ticks: int = 64, T: int = 8,
+                    drain: bool = True) -> int:
+        """`flush`, super-tick style: empty ticks until device quiescence.
+
+        The consecutive-quiet counter lives in the scan carry; the host
+        reads it once per super-tick instead of once per tick."""
+        term = TerminationCoordinator()
+        override = win.WindowConfig(kind=win.STREAMING) if drain else None
+        ran = 0
+        while ran < max_ticks:
+            step = min(T, max_ticks - ran)
+            _, quiet = self.run_super_tick(T=step, window=override,
+                                           quiet0=term._quiet)
+            ran += step
+            if term.observe_flag(quiet):
+                return ran
+        raise RuntimeError("pipeline failed to terminate "
+                           f"within {max_ticks} flush ticks")
+
+    def run_stream(self, edges: np.ndarray, feats: dict,
+                   tick_edges: int = 256, feat_with_first_edge: bool = True):
+        """Stream an edge list (+ node features) through the pipeline.
+
+        feats: {vid: np.ndarray} — each vertex's feature event is injected
+        in the tick its first edge appears (feature stream aligned with the
+        topology stream, as in the paper's temporal edge-list datasets).
+        """
+        e_chunks, f_chunks = self._chunk_stream(edges, feats, tick_edges,
+                                                feat_with_first_edge)
+        for chunk, f_events in zip(e_chunks, f_chunks):
             self.tick(chunk, f_events)
         return self
 
@@ -228,10 +379,53 @@ class D3Pipeline:
                 for p in pars]
 
 
-@jax.jit
-def _sink_update(sink, seen, fb: ev.FeatBatch):
+def _sink_update_body(sink, seen, fb: ev.FeatBatch):
     P, N, d = sink.shape
     idx = jnp.where(fb.valid, fb.part * N + fb.slot, P * N)
     sink = sink.reshape(P * N, d).at[idx].set(fb.feat, mode="drop")
     seen = seen.reshape(P * N).at[idx].set(True, mode="drop")
     return sink.reshape(P, N, d), seen.reshape(P, N)
+
+
+_sink_update = jax.jit(_sink_update_body)
+
+
+@partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap"),
+         donate_argnums=(2,))
+def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
+                     wconf: win.WindowConfig, outbox_cap: int):
+    """T micro-ticks x L layers as one `lax.scan` — the super-tick body.
+
+    carry (donated): PipelineCarry — topology, per-layer states, sink and
+    the tick clock / quiet counter, all device-resident.
+    batches: (fb, eb, rb, vb) pytrees with leading [T] axis (scan xs).
+    Returns (final carry, per-layer TickStats summed over the T ticks).
+    """
+    n_parts = carry.topo.n_parts
+
+    def body(state, batch_t):
+        c, ssum = state
+        fb, eb, rb, vb = batch_t
+        topo = st.apply_vertex_batch(c.topo, vb)
+        topo = st.apply_repl_batch(topo, rb)
+        topo = st.apply_edge_batch(topo, eb)
+        inbox = fb
+        new_layers, stats_t = [], []
+        for li, layer in enumerate(layers):
+            ls, outbox, stats = layer_tick_body(
+                layer, params[f"l{li}"], topo, c.layers[li], inbox, eb, rb,
+                c.now, wconf, outbox_cap)
+            new_layers.append(ls)
+            stats_t.append(stats)
+            inbox = outbox
+        sink, sink_seen = _sink_update_body(c.sink, c.sink_seen, inbox)
+        quiet = quiet_update(c.quiet, new_layers, stats_t)
+        new_c = st.PipelineCarry(
+            topo=topo, layers=tuple(new_layers), sink=sink,
+            sink_seen=sink_seen, now=c.now + jnp.int32(1), quiet=quiet)
+        ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
+        return (new_c, ssum), None
+
+    zeros = tuple(zero_stats(n_parts) for _ in layers)
+    (final, stats_sum), _ = jax.lax.scan(body, (carry, zeros), batches)
+    return final, stats_sum

@@ -67,6 +67,24 @@ class LayerState:
         return self.feat.shape[2 - 1]  # [P, N, d] -> N
 
 
+@dataclass(frozen=True)
+class PipelineCarry:
+    """Everything the device mutates across micro-ticks, as ONE pytree.
+
+    The super-tick driver threads this through `lax.scan` and donates it at
+    the jit boundary (`donate_argnums`), so XLA reuses the topology/layer/
+    sink buffers in place instead of allocating a second copy per super-tick.
+    Donation-safety is why every field keeps a fixed shape and dtype:
+    `now`/`quiet` are int32 device scalars, never Python ints.
+    """
+    topo: TopoState
+    layers: tuple                 # tuple[LayerState, ...] (one per GNN layer)
+    sink: jnp.ndarray             # [P, N, d_out] materialized embeddings
+    sink_seen: jnp.ndarray        # [P, N] bool
+    now: jnp.ndarray              # int32 scalar — the tick clock
+    quiet: jnp.ndarray            # int32 scalar — consecutive quiescent ticks
+
+
 for _cls, _df in (
     (TopoState, ["e_src_slot", "e_dst_slot", "e_dst_mpart", "e_dst_mslot",
                  "e_valid", "r_master_slot", "r_rep_part", "r_rep_slot",
@@ -74,6 +92,7 @@ for _cls, _df in (
     (LayerState, ["feat", "has_feat", "x_sent", "has_sent", "agg", "agg_cnt",
                   "red_pending", "red_deadline", "fwd_pending", "fwd_deadline",
                   "cms", "last_touch"]),
+    (PipelineCarry, ["topo", "layers", "sink", "sink_seen", "now", "quiet"]),
 ):
     jax.tree_util.register_dataclass(_cls, data_fields=_df, meta_fields=[])
 

@@ -5,12 +5,35 @@ full sweep, every layer operator reports (a) no events received since the
 last collection and (b) no scheduled timers (window deadlines still
 pending). Used to compute bounded-run "runtime" (paper Fig. 4c) and to
 flush the pipeline before training (§4.3.1).
+
+Two observation paths:
+  * per-tick (host): `observe` pulls each tick's stats to the host — one
+    blocking sync per tick, fine for the reference driver;
+  * super-tick (device): `quiet_update` advances a consecutive-quiet-tick
+    counter INSIDE the `lax.scan` body, and the driver reads the resulting
+    quiescence flag exactly once per super-tick (`observe_flag`).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core.tick import has_work
+
+
+def quiet_update(quiet: jnp.ndarray, layer_states, tick_stats) -> jnp.ndarray:
+    """One in-graph step of quiescence tracking.
+
+    quiet: int32 scalar — consecutive ticks with no movement and no timers.
+    Resets to 0 on any emission/reduce/broadcast or pending window state.
+    """
+    moved = jnp.zeros((), bool)
+    for s in tick_stats:
+        moved = moved | ((s.emitted + s.reduce_msgs + s.broadcast_msgs) > 0)
+    timers = jnp.zeros((), bool)
+    for ls in layer_states:
+        timers = timers | has_work(ls)
+    return jnp.where(moved | timers, jnp.int32(0),
+                     quiet + jnp.int32(1))
 
 
 class TerminationCoordinator:
@@ -27,6 +50,13 @@ class TerminationCoordinator:
             self._quiet = 0
         else:
             self._quiet += 1
+        return self._quiet >= self.quiet_sweeps
+
+    def observe_flag(self, quiet_ticks: int) -> bool:
+        """Feed a device-computed consecutive-quiet counter (one host read
+        per super-tick). The counter already accumulated within the scan, so
+        it replaces — not adds to — the host-side count."""
+        self._quiet = int(quiet_ticks)
         return self._quiet >= self.quiet_sweeps
 
     def reset(self):

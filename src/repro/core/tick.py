@@ -53,19 +53,37 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
+def zero_stats(n_parts: int) -> TickStats:
+    """Additive identity for TickStats — the summed carry of the super-tick
+    scan starts here; dtypes must match what the tick body emits (int32 on
+    the default 32-bit jnp) or the scan carry would be ill-typed."""
+    z = jnp.zeros((), jnp.int32)
+    return TickStats(broadcast_msgs=z, reduce_msgs=z, cross_part_msgs=z,
+                     emitted=z, dropped=z,
+                     busy=jnp.zeros((n_parts,), jnp.int32))
+
+
+def add_stats(a: TickStats, b: TickStats) -> TickStats:
+    return jax.tree.map(jnp.add, a, b)
+
+
 def _flat(part, slot, N):
     return part * N + slot
 
 
-@partial(jax.jit, static_argnames=("layer", "wconf", "outbox_cap"))
-def layer_tick(layer, params, topo: TopoState, ls: LayerState,
-               inbox: FeatBatch, new_edges: EdgeBatch, new_repl: ReplBatch,
-               now: jnp.ndarray, wconf: win.WindowConfig, outbox_cap: int):
-    """Advance one GNN layer by one tick.
+def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
+                    inbox: FeatBatch, new_edges: EdgeBatch,
+                    new_repl: ReplBatch, now: jnp.ndarray,
+                    wconf: win.WindowConfig, outbox_cap: int):
+    """Advance one GNN layer by one tick (pure, trace-friendly).
 
     `layer` supplies message/update (phi/psi): layer.message(params, x) and
     layer.update(params, x_self, agg_read) — e.g. graph/sage.SAGELayer.
     Returns (new LayerState, outbox FeatBatch, TickStats).
+
+    This is the un-jitted body so the super-tick driver can inline all L
+    layers inside one `lax.scan` step; the per-tick reference path wraps it
+    in `layer_tick` below.
     """
     P, N, d_in = ls.feat.shape
     busy = jnp.zeros((P,), jnp.int32)
@@ -228,6 +246,10 @@ def layer_tick(layer, params, topo: TopoState, ls: LayerState,
                       cross_part_msgs=bcast_cross + red_cross,
                       emitted=n_emit, dropped=n_drop, busy=busy)
     return new_ls, outbox, stats
+
+
+layer_tick = partial(jax.jit, static_argnames=("layer", "wconf",
+                                               "outbox_cap"))(layer_tick_body)
 
 
 def has_work(ls: LayerState) -> jnp.ndarray:

@@ -1,0 +1,7 @@
+"""Distributed-runtime modules: sharding rules, compressed gradient
+exchange, explicit expert parallelism and vertex-cut GNN locality.
+
+Everything here is mesh-facing: the single-device engine (repro/core)
+never imports this package, so CPU test runs stay import-light; the
+dry-run, the perf variants and the multi-device subprocess tests do.
+"""

@@ -1,0 +1,72 @@
+"""Compressed data-parallel gradient exchange with error feedback.
+
+Top-k sparsification + int8 quantization shrink the DP all-reduce payload;
+the part of the gradient that compression discarded is NOT dropped — it is
+carried in a per-leaf residual and added back before the next step's
+compression (error feedback, Karimireddy et al. 2019). The accumulated
+compressed updates therefore track the accumulated true gradients with a
+bounded residual (~1/topk_frac steps' worth), so the relative drift decays
+like O(1/steps) — which is exactly what the system test asserts.
+
+`compress_decompress` returns the RECONSTRUCTED (decompressed) gradient:
+on a real mesh the wire format is (values, indices, scale) per leaf; here
+the round-trip is applied immediately so callers can drop it into any
+optimizer without knowing the encoding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8: q = round(x / s), s = max|x| / 127."""
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads):
+    """Residual tree (same structure as the gradients), all zeros."""
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def _compress_leaf(g: jnp.ndarray, res: jnp.ndarray, int8: bool,
+                   topk_frac: float):
+    """One leaf: error-feedback add, top-k mask, optional int8 round-trip.
+    Returns (reconstructed update, new residual)."""
+    acc = g + res
+    flat = acc.reshape(-1)
+    n = flat.shape[0]
+    k = max(1, int(n * topk_frac))
+    # magnitude top-k: keep the k largest |values|, zero the rest
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0)
+    if int8:
+        q, s = quantize_int8(kept)
+        sent = jnp.where(mask, dequantize_int8(q, s), 0.0)
+    else:
+        sent = kept
+    new_res = flat - sent
+    return sent.reshape(acc.shape), new_res.reshape(acc.shape)
+
+
+def compress_decompress(grads, residual, int8: bool = True,
+                        topk_frac: float = 0.25):
+    """Compress gradients with error feedback; returns (sent, new_residual).
+
+    sent: the decompressed update actually applied/all-reduced this step.
+    """
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_r = treedef.flatten_up_to(residual)
+    out = [_compress_leaf(g, r, int8, topk_frac)
+           for g, r in zip(leaves_g, leaves_r)]
+    sent = treedef.unflatten([o[0] for o in out])
+    new_res = treedef.unflatten([o[1] for o in out])
+    return sent, new_res

@@ -1,0 +1,91 @@
+"""Per-family sharding rules for the production mesh (dry-run §Perf).
+
+Rules are heuristics keyed by the ArchSpec family, applied without
+allocation to jax.eval_shape trees:
+
+  lm     : tensor parallel — shard the largest axis divisible by the
+           "model" axis; embeddings/MoE expert slabs land on their natural
+           axis; replicated over data axes (DP handles the batch).
+  gnn    : replicated parameters (graphs shard over data axes instead).
+  d3gnn  : replicated parameters; the engine shards its part axis itself.
+  recsys : embedding tables row-sharded over the model axis (they dwarf
+           the dense towers), dense params replicated.
+
+Inputs: leading (batch/part) axis over the data axes when divisible, else
+replicated. `spec_tree` maps a rule over an eval_shape tree and returns
+NamedShardings ready for jax.jit in_shardings.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return int(mesh.shape[name]) if name in mesh.axis_names else 1
+
+
+def _model_spec(leaf, mesh: Mesh) -> P:
+    """Shard the largest divisible axis over "model"; else replicate."""
+    m = _axis_size(mesh, "model")
+    if m <= 1 or not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+        return P()
+    dims = list(leaf.shape)
+    order = sorted(range(len(dims)), key=lambda i: -dims[i])
+    for i in order:
+        if dims[i] % m == 0 and dims[i] >= m:
+            spec = [None] * len(dims)
+            spec[i] = "model"
+            return P(*spec)
+    return P()
+
+
+def _replicated(leaf, mesh: Mesh) -> P:
+    return P()
+
+
+def _recsys_spec(leaf, mesh: Mesh) -> P:
+    # row-shard anything that looks like an embedding table (2D and tall)
+    if (hasattr(leaf, "shape") and len(leaf.shape) == 2
+            and leaf.shape[0] >= 16 * max(1, leaf.shape[1])
+            and leaf.shape[0] % max(1, _axis_size(mesh, "model")) == 0):
+        return P("model")
+    return P()
+
+
+FAMILY_PARAM_RULES = {
+    "lm": _model_spec,
+    "gnn": _replicated,
+    "d3gnn": _replicated,
+    "recsys": _recsys_spec,
+}
+
+
+def spec_tree(tree, rule, mesh: Mesh):
+    """Map a (leaf, mesh) -> PartitionSpec rule into NamedShardings."""
+    return jax.tree.map(lambda l: NamedSharding(mesh, rule(l, mesh)), tree)
+
+
+def _batch_sharding(leaf, mesh: Mesh) -> NamedSharding:
+    axes = data_axes(mesh)
+    n = int(np.prod([_axis_size(mesh, a) for a in axes])) if axes else 1
+    if (n > 1 and hasattr(leaf, "shape") and len(leaf.shape) >= 1
+            and leaf.shape[0] % n == 0 and leaf.shape[0] >= n):
+        return NamedSharding(mesh, P(axes))
+    return NamedSharding(mesh, P())
+
+
+def _input_rule(in_specs: dict, mesh: Mesh, kind: str) -> dict:
+    return {k: jax.tree.map(lambda l: _batch_sharding(l, mesh), v)
+            for k, v in in_specs.items()}
+
+
+FAMILY_INPUT_RULES = {
+    "lm": _input_rule,
+    "gnn": _input_rule,
+    "d3gnn": _input_rule,
+    "recsys": _input_rule,
+}

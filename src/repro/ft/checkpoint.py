@@ -7,16 +7,20 @@ stores as "in-queue messages" lives in the window-pending state
 (red_pending/fwd_pending + deadlines) — so checkpointing the operator
 states between ticks captures exactly the same information.
 
-Format: one zstd-compressed msgpack blob per checkpoint with raw ndarray
+Format: one compressed msgpack blob per checkpoint with raw ndarray
 buffers (no pickle — restore-safe), plus host-side partitioner tables.
-Writes go to <step>.tmp then atomic-rename, so a crash mid-write never
-corrupts the latest checkpoint. Async mode hands serialization to a
-background thread (the paper's non-blocking snapshots).
+Compression is zstd when the `zstandard` package is available, else
+stdlib zlib; a one-byte codec tag prefixes every blob so either build
+restores checkpoints written by the other. Writes go to <step>.tmp then
+atomic-rename, so a crash mid-write never corrupts the latest
+checkpoint. Async mode hands serialization to a background thread (the
+paper's non-blocking snapshots).
 """
 from __future__ import annotations
 
 import json
 import threading
+import zlib
 from dataclasses import dataclass
 from pathlib import Path
 
@@ -24,7 +28,39 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                                    # optional: zstd when installed
+    import zstandard
+except ImportError:                     # clean env: stdlib fallback
+    zstandard = None
+
+# codec tags (format header): every blob starts with one of these bytes
+_CODEC_ZSTD = b"\x01"
+_CODEC_ZLIB = b"\x02"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return _CODEC_ZSTD + zstandard.ZstdCompressor(level=3).compress(raw)
+    return _CODEC_ZLIB + zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    tag, body = blob[:1], blob[1:]
+    if tag == _CODEC_ZSTD:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "'zstandard' package is not installed")
+        return zstandard.ZstdDecompressor().decompress(body)
+    if tag == _CODEC_ZLIB:
+        return zlib.decompress(body)
+    if blob[:4] == b"\x28\xb5\x2f\xfd":
+        # legacy checkpoint from before the codec tag: a bare zstd frame
+        if zstandard is None:
+            raise RuntimeError("legacy zstd checkpoint needs the "
+                               "'zstandard' package to restore")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    raise ValueError(f"unknown checkpoint codec tag {tag!r}")
 
 
 def _pack_tree(tree) -> bytes:
@@ -37,13 +73,11 @@ def _pack_tree(tree) -> bytes:
             for l in leaves
         ],
     }
-    return zstandard.ZstdCompressor(level=3).compress(
-        msgpack.packb(payload, use_bin_type=True))
+    return _compress(msgpack.packb(payload, use_bin_type=True))
 
 
 def _unpack_leaves(blob: bytes):
-    payload = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
-                              raw=False)
+    payload = msgpack.unpackb(_decompress(blob), raw=False)
     # .copy(): frombuffer views are read-only; host tables are mutated live
     return [np.frombuffer(l["data"], dtype=np.dtype(l["dtype"])).reshape(
         l["shape"]).copy() for l in payload["leaves"]]

@@ -69,6 +69,30 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def _split_operands(s: str):
+    """Split an HLO operand list on TOP-LEVEL commas only — shape dims
+    (f32[1024,64]) and layouts ({1,0}) contain commas of their own. Stops
+    at the call's closing paren."""
+    out, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]}":
+            depth -= 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
 @dataclass
 class CompStats:
     flops: float = 0.0
@@ -100,8 +124,10 @@ def _dot_flops(line: str, out_shape: str, symbols: dict) -> float:
             out_elems *= x
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     args = line[line.index("dot(") + 4:]
-    lhs_name = args.split(",")[0].strip().lstrip("%").rstrip(")")
-    lhs_shapes = _shape_dims(args.split(",")[0])
+    operands = _split_operands(args)
+    lhs = operands[0] if operands else ""
+    lhs_name = lhs.strip().split()[-1].lstrip("%") if lhs.strip() else ""
+    lhs_shapes = _shape_dims(lhs)
     if not lhs_shapes and lhs_name in symbols:
         lhs_shapes = _shape_dims(symbols[lhs_name])
     contracted = 1
@@ -156,10 +182,15 @@ def parse_hlo(text: str) -> dict:
             # in-place update: traffic ~= 2x the update operand, not the
             # whole buffer
             ops_str = line[line.index("dynamic-update-slice(") + 21:]
-            parts = ops_str.split(",")
-            upd_name = (parts[1].strip().lstrip("%").rstrip(")")
-                        if len(parts) > 1 else "")
-            upd_bytes = _shape_bytes(cur.symbols.get(upd_name, ""))
+            parts = _split_operands(ops_str)
+            # operand text is "f32[1,64]{1,0} %name" (shaped use site) or
+            # just "%name"; prefer the inline shape, else the symbol table
+            upd_bytes = 0
+            if len(parts) > 1:
+                upd_bytes = _shape_bytes(parts[1])
+                if upd_bytes == 0:
+                    upd_name = parts[1].strip().split()[-1].lstrip("%")
+                    upd_bytes = _shape_bytes(cur.symbols.get(upd_name, ""))
             if upd_bytes == 0:
                 upd_bytes = _shape_bytes(shape_str) // 16
             cur.bytes += 2 * upd_bytes

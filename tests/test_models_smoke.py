@@ -1,9 +1,16 @@
 """Per-assigned-architecture smoke tests: reduced config, one forward /
-train step on CPU, output shapes + no NaNs (deliverable f)."""
+train step on CPU, output shapes + no NaNs (deliverable f).
+
+The model zoo compiles ~4 min of XLA on CPU and exercises nothing of the
+streaming engine, so the whole module is `slow` — deselected from the
+tier-1 run (`-m "not slow"` in pyproject addopts), executed by the CI
+slow lane / `pytest -m slow`."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import ARCH_IDS, get_arch
 from repro.configs.gnn_common import GNN_SHAPES

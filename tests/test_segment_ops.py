@@ -2,6 +2,10 @@
 message-passing primitive everything sits on."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional [test] extra")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 

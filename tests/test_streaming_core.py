@@ -31,9 +31,19 @@ def build_pipe(window, n_nodes=60, d_in=8, partitioner="hdrf", seed=0):
     return model, params, D3Pipeline(model, params, cfg)
 
 
-@pytest.mark.parametrize("kind", [win.STREAMING, win.TUMBLING, win.SESSION,
-                                  win.ADAPTIVE])
-def test_streaming_matches_static_oracle(kind):
+def test_streaming_matches_static_oracle(streamed_pipeline):
+    """STREAMING policy rides the shared session pipeline (conftest)."""
+    s = streamed_pipeline
+    emb = s.pipe.embeddings()
+    assert len(emb) == 60, "every vertex must materialize an embedding"
+    g, _ = build_snapshot(s.case.edges, s.case.feats, 8, 60)
+    ref = np.asarray(oracle_embeddings(s.model, s.params, g))
+    for vid, vec in emb.items():
+        np.testing.assert_allclose(vec, ref[vid], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", [win.TUMBLING, win.SESSION, win.ADAPTIVE])
+def test_windowed_matches_static_oracle(kind):
     edges, feats = make_stream()
     model, params, pipe = build_pipe(win.WindowConfig(kind=kind, interval=3))
     pipe.run_stream(edges, feats, tick_edges=32)
@@ -61,7 +71,7 @@ def test_partitioners_all_exact(method):
 
 
 def test_windowing_reduces_messages():
-    edges, feats = make_stream(seed=1, n_edges=400)
+    edges, feats = make_stream(seed=1, n_edges=300)
     _, _, p_stream = build_pipe(win.WindowConfig(kind=win.STREAMING))
     p_stream.run_stream(edges, feats, tick_edges=16)
     p_stream.flush(max_ticks=128)

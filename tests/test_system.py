@@ -20,8 +20,8 @@ from repro.optim import adam, sgd
 def test_full_lifecycle(tmp_path):
     """The quickstart + serve scenario as one assertive test."""
     rng = np.random.default_rng(0)
-    n_nodes, d_in = 120, 8
-    edges = powerlaw_edges(rng, n_nodes, 500)
+    n_nodes, d_in = 100, 8
+    edges = powerlaw_edges(rng, n_nodes, 360)
     feats = {v: rng.normal(size=d_in).astype(np.float32)
              for v in range(n_nodes)}
     labels = {v: int(rng.integers(0, 3)) for v in range(n_nodes)}

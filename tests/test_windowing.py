@@ -1,0 +1,108 @@
+"""Unit tests for window deadline semantics (paper §4.2.4) and the
+exponentially-decayed CountMinSketch behind the adaptive-session policy."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import windowing as win
+
+
+def _dl(cfg, now, cur=0, pending=False, freq=0.0):
+    out = win.next_deadline(
+        cfg, jnp.asarray(now, jnp.int32),
+        jnp.asarray([cur], jnp.int32), jnp.asarray([pending]),
+        jnp.asarray([freq], jnp.float32))
+    return int(out[0])
+
+
+def test_streaming_deadline_is_now():
+    cfg = win.WindowConfig(kind=win.STREAMING)
+    for now in (0, 3, 17):
+        assert _dl(cfg, now) == now
+
+
+def test_tumbling_bucket_stability():
+    """All touches within one bucket land on the SAME boundary, and an
+    earlier scheduled deadline never moves later (buckets don't slide)."""
+    cfg = win.WindowConfig(kind=win.TUMBLING, interval=4)
+    # ticks 0..3 all map to boundary 4; 4..7 to 8
+    assert [_dl(cfg, t) for t in range(4)] == [4, 4, 4, 4]
+    assert [_dl(cfg, t) for t in range(4, 8)] == [8, 8, 8, 8]
+    # vertex already pending with deadline 4, touched again at tick 5:
+    # the earlier bucket boundary must win
+    assert _dl(cfg, 5, cur=4, pending=True) == 4
+    # not pending: old deadline is stale, new bucket applies
+    assert _dl(cfg, 5, cur=4, pending=False) == 8
+
+
+def test_session_touch_extension():
+    """Every touch pushes eviction back by a full interval."""
+    cfg = win.WindowConfig(kind=win.SESSION, interval=5)
+    assert _dl(cfg, 0) == 5
+    # re-touch at tick 3 while pending: deadline moves to 8 (extends)
+    assert _dl(cfg, 3, cur=5, pending=True) == 8
+    assert _dl(cfg, 7) == 12
+
+
+def test_adaptive_clip_bounds():
+    cfg = win.WindowConfig(kind=win.ADAPTIVE, adaptive_min=2, adaptive_max=9,
+                           adaptive_alpha=8.0)
+    # very hot vertex -> clipped at min
+    assert _dl(cfg, 10, freq=1e6) == 12
+    # very cold vertex -> clipped at max
+    assert _dl(cfg, 10, freq=1e-9) == 19
+    # mid-frequency: alpha/freq inside the clip range
+    assert _dl(cfg, 10, freq=4.0) == 12  # 8/4 = 2 == min
+    assert _dl(cfg, 10, freq=2.0) == 14  # 8/2 = 4
+
+
+def test_adaptive_hot_vertices_evict_sooner_than_cold():
+    cfg = win.WindowConfig(kind=win.ADAPTIVE)
+    hot = _dl(cfg, 0, freq=100.0)
+    cold = _dl(cfg, 0, freq=0.1)
+    assert hot < cold
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError):
+        win.next_deadline(win.WindowConfig(kind="nope"), 0,
+                          jnp.zeros(1, jnp.int32), jnp.zeros(1, bool),
+                          jnp.zeros(1))
+
+
+# ---------------------------------------------------------------- sketch
+def test_cms_estimate_is_monotone_overestimate():
+    """CMS never under-counts, and estimates grow monotonically with
+    repeated updates of the same key (no decay)."""
+    cms = jnp.zeros((4, 256), jnp.float32)
+    key = jnp.asarray([42])
+    prev = 0.0
+    for step in range(1, 6):
+        cms = win.cms_update(cms, key, jnp.asarray([1.0]), decay=1.0)
+        est = float(win.cms_query(cms, key)[0])
+        assert est >= step - 1e-6          # overestimate property
+        assert est >= prev                 # monotone in updates
+        prev = est
+
+
+def test_cms_counts_distinct_keys_independently_enough():
+    cms = jnp.zeros((4, 2048), jnp.float32)
+    keys = jnp.arange(32)
+    weights = jnp.ones((32,), jnp.float32)
+    for _ in range(3):
+        cms = win.cms_update(cms, keys, weights, decay=1.0)
+    ests = np.asarray(win.cms_query(cms, keys))
+    assert (ests >= 3 - 1e-6).all()
+    # wide sketch, few keys: collisions should be rare
+    assert np.median(ests) == pytest.approx(3.0)
+
+
+def test_cms_decay_shrinks_stale_counts():
+    cms = jnp.zeros((4, 256), jnp.float32)
+    key = jnp.asarray([7])
+    cms = win.cms_update(cms, key, jnp.asarray([8.0]), decay=1.0)
+    before = float(win.cms_query(cms, key)[0])
+    # decay-only update (zero weight on an untouched key)
+    cms = win.cms_update(cms, jnp.asarray([9]), jnp.asarray([0.0]), decay=0.5)
+    after = float(win.cms_query(cms, key)[0])
+    assert after == pytest.approx(before * 0.5)
