@@ -1,0 +1,108 @@
+"""Device-count scaling of the streaming engine: LocalRouter vs MeshRouter.
+
+Metric: stream events ingested per second end-to-end (super-tick driver),
+at 1/2/4 devices. Each device count runs in a SUBPROCESS because the XLA
+host-platform device count is fixed at backend initialization
+(--xla_force_host_platform_device_count must be set before first jax use).
+
+On one CPU the mesh rows measure the routing plane's overhead (all_to_all
++ bucketing vs flat scatter) rather than real speedup — the point of the
+row pair is tracking that overhead and exercising the sharded path in the
+benchmark harness; on a real multi-chip mesh the same harness reports
+scaling.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import fmt_row
+
+REPO = Path(__file__).resolve().parents[1]
+
+_WORKER = """
+import time
+import numpy as np
+import jax
+from repro.core import windowing as win
+from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.graph.graphs import powerlaw_edges
+from repro.graph.sage import GraphSAGE
+from repro.launch.mesh import make_stream_mesh
+
+D = {n_devices}
+N_EDGES = {n_edges}
+TICK_EDGES, SUPER_T = 64, 8
+
+rng = np.random.default_rng(0)
+n_nodes = 200
+edges = powerlaw_edges(rng, n_nodes, N_EDGES, 1.3)
+feats = {{v: rng.normal(size=16).astype(np.float32) for v in range(n_nodes)}}
+
+def build(mesh=None):
+    model = GraphSAGE((16, 32, 32))
+    params = model.init(jax.random.key(0))
+    cfg = PipelineConfig(n_parts=8, node_cap=256, edge_cap=2048,
+                         repl_cap=512, feat_cap=512, edge_tick_cap=64,
+                         max_nodes=n_nodes,
+                         window=win.WindowConfig(kind=win.STREAMING))
+    return D3Pipeline(model, params, cfg, mesh=mesh)
+
+def timed(mesh=None):
+    pipe = build(mesh)                       # warm-up: compile the scan
+    pipe.run_stream_super(edges[:512], feats, tick_edges=TICK_EDGES,
+                          super_ticks=SUPER_T)
+    pipe.flush_super(max_ticks=64, T=SUPER_T)
+    pipe = build(mesh)
+    t0 = time.perf_counter()
+    pipe.run_stream_super(edges, feats, tick_edges=TICK_EDGES,
+                          super_ticks=SUPER_T)
+    pipe.flush_super(max_ticks=128, T=SUPER_T)
+    return N_EDGES / (time.perf_counter() - t0)
+
+if D == 1:
+    print(f"RESULT,local,{{timed(None):.1f}}")
+print(f"RESULT,mesh,{{timed(make_stream_mesh(D)):.1f}}")
+"""
+
+
+def _worker(n_devices: int, n_edges: int, timeout: int = 560):
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": "/root", "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_devices}"}
+    r = subprocess.run(
+        [sys.executable, "-c",
+         _WORKER.format(n_devices=n_devices, n_edges=n_edges)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"scaling worker D={n_devices} failed:\n"
+                           + r.stderr[-2000:])
+    out = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT,"):
+            _, name, evs = line.split(",")
+            out[name] = float(evs)
+    return out
+
+
+def run(scale: str = "small"):
+    n_edges = {"small": 1200, "full": 8000}[scale]
+    rows = []
+    base = None
+    for d in (1, 2, 4):
+        res = _worker(d, n_edges)
+        if "local" in res:
+            base = res["local"]
+            rows.append(fmt_row("scaling[local,D=1]", 1e6 / base,
+                                f"events_per_s={base:.0f}"))
+        rel = res["mesh"] / base if base else float("nan")
+        rows.append(fmt_row(f"scaling[mesh,D={d}]", 1e6 / res["mesh"],
+                            f"events_per_s={res['mesh']:.0f};"
+                            f"vs_local={rel:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -10,8 +10,8 @@ import sys
 import traceback
 
 from benchmarks import (bench_comm_volume, bench_explosion, bench_imbalance,
-                        bench_latency, bench_runtime, bench_throughput,
-                        bench_training, bench_vs_batch)
+                        bench_latency, bench_runtime, bench_scaling,
+                        bench_throughput, bench_training, bench_vs_batch)
 
 ALL = {
     "fig4a_throughput": bench_throughput,
@@ -22,6 +22,7 @@ ALL = {
     "fig5d_training": bench_training,
     "fig6_explosion": bench_explosion,
     "fig7_latency": bench_latency,
+    "dist_scaling": bench_scaling,
 }
 
 

@@ -76,12 +76,37 @@ class FeatBatch:
         return self.part.shape[0]
 
 
+@dataclass(frozen=True)
+class MsgBatch:
+    """Fixed-capacity, part-addressed message records — the routing plane's
+    unit of exchange (one tick's cross-part traffic for one round).
+
+    The compute plane emits these instead of scattering into other parts'
+    rows; a Router delivers them (identity on one device, fixed-capacity
+    all_to_all on the mesh) and a part-local apply stage consumes them.
+    Payload semantics are the consumer's: Round-A broadcast rows SET a
+    feature value, Round-B RMI rows ADD an aggregator (delta, dcnt) record.
+    """
+    part: jnp.ndarray            # [C] int32 destination part (global id)
+    slot: jnp.ndarray            # [C] int32 destination slot in that part
+    vec: jnp.ndarray             # [C, d] float payload
+    cnt: jnp.ndarray             # [C] float count delta (Round B; zeros for A)
+    src_part: jnp.ndarray        # [C] int32 emitting part (cross-part stats)
+    valid: jnp.ndarray           # [C] bool
+
+    @property
+    def capacity(self):
+        return self.part.shape[0]
+
+
 for _cls, _fields in ((EdgeBatch, ["part", "edge_slot", "src_slot", "dst_slot",
                                    "dst_master_part", "dst_master_slot", "valid"]),
                       (ReplBatch, ["part", "repl_slot", "master_slot",
                                    "rep_part", "rep_slot", "valid"]),
                       (VertexBatch, ["part", "slot", "is_master", "valid"]),
-                      (FeatBatch, ["part", "slot", "feat", "valid"])):
+                      (FeatBatch, ["part", "slot", "feat", "valid"]),
+                      (MsgBatch, ["part", "slot", "vec", "cnt", "src_part",
+                                  "valid"])):
     jax.tree_util.register_dataclass(_cls, data_fields=_fields, meta_fields=[])
 
 

@@ -4,30 +4,36 @@ Dataset -> Partitioner -> Splitter -> GraphStorage_1 .. GraphStorage_L -> sink
 
 The host side plays Dataset/Partitioner/Splitter: it cuts the stream into
 micro-ticks, assigns parts/slots (partitioner.py) and builds padded device
-batches. The device side runs one `layer_tick` per GraphStorage operator
-per tick; layer l's outbox is layer l+1's inbox (the unrolled computation
-graph). The final outbox materializes into a device-side embedding sink —
-the paper's "materialized embedding table that can be further queried".
+batches. The device side runs one tick per GraphStorage operator per tick;
+layer l's outbox is layer l+1's inbox (the unrolled computation graph). The
+final outbox materializes into a device-side embedding sink — the paper's
+"materialized embedding table that can be further queried".
 
-Two drivers share that device program:
+Two drivers share ONE device program (`_tick_program`: topology apply + L
+staged layer ticks + sink update, all over the local part block):
 
   * `tick()` — the per-tick REFERENCE path. One host round-trip per
-    micro-tick: rebuild numpy batches, launch L `layer_tick` jit calls,
-    block on the tick's stats. Simple to step through; use it for
-    debugging, for tests, and whenever events must be injected with
-    tick-level control flow on the host.
+    micro-tick: rebuild numpy batches, launch one jitted tick, block on
+    the tick's stats. Simple to step through; use it for debugging, for
+    tests, and whenever events must be injected with tick-level control
+    flow on the host.
 
   * `run_super_tick()` — the device-resident SUPER-TICK path (the paper's
     always-on unrolled dataflow). The host pre-stages T micro-ticks of
     padded batches (stacked along a leading T axis, one transfer per
     field), then a single jitted `jax.lax.scan` advances all L layers
-    through all T ticks: topology application, every `layer_tick` body,
-    sink materialization, TickStats accumulation AND quiescence tracking
-    all run inside the scan. The `PipelineCarry` pytree is donated at the
-    jit boundary (`donate_argnums`) so topology/layer/sink buffers are
-    reused in place, and exactly ONE host sync happens per super-tick (the
-    summed stats + quiescence flag read). Same math, same event order —
-    the golden-equivalence test pins the two drivers to the static oracle.
+    through all T ticks with the `PipelineCarry` donated at the jit
+    boundary and exactly ONE host sync per super-tick (the summed stats +
+    quiescence flag read). Same math, same event order — the
+    golden-equivalence tests pin the two drivers to the static oracle.
+
+Distributed execution: pass `mesh=` (a 1-D ("data",) mesh, see
+`launch/mesh.py:make_stream_mesh`) and the SAME program runs inside one
+`shard_map` with the part axis block-sharded across devices. Cross-part
+traffic then rides the MeshRouter's fixed-capacity all_to_all instead of
+the LocalRouter's flat scatter (`repro/dist/router.py`); the carry's
+NamedShardings live in `repro/dist/sharding.py`. Both routers are
+golden-equivalent by test.
 
 Staging model / constraints:
   - batch capacities derive from PipelineConfig, so every tick's batches
@@ -49,15 +55,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import events as ev
 from repro.core import state as st
 from repro.core import windowing as win
 from repro.core.explosion import layer_parallelisms, physical_busy
 from repro.core.partitioner import StreamingPartitioner
-from repro.core.tick import (add_stats, has_work, layer_tick,
-                             layer_tick_body, zero_stats)
+from repro.core.tick import (add_stats, has_work, layer_tick_body,
+                             zero_stats)
 from repro.core.termination import TerminationCoordinator, quiet_update
+from repro.dist.router import LocalRouter, MeshRouter
+from repro.dist.sharding import carry_pspecs, carry_shardings, stats_pspecs
 
 
 @dataclass
@@ -66,7 +76,9 @@ class PipelineConfig:
     node_cap: int = 512               # per-part vertex slots
     edge_cap: int = 2048              # per-part edge slots
     repl_cap: int = 1024              # per-part replication records
-    feat_cap: int = 1024              # inbox/outbox rows per tick
+    feat_cap: int = 1024              # host-inbox feature rows per tick
+    outbox_cap: Optional[int] = None  # per-tick emission budget (default:
+                                      # feat_cap), split evenly over parts
     edge_tick_cap: int = 1024         # new-edge records per tick
     window: win.WindowConfig = field(default_factory=win.WindowConfig)
     partitioner: str = "hdrf"
@@ -74,6 +86,33 @@ class PipelineConfig:
     explosion: float = 1.0            # lambda
     max_nodes: int = 100_000          # global id space for the host tables
     seed: int = 0
+
+    def outbox(self) -> int:
+        """The resolved per-tick emission budget."""
+        return self.feat_cap if self.outbox_cap is None else self.outbox_cap
+
+    def validate(self, n_devices: int = 1) -> None:
+        """Fail fast with a clear message instead of a shard_map shape
+        error deep inside the tick program."""
+        caps = {"n_parts": self.n_parts, "node_cap": self.node_cap,
+                "edge_cap": self.edge_cap, "repl_cap": self.repl_cap,
+                "feat_cap": self.feat_cap, "outbox_cap": self.outbox(),
+                "edge_tick_cap": self.edge_tick_cap}
+        for name, v in caps.items():
+            if v <= 0:
+                raise ValueError(f"PipelineConfig.{name}={v} must be > 0")
+        if self.outbox() % self.n_parts:
+            raise ValueError(
+                f"the emission budget (outbox_cap or feat_cap)="
+                f"{self.outbox()} must be a multiple of "
+                f"n_parts={self.n_parts}: it is split into outbox() // "
+                "n_parts emission slots per part")
+        if n_devices > 1 and self.n_parts % n_devices:
+            raise ValueError(
+                f"n_parts={self.n_parts} is not divisible by the mesh's "
+                f"{n_devices} devices: the part axis is block-sharded over "
+                "('data',), so pick n_parts as a multiple of the device "
+                "count (each device owns n_parts // n_devices parts)")
 
 
 @dataclass
@@ -95,11 +134,18 @@ class StreamMetrics:
 class D3Pipeline:
     """L chained GraphStorage operators + the host driver."""
 
-    def __init__(self, model, params, cfg: PipelineConfig):
+    def __init__(self, model, params, cfg: PipelineConfig, mesh=None):
         """model: graph/sage.GraphSAGE (or compatible stack of layers with
-        .message/.update); params: its param pytree."""
+        .message/.update); params: its param pytree.
+        mesh: optional 1-D ("data",) jax mesh — shards the part axis of
+        the tick program across its devices (MeshRouter)."""
         self.model = model
         self.cfg = cfg
+        self.mesh = mesh
+        n_dev = int(mesh.shape["data"]) if mesh is not None else 1
+        cfg.validate(n_devices=n_dev)
+        self.router = (MeshRouter(cfg.n_parts, n_dev) if mesh is not None
+                       else LocalRouter(cfg.n_parts))
         self.layers = list(model.layers)
         self.params = params
         self.part = StreamingPartitioner(
@@ -113,6 +159,13 @@ class D3Pipeline:
         self.d_out = dims[-1]
         self.sink = jnp.zeros((cfg.n_parts, cfg.node_cap, self.d_out))
         self.sink_seen = jnp.zeros((cfg.n_parts, cfg.node_cap), bool)
+        if mesh is not None:
+            sh = carry_shardings(mesh, len(self.layers))
+            self.topo = jax.device_put(self.topo, sh.topo)
+            self.states = [jax.device_put(s, sh.layers[i])
+                           for i, s in enumerate(self.states)]
+            self.sink = jax.device_put(self.sink, sh.sink)
+            self.sink_seen = jax.device_put(self.sink_seen, sh.sink_seen)
         self.now = 0
         self.metrics = StreamMetrics(
             busy_logical=np.zeros(cfg.n_parts, np.int64))
@@ -176,26 +229,16 @@ class D3Pipeline:
         wconf = window or cfg.window
         t0 = time.perf_counter()
         eb, rb, vb, fb = self._build_batches(edges, feats)
-        self.topo = st.apply_vertex_batch(self.topo, vb)
-        self.topo = st.apply_repl_batch(self.topo, rb)
-        self.topo = st.apply_edge_batch(self.topo, eb)
-
-        inbox = fb
-        stats_all = []
         now = jnp.asarray(self.now, jnp.int32)
-        for li, layer in enumerate(self.layers):
-            # topology reaches every layer; features only layer 0 (Splitter)
-            self.states[li], outbox, stats = layer_tick(
-                layer, self.params[f"l{li}"], self.topo, self.states[li],
-                inbox, eb, rb, now, wconf, cfg.feat_cap)
-            stats_all.append(stats)
-            inbox = outbox
-        # sink: final-layer emissions materialize the embedding table
-        self.sink, self.sink_seen = _sink_update(self.sink, self.sink_seen,
-                                                 inbox)
+        (self.topo, new_states, self.sink, self.sink_seen,
+         stats_all) = _tick_jit(
+            tuple(self.layers), self.params, self.topo, tuple(self.states),
+            self.sink, self.sink_seen, fb, eb, rb, vb, now, wconf,
+            cfg.outbox(), self.router, self.mesh)
+        self.states = list(new_states)
         self.now += 1
         self._accumulate(stats_all, time.perf_counter() - t0)
-        return stats_all
+        return list(stats_all)
 
     def _accumulate(self, stats_all, dt, ticks: int = 1):
         """Fold per-layer stats into StreamMetrics — one tick's stats from
@@ -281,7 +324,7 @@ class D3Pipeline:
             quiet=jnp.asarray(quiet0, jnp.int32))
         final, stats_sum = _super_tick_scan(
             tuple(self.layers), self.params, carry, batches,
-            window or cfg.window, cfg.feat_cap)
+            window or cfg.window, cfg.outbox(), self.router, self.mesh)
         self.topo = final.topo
         self.states = list(final.layers)
         self.sink = final.sink
@@ -314,14 +357,15 @@ class D3Pipeline:
         """`flush`, super-tick style: empty ticks until device quiescence.
 
         The consecutive-quiet counter lives in the scan carry; the host
-        reads it once per super-tick instead of once per tick."""
+        reads it once per super-tick and re-seeds the next launch through
+        the coordinator's public seed_quiet()."""
         term = TerminationCoordinator()
         override = win.WindowConfig(kind=win.STREAMING) if drain else None
         ran = 0
         while ran < max_ticks:
             step = min(T, max_ticks - ran)
             _, quiet = self.run_super_tick(T=step, window=override,
-                                           quiet0=term._quiet)
+                                           quiet0=term.seed_quiet())
             ran += step
             if term.observe_flag(quiet):
                 return ran
@@ -359,16 +403,18 @@ class D3Pipeline:
 
     # ------------------------------------------------------------- queries
     def embeddings(self) -> dict:
-        """Materialized final-layer embeddings {vid: vector} (masters)."""
+        """Materialized final-layer embeddings {vid: vector} (masters).
+
+        One numpy gather over the partitioner's master tables — no
+        per-vid Python loop over the max_nodes id space."""
         sink = np.asarray(self.sink)
         seen = np.asarray(self.sink_seen)
         t = self.part.t
-        out = {}
-        for vid in range(t.max_nodes):
-            p, s = t.master[vid], t.master_slot[vid]
-            if p >= 0 and seen[p, s]:
-                out[vid] = sink[p, s]
-        return out
+        vids = np.flatnonzero(t.master >= 0)
+        p, s = t.master[vids], t.master_slot[vids]
+        ok = seen[p, s]
+        vids, vecs = vids[ok], sink[p[ok], s[ok]]
+        return {int(v): vecs[i] for i, v in enumerate(vids)}
 
     def physical_busy_per_layer(self):
         """Per-layer physical busy vectors under the explosion factor."""
@@ -379,53 +425,107 @@ class D3Pipeline:
                 for p in pars]
 
 
-def _sink_update_body(sink, seen, fb: ev.FeatBatch):
-    P, N, d = sink.shape
-    idx = jnp.where(fb.valid, fb.part * N + fb.slot, P * N)
-    sink = sink.reshape(P * N, d).at[idx].set(fb.feat, mode="drop")
-    seen = seen.reshape(P * N).at[idx].set(True, mode="drop")
-    return sink.reshape(P, N, d), seen.reshape(P, N)
+def _sink_update_body(sink, seen, fb: ev.FeatBatch, part0=0):
+    P_loc, N, d = sink.shape
+    idx, _ = st.local_index(fb.part, fb.slot, part0, P_loc, N, fb.valid)
+    sink = sink.reshape(P_loc * N, d).at[idx].set(fb.feat, mode="drop")
+    seen = seen.reshape(P_loc * N).at[idx].set(True, mode="drop")
+    return sink.reshape(P_loc, N, d), seen.reshape(P_loc, N)
 
 
-_sink_update = jax.jit(_sink_update_body)
+def _tick_program(layers, params, topo, states, inbox, eb, rb, vb, now,
+                  wconf, outbox_cap, router):
+    """ONE micro-tick over the local part block: topology application + L
+    staged layer ticks. Runs directly under the LocalRouter and as the
+    shard_map body under the MeshRouter — the two drivers and the two
+    routers all share this program."""
+    part0 = router.part0()
+    topo = st.apply_vertex_batch(topo, vb, part0)
+    topo = st.apply_repl_batch(topo, rb, part0)
+    topo = st.apply_edge_batch(topo, eb, part0)
+    new_states, stats_all = [], []
+    for li, layer in enumerate(layers):
+        # topology reaches every layer; features only layer 0 (Splitter)
+        ls, outbox, stats = layer_tick_body(
+            layer, params[f"l{li}"], topo, states[li], inbox, eb, rb,
+            now, wconf, outbox_cap, router)
+        new_states.append(ls)
+        stats_all.append(stats)
+        inbox = outbox
+    return topo, tuple(new_states), inbox, tuple(stats_all)
 
 
-@partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap"),
+@partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
+                                   "router", "mesh"))
+def _tick_jit(layers, params, topo, states, sink, sink_seen, inbox, eb, rb,
+              vb, now, wconf, outbox_cap, router, mesh):
+    """The per-tick driver's device program (reference path)."""
+    def prog(params, topo, states, sink, sink_seen, inbox, eb, rb, vb, now):
+        topo, states, out, stats = _tick_program(
+            layers, params, topo, states, inbox, eb, rb, vb, now, wconf,
+            outbox_cap, router)
+        # sink: final-layer emissions materialize the embedding table
+        sink, sink_seen = _sink_update_body(sink, sink_seen, out,
+                                            router.part0())
+        return topo, states, sink, sink_seen, stats
+
+    if mesh is None:
+        return prog(params, topo, states, sink, sink_seen, inbox, eb, rb,
+                    vb, now)
+    cp = carry_pspecs(len(layers))
+    sharded = shard_map(
+        prog, mesh=mesh,
+        in_specs=(P(), cp.topo, cp.layers, cp.sink, cp.sink_seen,
+                  P(), P(), P(), P(), P()),
+        out_specs=(cp.topo, cp.layers, cp.sink, cp.sink_seen,
+                   stats_pspecs(len(layers))),
+        check_rep=False)
+    return sharded(params, topo, states, sink, sink_seen, inbox, eb, rb,
+                   vb, now)
+
+
+@partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
+                                   "router", "mesh"),
          donate_argnums=(2,))
 def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
-                     wconf: win.WindowConfig, outbox_cap: int):
+                     wconf: win.WindowConfig, outbox_cap: int, router,
+                     mesh=None):
     """T micro-ticks x L layers as one `lax.scan` — the super-tick body.
 
     carry (donated): PipelineCarry — topology, per-layer states, sink and
-    the tick clock / quiet counter, all device-resident.
+    the tick clock / quiet counter, all device-resident (and part-sharded
+    when a mesh is given: the scan runs INSIDE the shard_map, so the carry
+    never leaves its owning shard between ticks).
     batches: (fb, eb, rb, vb) pytrees with leading [T] axis (scan xs).
     Returns (final carry, per-layer TickStats summed over the T ticks).
     """
-    n_parts = carry.topo.n_parts
+    def scan_prog(params, carry, batches):
+        n_parts_loc = carry.topo.n_parts          # LOCAL block under mesh
 
-    def body(state, batch_t):
-        c, ssum = state
-        fb, eb, rb, vb = batch_t
-        topo = st.apply_vertex_batch(c.topo, vb)
-        topo = st.apply_repl_batch(topo, rb)
-        topo = st.apply_edge_batch(topo, eb)
-        inbox = fb
-        new_layers, stats_t = [], []
-        for li, layer in enumerate(layers):
-            ls, outbox, stats = layer_tick_body(
-                layer, params[f"l{li}"], topo, c.layers[li], inbox, eb, rb,
-                c.now, wconf, outbox_cap)
-            new_layers.append(ls)
-            stats_t.append(stats)
-            inbox = outbox
-        sink, sink_seen = _sink_update_body(c.sink, c.sink_seen, inbox)
-        quiet = quiet_update(c.quiet, new_layers, stats_t)
-        new_c = st.PipelineCarry(
-            topo=topo, layers=tuple(new_layers), sink=sink,
-            sink_seen=sink_seen, now=c.now + jnp.int32(1), quiet=quiet)
-        ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
-        return (new_c, ssum), None
+        def body(state, batch_t):
+            c, ssum = state
+            fb, eb, rb, vb = batch_t
+            topo, new_layers, out, stats_t = _tick_program(
+                layers, params, c.topo, c.layers, fb, eb, rb, vb, c.now,
+                wconf, outbox_cap, router)
+            sink, sink_seen = _sink_update_body(c.sink, c.sink_seen, out,
+                                                router.part0())
+            quiet = quiet_update(c.quiet, new_layers, stats_t, router)
+            new_c = st.PipelineCarry(
+                topo=topo, layers=new_layers, sink=sink,
+                sink_seen=sink_seen, now=c.now + jnp.int32(1), quiet=quiet)
+            ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
+            return (new_c, ssum), None
 
-    zeros = tuple(zero_stats(n_parts) for _ in layers)
-    (final, stats_sum), _ = jax.lax.scan(body, (carry, zeros), batches)
-    return final, stats_sum
+        zeros = tuple(zero_stats(n_parts_loc) for _ in layers)
+        (final, stats_sum), _ = jax.lax.scan(body, (carry, zeros), batches)
+        return final, stats_sum
+
+    if mesh is None:
+        return scan_prog(params, carry, batches)
+    cp = carry_pspecs(len(layers))
+    sharded = shard_map(scan_prog, mesh=mesh,
+                        in_specs=(P(), cp, P()),
+                        out_specs=(cp, stats_pspecs(len(layers))),
+                        check_rep=False)
+    return sharded(params, carry, batches)

@@ -1,9 +1,14 @@
 """Device-side operator state (the paper's Graph Storage, §4.1/§5.2).
 
 All arrays are [P, cap, ...] — P logical parts stacked on the leading axis.
-On one device the tick processes all parts with flat indexing; on the
-production mesh the P axis is sharded over ("data",) (and "pod") and the
-routing segment-sums become all_to_all + local scatters (repro/dist).
+Every function here operates on the LOCAL block of parts it is handed:
+on one device that block is the full [P, ...] axis (LocalRouter, part0=0);
+under `D3Pipeline(mesh=...)` the part axis is block-sharded over the
+("data",) mesh axis and each shard_map instance sees [P/D, ...] with
+part0 = axis_index * P/D. Cross-part traffic is explicit: the tick emits
+part-addressed `MsgBatch` records and `repro/dist/router.py` delivers them
+(identity locally, fixed-capacity all_to_all on the mesh) — the sharding
+rules for the carry live in `repro/dist/sharding.py`.
 
 Topology is stored once and shared by all layer operators (the paper ships
 the same topology events to every GraphStorage; storing it once per job is
@@ -15,6 +20,22 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+
+
+def local_index(part, slot, part0, n_local_parts: int, stride: int,
+                valid):
+    """Guarded local flat index for globally part-addressed records.
+
+    Returns (flat_idx, local_part): flat = (part - part0) * stride + slot
+    for rows that are valid AND belong to a locally-owned part, else the
+    one-past-the-end sentinel (n_local_parts * stride resp. n_local_parts)
+    so `.at[idx].op(..., mode="drop")` discards them. The explicit >= 0
+    guard matters: negative indices WRAP in jax, they are not dropped.
+    """
+    lp = part - part0
+    ok = valid & (lp >= 0) & (lp < n_local_parts)
+    flat = jnp.where(ok, lp * stride + slot, n_local_parts * stride)
+    return flat, jnp.where(ok, lp, n_local_parts)
 
 
 @dataclass(frozen=True)
@@ -124,12 +145,12 @@ def init_layer(n_parts: int, node_cap: int, d_in: int, d_agg: int,
         cms=zf(cms_depth, cms_width), last_touch=zi(n_parts, node_cap))
 
 
-def apply_edge_batch(topo: TopoState, eb) -> TopoState:
-    """Scatter new edge records into the adjacency tables."""
+def apply_edge_batch(topo: TopoState, eb, part0=0) -> TopoState:
+    """Scatter new edge records into the (local block of the) adjacency
+    tables; records addressed to non-local parts are dropped."""
     P, E = topo.e_src_slot.shape
     flat = lambda a: a.reshape(P * E)
-    idx = eb.part * E + eb.edge_slot
-    idx = jnp.where(eb.valid, idx, P * E)          # OOB drop for padding
+    idx, _ = local_index(eb.part, eb.edge_slot, part0, P, E, eb.valid)
 
     def scat(dst, val):
         return flat(dst).at[idx].set(val, mode="drop").reshape(P, E)
@@ -144,11 +165,10 @@ def apply_edge_batch(topo: TopoState, eb) -> TopoState:
         e_valid=scat(topo.e_valid, eb.valid))
 
 
-def apply_repl_batch(topo: TopoState, rb) -> TopoState:
+def apply_repl_batch(topo: TopoState, rb, part0=0) -> TopoState:
     P, R = topo.r_master_slot.shape
     flat = lambda a: a.reshape(P * R)
-    idx = rb.part * R + rb.repl_slot
-    idx = jnp.where(rb.valid, idx, P * R)
+    idx, _ = local_index(rb.part, rb.repl_slot, part0, P, R, rb.valid)
 
     def scat(dst, val):
         return flat(dst).at[idx].set(val, mode="drop").reshape(P, R)
@@ -162,11 +182,10 @@ def apply_repl_batch(topo: TopoState, rb) -> TopoState:
         r_valid=scat(topo.r_valid, rb.valid))
 
 
-def apply_vertex_batch(topo: TopoState, vb) -> TopoState:
+def apply_vertex_batch(topo: TopoState, vb, part0=0) -> TopoState:
     from dataclasses import replace as _replace
     P, N = topo.v_exists.shape
-    idx = vb.part * N + vb.slot
-    idx = jnp.where(vb.valid, idx, P * N)
+    idx, _ = local_index(vb.part, vb.slot, part0, P, N, vb.valid)
     v_exists = topo.v_exists.reshape(P * N).at[idx].set(
         True, mode="drop").reshape(P, N)
     is_master = topo.is_master.reshape(P * N).at[idx].max(

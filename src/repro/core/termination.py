@@ -20,19 +20,25 @@ import jax.numpy as jnp
 from repro.core.tick import has_work
 
 
-def quiet_update(quiet: jnp.ndarray, layer_states, tick_stats) -> jnp.ndarray:
+def quiet_update(quiet: jnp.ndarray, layer_states, tick_stats,
+                 router=None) -> jnp.ndarray:
     """One in-graph step of quiescence tracking.
 
     quiet: int32 scalar — consecutive ticks with no movement and no timers.
     Resets to 0 on any emission/reduce/broadcast or pending window state.
+    Under a sharded tick (`router=MeshRouter`) the pending-timer vote is
+    psum'd so every device agrees on the same counter (the stats scalars
+    are already globally reduced by the tick body).
     """
     moved = jnp.zeros((), bool)
     for s in tick_stats:
         moved = moved | ((s.emitted + s.reduce_msgs + s.broadcast_msgs) > 0)
-    timers = jnp.zeros((), bool)
+    timers = jnp.zeros((), jnp.int32)
     for ls in layer_states:
-        timers = timers | has_work(ls)
-    return jnp.where(moved | timers, jnp.int32(0),
+        timers = timers + has_work(ls).astype(jnp.int32)
+    if router is not None:
+        timers = router.psum(timers)
+    return jnp.where(moved | (timers > 0), jnp.int32(0),
                      quiet + jnp.int32(1))
 
 
@@ -40,6 +46,17 @@ class TerminationCoordinator:
     def __init__(self, quiet_sweeps: int = 2):
         self.quiet_sweeps = quiet_sweeps
         self._quiet = 0
+
+    @property
+    def quiet(self) -> int:
+        """Consecutive quiet ticks observed so far (read-only)."""
+        return self._quiet
+
+    def seed_quiet(self) -> int:
+        """The value to seed a device-resident quiet counter with when
+        chaining super-ticks (`run_super_tick(quiet0=...)`): quiescence
+        streaks must survive the host round-trip between launches."""
+        return self._quiet
 
     def observe(self, layer_states, tick_stats) -> bool:
         """Feed one tick's observations; True once terminated."""

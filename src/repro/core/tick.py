@@ -1,15 +1,32 @@
 """The per-layer micro-tick: streaming (Alg. 1) and windowed (Alg. 2)
-forward pass as one pure jitted function.
+forward pass, factored into a part-local COMPUTE plane and an explicit
+ROUTING plane (ISSUE 2 tentpole).
 
-One tick = two routing rounds (DESIGN §2):
+One tick = two routing rounds (DESIGN §2), now four pure stages with a
+Router delivery between them:
 
-  Round A (replication): master-addressed feature updates land, then
-      selectiveBroadcast pushes them to replicas via the replication
-      adjacency. Cross-part — all_to_all on the mesh, scatter on 1 device.
-  Round B (reduce): per-vertex feature *deltas* are turned into aggregator
-      RMIs over out-edges and routed to destination masters. reduce /
-      replace / remove all collapse to additive (delta, dcnt) records
-      (core/aggregators.py), so a single segment-sum applies any mix.
+  round_a_apply : master-addressed feature updates land at local masters;
+                  selectiveBroadcast records for changed masters are
+                  EMITTED as a part-addressed `MsgBatch` (not scattered
+                  into other parts' rows).
+       -- router.route(bcast) --
+  round_b_emit  : delivered broadcasts apply at local replicas; per-vertex
+                  feature *deltas* and new-edge messages become aggregator
+                  RMI records (delta, dcnt) addressed to destination
+                  masters. reduce / replace / remove all collapse to
+                  additive records (core/aggregators.py).
+       -- router.route(rmis) --
+  apply_rmis    : one local segment scatter-add applies any RMI mix at the
+                  local masters.
+  forward_psi   : dirty masters run the update (psi) under the intra-layer
+                  window and emit into a per-part capacity-limited outbox.
+
+Every stage sees only its LOCAL block of parts ([P_loc, ...], global part
+ids offset by `part0`), so the identical body runs on one device
+(LocalRouter: part0=0, P_loc=P) and inside a `shard_map` over the mesh
+(MeshRouter: part0 = axis_index * P_loc). Scalar TickStats are reduced
+through `router.psum`; the per-part `busy` vector stays local and is
+concatenated by the shard_map out-spec.
 
 Windowing replaces "emit now" with deadline tables:
   inter-layer window -> delays the reduce of a source vertex (red_*),
@@ -24,17 +41,17 @@ has been seen — identical to the static oracle's in-degree once quiescent.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import windowing as win
 from repro.core.aggregators import mean_read
-from repro.core.events import EdgeBatch, FeatBatch, ReplBatch
-from repro.core.state import LayerState, TopoState
+from repro.core.events import EdgeBatch, FeatBatch, MsgBatch, ReplBatch
+from repro.core.state import LayerState, TopoState, local_index
+from repro.dist.router import LocalRouter
 
 
 @dataclass(frozen=True)
@@ -56,7 +73,8 @@ jax.tree_util.register_dataclass(
 def zero_stats(n_parts: int) -> TickStats:
     """Additive identity for TickStats — the summed carry of the super-tick
     scan starts here; dtypes must match what the tick body emits (int32 on
-    the default 32-bit jnp) or the scan carry would be ill-typed."""
+    the default 32-bit jnp) or the scan carry would be ill-typed. Under the
+    mesh `n_parts` is the LOCAL part count (busy stays shard-local)."""
     z = jnp.zeros((), jnp.int32)
     return TickStats(broadcast_msgs=z, reduce_msgs=z, cross_part_msgs=z,
                      emitted=z, dropped=z,
@@ -67,84 +85,98 @@ def add_stats(a: TickStats, b: TickStats) -> TickStats:
     return jax.tree.map(jnp.add, a, b)
 
 
-def _flat(part, slot, N):
-    return part * N + slot
+# ===================================================== compute-plane stages
 
+def round_a_apply(topo: TopoState, ls: LayerState, inbox: FeatBatch,
+                  new_repl: ReplBatch, part0):
+    """Round A, emit half: apply the inbox at LOCAL masters and build the
+    broadcast MsgBatch for replication records whose master changed.
 
-def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
-                    inbox: FeatBatch, new_edges: EdgeBatch,
-                    new_repl: ReplBatch, now: jnp.ndarray,
-                    wconf: win.WindowConfig, outbox_cap: int):
-    """Advance one GNN layer by one tick (pure, trace-friendly).
-
-    `layer` supplies message/update (phi/psi): layer.message(params, x) and
-    layer.update(params, x_self, agg_read) — e.g. graph/sage.SAGELayer.
-    Returns (new LayerState, outbox FeatBatch, TickStats).
-
-    This is the un-jitted body so the super-tick driver can inline all L
-    layers inside one `lax.scan` step; the per-tick reference path wraps it
-    in `layer_tick` below.
+    Returns (feat_flat, changed, has_feat, bcast, busy, n_bcast, n_cross)
+    — all [P_loc * N]-flat local arrays except the part-addressed bcast.
     """
-    P, N, d_in = ls.feat.shape
-    busy = jnp.zeros((P,), jnp.int32)
+    P_loc, N, d_in = ls.feat.shape
+    busy = jnp.zeros((P_loc,), jnp.int32)
 
-    # ---------------- Round A: apply inbox at masters, broadcast to replicas
-    in_idx = jnp.where(inbox.valid, _flat(inbox.part, inbox.slot, N), P * N)
-    feat_flat = ls.feat.reshape(P * N, d_in)
+    in_idx, in_lp = local_index(inbox.part, inbox.slot, part0, P_loc, N,
+                                inbox.valid)
+    feat_flat = ls.feat.reshape(P_loc * N, d_in)
     # coalesce duplicate targets within the tick: last-writer-wins is fine
     # for idempotent feature values; use scatter (later rows overwrite).
     feat_flat = feat_flat.at[in_idx].set(inbox.feat, mode="drop")
-    changed = jnp.zeros((P * N,), bool).at[in_idx].set(True, mode="drop")
-    has_feat = ls.has_feat.reshape(P * N).at[in_idx].set(True, mode="drop")
-    busy = busy.at[inbox.part].add(inbox.valid.astype(jnp.int32), mode="drop")
+    changed = jnp.zeros((P_loc * N,), bool).at[in_idx].set(True, mode="drop")
+    has_feat = ls.has_feat.reshape(P_loc * N).at[in_idx].set(True, mode="drop")
+    busy = busy.at[in_lp].add(1, mode="drop")
 
     # replica-creation sync: a NEW replica immediately receives its master's
     # current state (the paper replicates state on placement, §5.1) — mark
-    # the master "changed" so the normal broadcast below covers the new
-    # record; only the new record fires because older replicas already hold
-    # the value (idempotent re-set, coalesced by the same scatter).
-    nr_midx = _flat(new_repl.part, new_repl.master_slot, N)
-    nr_push = new_repl.valid & has_feat[nr_midx]
-    changed = changed.at[jnp.where(nr_push, nr_midx, P * N)].set(
+    # the master "changed" so the broadcast below covers the new record;
+    # only the new record fires because older replicas already hold the
+    # value (idempotent re-set, coalesced by the same scatter).
+    nr_idx, _ = local_index(new_repl.part, new_repl.master_slot, part0,
+                            P_loc, N, new_repl.valid)
+    nr_push = (nr_idx < P_loc * N) & has_feat[jnp.minimum(nr_idx,
+                                                          P_loc * N - 1)]
+    changed = changed.at[jnp.where(nr_push, nr_idx, P_loc * N)].set(
         True, mode="drop")
 
-    # broadcast: replication records whose master changed this tick
-    r_midx = _flat(jnp.arange(P)[:, None], topo.r_master_slot, N)   # [P,R]
+    # broadcast emission: replication records whose master changed this tick
+    pp = jnp.arange(P_loc)[:, None]
+    r_midx = pp * N + topo.r_master_slot                           # [Pl,R]
     r_live = topo.r_valid & changed[r_midx]
-    r_tgt = jnp.where(r_live, _flat(topo.r_rep_part, topo.r_rep_slot, N), P * N)
-    r_val = feat_flat[r_midx.reshape(-1)]
-    feat_flat = feat_flat.at[r_tgt.reshape(-1)].set(
-        jnp.where(r_live.reshape(-1)[:, None], r_val, 0.0), mode="drop")
-    # NOTE .set with masked rows: invalid rows point to OOB (dropped)
-    changed = changed.at[jnp.where(r_live, r_tgt, P * N).reshape(-1)].set(
-        True, mode="drop")
-    has_feat = has_feat.at[jnp.where(r_live, r_tgt, P * N).reshape(-1)].set(
-        True, mode="drop")
+    src_part = jnp.broadcast_to(part0 + pp, r_live.shape)
+    bcast = MsgBatch(
+        part=topo.r_rep_part.reshape(-1),
+        slot=topo.r_rep_slot.reshape(-1),
+        vec=jnp.where(r_live.reshape(-1)[:, None],
+                      feat_flat[r_midx.reshape(-1)], 0.0),
+        cnt=jnp.zeros((r_live.size,), jnp.float32),
+        src_part=src_part.reshape(-1),
+        valid=r_live.reshape(-1))
     n_bcast = jnp.sum(r_live)
-    bcast_cross = jnp.sum(r_live & (topo.r_rep_part != jnp.arange(P)[:, None]))
-    busy = busy.at[topo.r_rep_part].add(r_live.astype(jnp.int32), mode="drop")
+    n_cross = jnp.sum(r_live & (topo.r_rep_part != part0 + pp))
+    return feat_flat, changed, has_feat, bcast, busy, n_bcast, n_cross
 
-    # ---------------- Round B(1): new-edge RMIs  (addElement(e), Alg. 1)
-    x_sent_flat = ls.x_sent.reshape(P * N, d_in)
-    has_sent = ls.has_sent.reshape(P * N)
-    e_sidx = _flat(new_edges.part, new_edges.src_slot, N)
-    e_ready = new_edges.valid & has_sent[e_sidx]                 # msgReady
-    e_msg = layer.message(params, x_sent_flat[e_sidx])
-    d_agg = e_msg.shape[-1]
-    e_tgt = jnp.where(e_ready,
-                      _flat(new_edges.dst_master_part, new_edges.dst_master_slot, N),
-                      P * N)
-    busy = busy.at[new_edges.part].add(new_edges.valid.astype(jnp.int32),
-                                       mode="drop")
 
-    # ---------------- Round B(2): per-vertex reduce/replace deltas
-    # decide which touched vertices send this tick (window policy)
-    freq = win.cms_query(ls.cms, jnp.arange(P * N)) if wconf.kind == win.ADAPTIVE \
-        else jnp.zeros((P * N,), jnp.float32)
-    red_pending = ls.red_pending.reshape(P * N) | changed
-    red_deadline = ls.red_deadline.reshape(P * N)
+def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
+                 changed, has_feat, bcast_d: MsgBatch, new_edges: EdgeBatch,
+                 now, wconf: win.WindowConfig, part0, busy, freq):
+    """Round B, emit half: apply DELIVERED broadcasts at local replicas,
+    decide which touched vertices send this tick (inter-layer window), and
+    emit the tick's aggregator RMI records.
+
+    Returns (feat_flat, changed, has_feat, x_sent_flat, has_sent,
+    red_pending, red_deadline, rmis, busy, n_reduce, n_cross).
+    """
+    P_loc, N, d_in = ls.feat.shape
+
+    # delivered broadcasts land at local replicas (set semantics; targets
+    # are unique — one master per replica, host-coalesced inbox)
+    b_idx, b_lp = local_index(bcast_d.part, bcast_d.slot, part0, P_loc, N,
+                              bcast_d.valid)
+    feat_flat = feat_flat.at[b_idx].set(bcast_d.vec, mode="drop")
+    changed = changed.at[b_idx].set(True, mode="drop")
+    has_feat = has_feat.at[b_idx].set(True, mode="drop")
+    busy = busy.at[b_lp].add(1, mode="drop")
+
+    x_sent_flat = ls.x_sent.reshape(P_loc * N, d_in)
+    has_sent = ls.has_sent.reshape(P_loc * N)
+
+    # new-edge RMIs (addElement(e), Alg. 1) — emitted by the part that owns
+    # the edge record (it holds the source replica's x_sent)
+    e_sidx, e_lp = local_index(new_edges.part, new_edges.src_slot, part0,
+                               P_loc, N, new_edges.valid)
+    e_local = e_sidx < P_loc * N
+    e_gather = jnp.minimum(e_sidx, P_loc * N - 1)
+    e_ready = e_local & has_sent[e_gather]                       # msgReady
+    e_msg = layer.message(params, x_sent_flat[e_gather])
+    busy = busy.at[e_lp].add(1, mode="drop")
+
+    # per-vertex reduce/replace deltas under the inter-layer window
+    red_pending = ls.red_pending.reshape(P_loc * N) | changed
+    red_deadline = ls.red_deadline.reshape(P_loc * N)
     touched_deadline = win.next_deadline(
-        wconf, now, red_deadline, ls.red_pending.reshape(P * N), freq)
+        wconf, now, red_deadline, ls.red_pending.reshape(P_loc * N), freq)
     red_deadline = jnp.where(changed, touched_deadline, red_deadline)
     # STREAMING evicts everything pending (incl. deadlines scheduled by a
     # previous windowed policy — the drain path of flush())
@@ -159,97 +191,191 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
     delta_cnt = jnp.where(send, jnp.where(has_sent, 0.0, 1.0), 0.0)
 
     # per-edge gather of source deltas -> destination masters
-    pp = jnp.arange(P)[:, None]
-    o_sidx = _flat(pp, topo.e_src_slot, N)                        # [P,E]
+    pp = jnp.arange(P_loc)[:, None]
+    o_sidx = pp * N + topo.e_src_slot                            # [Pl,E]
     o_live = topo.e_valid & send[o_sidx]
-    o_tgt = jnp.where(o_live, _flat(topo.e_dst_mpart, topo.e_dst_mslot, N), P * N)
-    o_vec = delta_vec[o_sidx.reshape(-1)]
-    o_cnt = delta_cnt[o_sidx.reshape(-1)] * o_live.reshape(-1)
-
-    # ---------------- apply RMIs at masters (one segment scatter-add)
-    agg_flat = ls.agg.reshape(P * N, d_agg)
-    cnt_flat = ls.agg_cnt.reshape(P * N)
-    agg_flat = agg_flat.at[e_tgt].add(
-        jnp.where(e_ready[:, None], e_msg, 0.0), mode="drop")
-    cnt_flat = cnt_flat.at[e_tgt].add(e_ready.astype(jnp.float32), mode="drop")
-    agg_flat = agg_flat.at[o_tgt.reshape(-1)].add(
-        jnp.where(o_live.reshape(-1)[:, None], o_vec, 0.0), mode="drop")
-    cnt_flat = cnt_flat.at[o_tgt.reshape(-1)].add(o_cnt, mode="drop")
-    agg_dirty = jnp.zeros((P * N,), bool)
-    agg_dirty = agg_dirty.at[e_tgt].set(e_ready, mode="drop")
-    agg_dirty = agg_dirty.at[o_tgt.reshape(-1)].max(o_live.reshape(-1), mode="drop")
-
+    o_src_part = jnp.broadcast_to(part0 + pp, o_live.shape)
+    rmis = MsgBatch(
+        part=jnp.concatenate([new_edges.dst_master_part,
+                              topo.e_dst_mpart.reshape(-1)]),
+        slot=jnp.concatenate([new_edges.dst_master_slot,
+                              topo.e_dst_mslot.reshape(-1)]),
+        vec=jnp.concatenate([jnp.where(e_ready[:, None], e_msg, 0.0),
+                             jnp.where(o_live.reshape(-1)[:, None],
+                                       delta_vec[o_sidx.reshape(-1)], 0.0)]),
+        cnt=jnp.concatenate([e_ready.astype(jnp.float32),
+                             delta_cnt[o_sidx.reshape(-1)]
+                             * o_live.reshape(-1)]),
+        src_part=jnp.concatenate([new_edges.part, o_src_part.reshape(-1)]),
+        valid=jnp.concatenate([e_ready, o_live.reshape(-1)]))
     n_reduce = jnp.sum(e_ready) + jnp.sum(o_live)
-    red_cross = (jnp.sum(e_ready & (new_edges.dst_master_part != new_edges.part))
-                 + jnp.sum(o_live & (topo.e_dst_mpart != pp)))
-    busy = busy.at[new_edges.dst_master_part].add(e_ready.astype(jnp.int32),
-                                                  mode="drop")
-    busy = busy.at[topo.e_dst_mpart].add(o_live.astype(jnp.int32), mode="drop")
+    n_cross = (jnp.sum(e_ready
+                       & (new_edges.dst_master_part != new_edges.part))
+               + jnp.sum(o_live & (topo.e_dst_mpart != part0 + pp)))
 
     # commit send bookkeeping
     x_sent_flat = jnp.where(send[:, None], feat_flat, x_sent_flat)
     has_sent = has_sent | send
     red_pending = red_pending & ~send
+    return (feat_flat, changed, has_feat, x_sent_flat, has_sent,
+            red_pending, red_deadline, rmis, busy, n_reduce, n_cross)
 
-    # ---------------- forward/update phase (psi), intra-layer window
-    is_m = topo.is_master.reshape(P * N)
+
+def apply_rmis(ls: LayerState, rmis_d: MsgBatch, part0, busy):
+    """Apply DELIVERED aggregator RMIs at local masters: one segment
+    scatter-add regardless of the reduce/replace/remove mix.
+
+    Returns (agg_flat, cnt_flat, agg_dirty, busy)."""
+    P_loc, N, d_agg = ls.agg.shape
+    idx, lp = local_index(rmis_d.part, rmis_d.slot, part0, P_loc, N,
+                          rmis_d.valid)
+    live = idx < P_loc * N
+    agg_flat = ls.agg.reshape(P_loc * N, d_agg).at[idx].add(
+        jnp.where(live[:, None], rmis_d.vec, 0.0), mode="drop")
+    cnt_flat = ls.agg_cnt.reshape(P_loc * N).at[idx].add(
+        rmis_d.cnt * live, mode="drop")
+    agg_dirty = jnp.zeros((P_loc * N,), bool).at[idx].max(live, mode="drop")
+    busy = busy.at[lp].add(1, mode="drop")
+    return agg_flat, cnt_flat, agg_dirty, busy
+
+
+def forward_psi(layer, params, topo: TopoState, ls: LayerState, feat_flat,
+                has_feat, agg_flat, cnt_flat, agg_dirty, changed, now,
+                wconf: win.WindowConfig, outbox_cap_pp: int, part0, busy,
+                freq):
+    """Forward/update phase (psi) under the intra-layer window, with a
+    PER-PART capacity-limited outbox (first `outbox_cap_pp` evicted slots
+    per part emit; the rest stay pending -> natural backpressure).
+
+    Returns (fwd_pending, fwd_deadline, outbox, busy, n_emit, n_drop)."""
+    P_loc, N, _ = ls.feat.shape
+    is_m = topo.is_master.reshape(P_loc * N)
     dirty = (agg_dirty | (changed & is_m)) & has_feat & is_m
-    fwd_pending = ls.fwd_pending.reshape(P * N) | dirty
-    fwd_deadline = ls.fwd_deadline.reshape(P * N)
+    fwd_pending = ls.fwd_pending.reshape(P_loc * N) | dirty
+    fwd_deadline = ls.fwd_deadline.reshape(P_loc * N)
     fwd_touch_dl = win.next_deadline(
-        wconf, now, fwd_deadline, ls.fwd_pending.reshape(P * N), freq)
+        wconf, now, fwd_deadline, ls.fwd_pending.reshape(P_loc * N), freq)
     fwd_deadline = jnp.where(dirty, fwd_touch_dl, fwd_deadline)
     evict = fwd_pending if wconf.kind == win.STREAMING else \
         fwd_pending & (fwd_deadline <= now)
 
-    # capacity-limited emission: pick the first outbox_cap evicted vertices
-    # (rest stay pending -> natural backpressure)
-    order = jnp.where(evict, jnp.arange(P * N), P * N)
-    k = min(outbox_cap, P * N)
-    picked = jax.lax.top_k(-order, k)[0] * -1                     # ascending
-    picked_valid = picked < P * N
-    picked = jnp.minimum(picked, P * N - 1)
-    emitted_mask = jnp.zeros((P * N,), bool).at[picked].set(
-        picked_valid, mode="drop")
+    order = jnp.where(evict.reshape(P_loc, N),
+                      jnp.arange(N)[None, :], N)                # [Pl,N]
+    k = max(1, min(outbox_cap_pp, N))
+    picked = jax.lax.top_k(-order, k)[0] * -1                   # ascending
+    picked_valid = picked < N                                   # [Pl,k]
+    picked = jnp.minimum(picked, N - 1)
+    flat_picked = (jnp.arange(P_loc)[:, None] * N + picked).reshape(-1)
+    # invalid picks go to the OOB sentinel, NOT clamped onto slot N-1: a
+    # duplicate-index scatter-set of (True, False) can resolve to False
+    # and silently erase the emission (fwd_pending then never clears)
+    mask_idx = jnp.where(picked_valid.reshape(-1), flat_picked, P_loc * N)
+    emitted_mask = jnp.zeros((P_loc * N,), bool).at[mask_idx].set(
+        True, mode="drop")
     deferred = evict & ~emitted_mask
     n_emit = jnp.sum(emitted_mask)
     n_drop = jnp.sum(deferred)
 
-    x_self = feat_flat[picked]
-    agg_read = mean_read(agg_flat, cnt_flat)[picked]
+    x_self = feat_flat[flat_picked]
+    agg_read = mean_read(agg_flat, cnt_flat)[flat_picked]
     x_out = layer.update(params, x_self, agg_read)
-    outbox = FeatBatch(part=(picked // N).astype(jnp.int32),
-                       slot=(picked % N).astype(jnp.int32),
-                       feat=x_out, valid=picked_valid)
+    out_part = jnp.broadcast_to(part0 + jnp.arange(P_loc)[:, None],
+                                picked.shape)
+    outbox = FeatBatch(part=out_part.reshape(-1).astype(jnp.int32),
+                       slot=picked.reshape(-1).astype(jnp.int32),
+                       feat=x_out, valid=picked_valid.reshape(-1))
     fwd_pending = fwd_pending & ~emitted_mask
-    busy = busy.at[(picked // N)].add(picked_valid.astype(jnp.int32),
-                                      mode="drop")
+    busy = busy + jnp.sum(picked_valid, axis=1, dtype=jnp.int32)
+    return fwd_pending, fwd_deadline, outbox, busy, n_emit, n_drop
 
-    # ---------------- adaptive-session CMS update
+
+# ======================================================== the full tick body
+
+def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
+                    inbox: FeatBatch, new_edges: EdgeBatch,
+                    new_repl: ReplBatch, now: jnp.ndarray,
+                    wconf: win.WindowConfig, outbox_cap: int, router=None):
+    """Advance one GNN layer by one tick (pure, trace-friendly).
+
+    `layer` supplies message/update (phi/psi): layer.message(params, x) and
+    layer.update(params, x_self, agg_read) — e.g. graph/sage.SAGELayer.
+    `router` owns cross-part delivery (default: LocalRouter over the full
+    part axis). `outbox_cap` is the GLOBAL per-tick emission budget; each
+    part gets outbox_cap // router.n_parts slots.
+    Returns (new LayerState, outbox FeatBatch, TickStats) — stats scalars
+    are router.psum'd (global), `busy` stays local [P_loc].
+
+    This is the un-jitted body so the super-tick driver can inline all L
+    layers inside one `lax.scan` step (and the mesh path can wrap the whole
+    program in one `shard_map`); the per-tick reference path wraps it in
+    `layer_tick` below.
+    """
+    if router is None:
+        router = LocalRouter(n_parts=ls.feat.shape[0])
+    part0 = router.part0()
+    P_loc, N, d_in = ls.feat.shape
+    cap_pp = max(1, outbox_cap // router.n_parts)
+
+    keys = part0 * N + jnp.arange(P_loc * N)          # global CMS keys
+    freq = win.cms_query(ls.cms, keys) if wconf.kind == win.ADAPTIVE \
+        else jnp.zeros((P_loc * N,), jnp.float32)
+
+    # ---- Round A: apply inbox at masters, emit + route the broadcast
+    (feat_flat, changed, has_feat, bcast, busy,
+     n_bcast, bcast_cross) = round_a_apply(topo, ls, inbox, new_repl, part0)
+    bcast_d = router.route(bcast)
+
+    # ---- Round B: apply broadcast at replicas, emit + route the RMIs
+    (feat_flat, changed, has_feat, x_sent_flat, has_sent, red_pending,
+     red_deadline, rmis, busy, n_reduce, red_cross) = round_b_emit(
+        layer, params, topo, ls, feat_flat, changed, has_feat, bcast_d,
+        new_edges, now, wconf, part0, busy, freq)
+    rmis_d = router.route(rmis)
+
+    # ---- apply RMIs at local masters
+    agg_flat, cnt_flat, agg_dirty, busy = apply_rmis(ls, rmis_d, part0, busy)
+
+    # ---- forward/update phase (psi), intra-layer window
+    (fwd_pending, fwd_deadline, outbox, busy,
+     n_emit, n_drop) = forward_psi(
+        layer, params, topo, ls, feat_flat, has_feat, agg_flat, cnt_flat,
+        agg_dirty, changed, now, wconf, cap_pp, part0, busy, freq)
+
+    # ---- adaptive-session CMS update (sketch replicated across devices:
+    # local contributions are psum'd so every device applies the same add)
     cms = ls.cms
     if wconf.kind == win.ADAPTIVE:
-        touch_keys = jnp.where(changed, jnp.arange(P * N), 0)
-        cms = win.cms_update(cms, touch_keys, changed.astype(jnp.float32),
-                             decay=wconf.cms_decay)
+        touch_keys = jnp.where(changed, keys, 0)
+        delta = win.cms_delta(cms.shape, touch_keys,
+                              changed.astype(jnp.float32))
+        cms = cms * wconf.cms_decay + router.psum(delta)
 
+    d_agg = agg_flat.shape[-1]
     new_ls = LayerState(
-        feat=feat_flat.reshape(P, N, d_in), has_feat=has_feat.reshape(P, N),
-        x_sent=x_sent_flat.reshape(P, N, d_in), has_sent=has_sent.reshape(P, N),
-        agg=agg_flat.reshape(P, N, d_agg), agg_cnt=cnt_flat.reshape(P, N),
-        red_pending=red_pending.reshape(P, N),
-        red_deadline=red_deadline.reshape(P, N),
-        fwd_pending=fwd_pending.reshape(P, N),
-        fwd_deadline=fwd_deadline.reshape(P, N),
-        cms=cms, last_touch=jnp.where(changed, now, ls.last_touch.reshape(P * N)
-                                      ).reshape(P, N))
-    stats = TickStats(broadcast_msgs=n_bcast, reduce_msgs=n_reduce,
-                      cross_part_msgs=bcast_cross + red_cross,
-                      emitted=n_emit, dropped=n_drop, busy=busy)
+        feat=feat_flat.reshape(P_loc, N, d_in),
+        has_feat=has_feat.reshape(P_loc, N),
+        x_sent=x_sent_flat.reshape(P_loc, N, d_in),
+        has_sent=has_sent.reshape(P_loc, N),
+        agg=agg_flat.reshape(P_loc, N, d_agg),
+        agg_cnt=cnt_flat.reshape(P_loc, N),
+        red_pending=red_pending.reshape(P_loc, N),
+        red_deadline=red_deadline.reshape(P_loc, N),
+        fwd_pending=fwd_pending.reshape(P_loc, N),
+        fwd_deadline=fwd_deadline.reshape(P_loc, N),
+        cms=cms,
+        last_touch=jnp.where(changed, now,
+                             ls.last_touch.reshape(P_loc * N)
+                             ).reshape(P_loc, N))
+    psum = router.psum
+    stats = TickStats(broadcast_msgs=psum(n_bcast),
+                      reduce_msgs=psum(n_reduce),
+                      cross_part_msgs=psum(bcast_cross + red_cross),
+                      emitted=psum(n_emit), dropped=psum(n_drop), busy=busy)
     return new_ls, outbox, stats
 
 
-layer_tick = partial(jax.jit, static_argnames=("layer", "wconf",
-                                               "outbox_cap"))(layer_tick_body)
+layer_tick = partial(jax.jit, static_argnames=("layer", "wconf", "outbox_cap",
+                                               "router"))(layer_tick_body)
 
 
 def has_work(ls: LayerState) -> jnp.ndarray:

@@ -80,16 +80,23 @@ def cms_hash(keys: jnp.ndarray, depth: int, width: int) -> jnp.ndarray:
     return jnp.stack(rows)
 
 
+def cms_delta(shape, keys: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """The [depth, width] additive table for one update batch.
+
+    Split out from `cms_update` so a sharded tick can keep the sketch
+    replicated: each device builds its local delta, psums it, and every
+    device applies the identical add (repro/dist/router.py)."""
+    depth, width = shape
+    idx = cms_hash(keys, depth, width)                       # [depth, n]
+    rows = [jnp.zeros((width,), weights.dtype).at[idx[d]].add(weights)
+            for d in range(depth)]
+    return jnp.stack(rows)
+
+
 def cms_update(cms: jnp.ndarray, keys: jnp.ndarray, weights: jnp.ndarray,
                decay: float = 1.0) -> jnp.ndarray:
     """Add `weights` at `keys`; optionally decay the whole sketch first."""
-    depth, width = cms.shape
-    idx = cms_hash(keys, depth, width)                       # [depth, n]
-    cms = cms * decay
-    for d in range(depth):
-        cms = cms.at[d].add(
-            jnp.zeros((width,), cms.dtype).at[idx[d]].add(weights))
-    return cms
+    return cms * decay + cms_delta(cms.shape, keys, weights)
 
 
 def cms_query(cms: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:

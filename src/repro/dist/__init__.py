@@ -1,7 +1,10 @@
-"""Distributed-runtime modules: sharding rules, compressed gradient
+"""Distributed-runtime modules: the streaming engine's routing plane
+(router.py) and carry sharding rules (sharding.py), compressed gradient
 exchange, explicit expert parallelism and vertex-cut GNN locality.
 
-Everything here is mesh-facing: the single-device engine (repro/core)
-never imports this package, so CPU test runs stay import-light; the
-dry-run, the perf variants and the multi-device subprocess tests do.
+`router.py` and `sharding.py` are the light, jax-only pieces the core
+engine imports (LocalRouter is the single-device default router of the
+tick program); the rest is mesh-facing only — the dry-run, the perf
+variants and the multi-device tests import it, so CPU test runs stay
+import-light.
 """

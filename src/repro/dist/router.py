@@ -1,0 +1,119 @@
+"""The routing plane: delivery of part-addressed `MsgBatch` records.
+
+The streaming tick is split into two planes (ISSUE 2 tentpole):
+
+  * COMPUTE plane — pure part-local stages in `core/tick.py`
+    (`round_a_apply`, `round_b_emit`, `apply_rmis`, `forward_psi`) that
+    never write into another part's rows; every cross-part effect is a
+    `MsgBatch` (core/events.py) addressed by global (part, slot).
+  * ROUTING plane — a Router delivers those records to whichever device
+    owns the destination part. Two golden-equivalent implementations:
+
+      LocalRouter : one device owns every part; delivery is the identity
+                    and the apply stages' flat scatter does the rest.
+      MeshRouter  : parts are block-sharded over a 1-D ("data",) mesh axis
+                    (`launch/mesh.py`); delivery buckets records by
+                    destination device and exchanges them with ONE
+                    fixed-capacity `lax.all_to_all` per round. Per-bucket
+                    capacity equals the full emission capacity C, so no
+                    record can ever overflow a bucket (worst case: all C
+                    records target one device) — correctness never depends
+                    on traffic shape, at the price of a D x C exchange.
+
+Routers are small frozen dataclasses so they can ride jit boundaries as
+static arguments. `MeshRouter` methods are only valid INSIDE a
+`shard_map` over its axis (they call `lax.axis_index`/`lax.all_to_all`);
+`LocalRouter` works anywhere. `psum` abstracts the cross-device reduction
+used for scalar TickStats, quiescence voting and the replicated
+CountMinSketch update (identity on one device).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.events import MsgBatch
+
+
+@dataclass(frozen=True)
+class LocalRouter:
+    """Single-device router: every part is local, delivery is identity."""
+    n_parts: int
+
+    @property
+    def n_devices(self) -> int:
+        return 1
+
+    @property
+    def n_local_parts(self) -> int:
+        return self.n_parts
+
+    def part0(self):
+        """Global id of the first locally-owned part."""
+        return jnp.int32(0)
+
+    def route(self, msg: MsgBatch) -> MsgBatch:
+        return msg
+
+    def psum(self, x):
+        return x
+
+
+@dataclass(frozen=True)
+class MeshRouter:
+    """Sharded router: parts block-sharded over `axis`, all_to_all delivery.
+
+    Device d owns parts [d * Pl, (d + 1) * Pl) with Pl = n_parts
+    // n_devices (validated by PipelineConfig.validate). Must run inside a
+    shard_map over `axis` whose size is exactly `n_devices`.
+    """
+    n_parts: int
+    n_devices: int
+    axis: str = "data"
+
+    @property
+    def n_local_parts(self) -> int:
+        return self.n_parts // self.n_devices
+
+    def part0(self):
+        return lax.axis_index(self.axis).astype(jnp.int32) * \
+            jnp.int32(self.n_local_parts)
+
+    def psum(self, x):
+        return lax.psum(x, self.axis)
+
+    def route(self, msg: MsgBatch) -> MsgBatch:
+        """Deliver records to the devices owning their destination parts.
+
+        Compaction: rank each valid record among records bound for the
+        same destination device (cumsum over a one-hot [C, D] membership),
+        scatter into a [D, C] send buffer, all_to_all, return the [D * C]
+        received rows (block j = what device j sent here). Invalid rows
+        and empty bucket tail stay masked out.
+        """
+        D = self.n_devices
+        if D == 1:
+            return msg
+        Pl = self.n_local_parts
+        C = msg.valid.shape[0]
+        dst_dev = jnp.clip(msg.part // Pl, 0, D - 1)
+        member = (jnp.where(msg.valid, dst_dev, D)[:, None]
+                  == jnp.arange(D)[None, :])                      # [C, D]
+        pos = jnp.cumsum(member.astype(jnp.int32), axis=0) - 1
+        pos_row = jnp.sum(jnp.where(member, pos, 0), axis=1)      # [C]
+        send_idx = jnp.where(msg.valid, dst_dev * C + pos_row, D * C)
+
+        def bucket(x):
+            buf = jnp.zeros((D * C,) + x.shape[1:], x.dtype)
+            return buf.at[send_idx].set(x, mode="drop")
+
+        ex = lambda x: lax.all_to_all(x, self.axis, split_axis=0,
+                                      concat_axis=0, tiled=True)
+        return MsgBatch(part=ex(bucket(msg.part)),
+                        slot=ex(bucket(msg.slot)),
+                        vec=ex(bucket(msg.vec)),
+                        cnt=ex(bucket(msg.cnt)),
+                        src_part=ex(bucket(msg.src_part)),
+                        valid=ex(bucket(msg.valid)))

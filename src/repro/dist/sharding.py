@@ -89,3 +89,47 @@ FAMILY_INPUT_RULES = {
     "d3gnn": _input_rule,
     "recsys": _input_rule,
 }
+
+
+# ------------------------------------------------ streaming-engine carry
+# NamedSharding rules for the streaming `PipelineCarry` (core/state.py):
+# every [P, ...] table is block-sharded over the ("data",) axis so the
+# donated super-tick carry stays device-resident at its owning shard; the
+# CountMinSketch, tick clock and quiet counter are replicated (the tick
+# body keeps them consistent via psum). The pspec tree doubles as the
+# shard_map in/out specs for the tick program (core/pipeline.py).
+
+def _carry_tree(n_layers: int, part, rep):
+    """Build a PipelineCarry-shaped tree with `part` at every
+    part-leading leaf and `rep` at every replicated leaf."""
+    from repro.core.state import LayerState, PipelineCarry, TopoState
+    topo = TopoState(
+        e_src_slot=part, e_dst_slot=part, e_dst_mpart=part, e_dst_mslot=part,
+        e_valid=part, r_master_slot=part, r_rep_part=part, r_rep_slot=part,
+        r_valid=part, v_exists=part, is_master=part)
+    layer = LayerState(
+        feat=part, has_feat=part, x_sent=part, has_sent=part, agg=part,
+        agg_cnt=part, red_pending=part, red_deadline=part, fwd_pending=part,
+        fwd_deadline=part, cms=rep, last_touch=part)
+    return PipelineCarry(topo=topo, layers=(layer,) * n_layers, sink=part,
+                         sink_seen=part, now=rep, quiet=rep)
+
+
+def carry_pspecs(n_layers: int, axis: str = "data"):
+    """PartitionSpec tree for PipelineCarry (shard_map in/out specs)."""
+    return _carry_tree(n_layers, P(axis), P())
+
+
+def carry_shardings(mesh: Mesh, n_layers: int, axis: str = "data"):
+    """NamedSharding tree for device_put-ing the carry onto the mesh."""
+    return _carry_tree(n_layers, NamedSharding(mesh, P(axis)),
+                       NamedSharding(mesh, P()))
+
+
+def stats_pspecs(n_layers: int, axis: str = "data"):
+    """Per-layer TickStats out-specs: scalars are psum'd inside the tick
+    body (replicated), the per-part busy vector concatenates over parts."""
+    from repro.core.tick import TickStats
+    one = TickStats(broadcast_msgs=P(), reduce_msgs=P(), cross_part_msgs=P(),
+                    emitted=P(), dropped=P(), busy=P(axis))
+    return tuple(one for _ in range(n_layers))

@@ -18,6 +18,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_stream_mesh(n_devices: int | None = None):
+    """1-D ("data",) mesh for the streaming engine's part axis.
+
+    `D3Pipeline(mesh=make_stream_mesh())` shards the part axis of the
+    tick over it (MeshRouter). Defaults to all visible devices; to force a
+    multi-device CPU mesh for tests set
+    XLA_FLAGS=--xla_force_host_platform_device_count=N before first jax
+    use (see the "Distributed execution" README section).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n > len(devs):
+        raise ValueError(f"requested {n} devices, only {len(devs)} visible "
+                         "(forgot --xla_force_host_platform_device_count?)")
+    return Mesh(np.asarray(devs[:n]), ("data",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """The data-parallel axes: ("pod","data") on multi-pod else ("data",)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
