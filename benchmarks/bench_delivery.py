@@ -1,0 +1,65 @@
+"""Delivery-backend comparison: `delivery_backend="xla"` scatters vs
+`delivery_backend="pallas"` segment-reduce kernels (ISSUE 3 tentpole).
+
+Metric: stream events ingested per second end-to-end (super-tick driver),
+plus the tick's message-volume telemetry (broadcast/reduce/cross-part) —
+identical across backends by the golden tests, reported here so BENCH.json
+carries both speed AND volume numbers.
+
+On non-TPU backends the pallas path runs in interpret mode, so the CPU
+row measures interpret overhead, not kernel speedup — the point of the
+row pair in CI is (a) trajectory tracking and (b) keeping the pallas path
+exercised end-to-end in the bench harness; on a TPU the same harness
+reports the real MXU-delivery comparison.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import fmt_row, make_case, make_pipeline
+
+TICK_EDGES, SUPER_T = 64, 8
+
+
+def _build(case, backend):
+    return make_pipeline(case, n_parts=4, node_cap=256, edge_cap=1024,
+                         feat_cap=256, edge_tick_cap=64,
+                         delivery_backend=backend)[2]
+
+
+def _timed(case, backend, warm_edges=320):
+    pipe = _build(case, backend)                 # warm-up: compile the scan
+    pipe.run_stream_super(case.edges[:warm_edges], case.feats,
+                          tick_edges=TICK_EDGES, super_ticks=SUPER_T)
+    pipe.flush_super(max_ticks=64, T=SUPER_T)
+    pipe = _build(case, backend)
+    t0 = time.perf_counter()
+    pipe.run_stream_super(case.edges, case.feats, tick_edges=TICK_EDGES,
+                          super_ticks=SUPER_T)
+    pipe.flush_super(max_ticks=128, T=SUPER_T)
+    wall = time.perf_counter() - t0
+    return len(case.edges) / wall, pipe.metrics
+
+
+def run(scale: str = "small"):
+    n_edges = {"small": 800, "full": 6000}[scale]
+    case = make_case(n_nodes=200, n_edges=n_edges)
+    rows, base = [], None
+    for backend in ("xla", "pallas"):
+        evs, m = _timed(case, backend)
+        if backend == "xla":
+            base = evs
+        rel = evs / base if base else float("nan")
+        rows.append(fmt_row(
+            f"delivery[{backend}]", 1e6 / evs,
+            f"events_per_s={evs:.0f};vs_xla={rel:.2f}x;"
+            f"broadcast_msgs={m.broadcast_msgs};"
+            f"reduce_msgs={m.reduce_msgs};"
+            f"cross_part_msgs={m.cross_part_msgs};"
+            f"emitted={m.emitted_total}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

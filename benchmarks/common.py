@@ -37,7 +37,7 @@ def make_case(seed=0, n_nodes=400, n_edges=2000, alpha=1.3) -> StreamCase:
 def make_pipeline(case: StreamCase, n_parts=8, window=None,
                   partitioner="hdrf", base_parallelism=2, explosion=1.0,
                   node_cap=None, edge_cap=None, feat_cap=2048,
-                  edge_tick_cap=1024, seed=0):
+                  edge_tick_cap=1024, seed=0, delivery_backend="xla"):
     model = GraphSAGE((D_IN, D_HID, D_HID))
     params = model.init(jax.random.key(0))
     cfg = PipelineConfig(
@@ -47,6 +47,7 @@ def make_pipeline(case: StreamCase, n_parts=8, window=None,
         repl_cap=max(256, 2 * case.n_nodes),
         feat_cap=feat_cap, edge_tick_cap=edge_tick_cap,
         window=window or win.WindowConfig(kind=win.STREAMING),
+        delivery_backend=delivery_backend,
         partitioner=partitioner, base_parallelism=base_parallelism,
         explosion=explosion, max_nodes=case.n_nodes, seed=seed)
     return model, params, D3Pipeline(model, params, cfg)

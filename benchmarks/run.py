@@ -2,16 +2,24 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract), at
 CPU-feasible scale; pass --scale full for the larger configurations.
+
+``--json PATH`` additionally writes the rows as structured JSON (the
+``derived`` k=v;k=v string parsed into a dict) — CI's bench lane runs
+``--profile ci --json BENCH.json`` and uploads the file as the
+perf-snapshot artifact, so the bench trajectory is recorded per commit.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+from types import SimpleNamespace
 
-from benchmarks import (bench_comm_volume, bench_explosion, bench_imbalance,
-                        bench_latency, bench_runtime, bench_scaling,
-                        bench_throughput, bench_training, bench_vs_batch)
+from benchmarks import (bench_comm_volume, bench_delivery, bench_explosion,
+                        bench_imbalance, bench_latency, bench_runtime,
+                        bench_scaling, bench_throughput, bench_training,
+                        bench_vs_batch)
 
 ALL = {
     "fig4a_throughput": bench_throughput,
@@ -23,27 +31,76 @@ ALL = {
     "fig6_explosion": bench_explosion,
     "fig7_latency": bench_latency,
     "dist_scaling": bench_scaling,
+    "delivery_backend": bench_delivery,
+    # the driver comparison alone (fig4a without the 12-policy sweep) —
+    # what the CI perf snapshot tracks
+    "driver_comparison": SimpleNamespace(
+        run=lambda scale="small": bench_throughput.run_driver_comparison(
+            n_edges={"small": 2000, "full": 8000}[scale])),
 }
+
+# fixed-seed subsets: every PROFILES benchmark builds its stream from a
+# seeded rng, so CI snapshots are comparable across commits
+PROFILES = {
+    "ci": ["driver_comparison", "dist_scaling", "delivery_backend"],
+}
+
+
+def parse_derived(derived: str) -> dict:
+    """"k=v;k=v" -> dict, float-casting where possible ("1.40x" -> 1.4)."""
+    out = {}
+    for item in derived.split(";"):
+        if "=" not in item:
+            if item:
+                out[item] = True
+            continue
+        k, v = item.split("=", 1)
+        try:
+            out[k] = float(v[:-1] if v.endswith("x") else v)
+        except ValueError:
+            out[k] = v
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--profile", default=None, choices=sorted(PROFILES),
+                    help="named benchmark subset (overrides --only)")
     ap.add_argument("--scale", default="small", choices=["small", "full"])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as structured JSON")
     args = ap.parse_args()
 
+    if args.profile:
+        selected = {n: ALL[n] for n in PROFILES[args.profile]}
+    else:
+        selected = {n: m for n, m in ALL.items()
+                    if not args.only or args.only in n}
+
     print("name,us_per_call,derived")
-    failed = []
-    for name, mod in ALL.items():
-        if args.only and args.only not in name:
-            continue
+    rows, failed = [], []
+    for name, mod in selected.items():
         try:
             for row in mod.run(scale=args.scale):
                 print(row)
                 sys.stdout.flush()
+                # names may carry commas ("driver[super_tick,T=16]"); the
+                # derived field never does (it is ;-separated) — rsplit
+                rname, us, derived = row.rsplit(",", 2)
+                rows.append({"name": rname, "us_per_call": float(us),
+                             "derived": parse_derived(derived)})
         except Exception as e:  # noqa: BLE001
             failed.append((name, repr(e)))
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "profile": args.profile,
+                       "scale": args.scale,
+                       "benchmarks": sorted(selected),
+                       "failed": [n for n, _ in failed],
+                       "rows": rows}, f, indent=2)
+        print(f"wrote {len(rows)} rows -> {args.json}", file=sys.stderr)
     if failed:
         for name, err in failed:
             print(f"{name},FAILED,{err}")

@@ -30,7 +30,14 @@ import jax.numpy as jnp
 
 
 def mean_read(agg_sum: jnp.ndarray, agg_cnt: jnp.ndarray) -> jnp.ndarray:
-    """Read the MEAN synopsis; empty neighborhoods read as zeros."""
+    """Read the MEAN synopsis; empty neighborhoods read as zeros.
+
+    This is the full-table read used by the "xla" delivery backend (XLA
+    fuses the division into the downstream gather); the "pallas" backend
+    reads only the forward stage's picked rows through
+    `kernels/segment_reduce/ops.mean_rows` — same math, no [P*N, d]
+    intermediate (core/delivery.py).
+    """
     cnt = jnp.maximum(agg_cnt, 1.0)[..., None]
     return agg_sum / cnt
 

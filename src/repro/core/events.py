@@ -98,6 +98,10 @@ class MsgBatch:
     def capacity(self):
         return self.part.shape[0]
 
+    @property
+    def payload_dim(self):
+        return self.vec.shape[1]
+
 
 for _cls, _fields in ((EdgeBatch, ["part", "edge_slot", "src_slot", "dst_slot",
                                    "dst_master_part", "dst_master_slot", "valid"]),
@@ -187,6 +191,16 @@ def repl_batch_from_numpy(rows: dict, cap: int,
                      master_slot=pad(rows["master_slot"]),
                      rep_part=pad(rows["rep_part"]), rep_slot=pad(rows["rep_slot"]),
                      valid=conv(valid))
+
+
+def concat_msg_batches(a: MsgBatch, b: MsgBatch) -> MsgBatch:
+    """Concatenate two MsgBatches along the record axis (same payload dim).
+
+    Round B emits new-edge RMIs and windowed delta RMIs as separate
+    batches; one concatenated batch rides the router and the delivery
+    backend consumes it as a single fixed-capacity segment reduction.
+    """
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y]), a, b)
 
 
 def stack_batches(batches):

@@ -35,6 +35,11 @@ the LocalRouter's flat scatter (`repro/dist/router.py`); the carry's
 NamedShardings live in `repro/dist/sharding.py`. Both routers are
 golden-equivalent by test.
 
+Delivery backend: `PipelineConfig.delivery_backend` picks how routed
+records land in state — "xla" (reference scatters) or "pallas" (sorted
+segment-reduce kernels, `core/delivery.py`). Both backends run the same
+program under both drivers and both routers, golden-equivalent by test.
+
 Staging model / constraints:
   - batch capacities derive from PipelineConfig, so every tick's batches
     have identical shapes and stack cleanly along T;
@@ -61,6 +66,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core import events as ev
 from repro.core import state as st
 from repro.core import windowing as win
+from repro.core.delivery import BACKENDS as DELIVERY_BACKENDS
+from repro.core.delivery import make_delivery
 from repro.core.explosion import layer_parallelisms, physical_busy
 from repro.core.partitioner import StreamingPartitioner
 from repro.core.tick import (add_stats, has_work, layer_tick_body,
@@ -81,6 +88,8 @@ class PipelineConfig:
                                       # feat_cap), split evenly over parts
     edge_tick_cap: int = 1024         # new-edge records per tick
     window: win.WindowConfig = field(default_factory=win.WindowConfig)
+    delivery_backend: str = "xla"     # how routed records land in state
+                                      # ("xla" scatters | "pallas" kernels)
     partitioner: str = "hdrf"
     base_parallelism: int = 2         # p  (physical, for stats/sharding)
     explosion: float = 1.0            # lambda
@@ -101,6 +110,11 @@ class PipelineConfig:
         for name, v in caps.items():
             if v <= 0:
                 raise ValueError(f"PipelineConfig.{name}={v} must be > 0")
+        if self.delivery_backend not in DELIVERY_BACKENDS:
+            raise ValueError(
+                f"PipelineConfig.delivery_backend="
+                f"{self.delivery_backend!r} is not registered: pick one of "
+                f"{sorted(DELIVERY_BACKENDS)} (core/delivery.py)")
         if self.outbox() % self.n_parts:
             raise ValueError(
                 f"the emission budget (outbox_cap or feat_cap)="
@@ -146,6 +160,7 @@ class D3Pipeline:
         cfg.validate(n_devices=n_dev)
         self.router = (MeshRouter(cfg.n_parts, n_dev) if mesh is not None
                        else LocalRouter(cfg.n_parts))
+        self.delivery = make_delivery(cfg.delivery_backend)
         self.layers = list(model.layers)
         self.params = params
         self.part = StreamingPartitioner(
@@ -234,7 +249,7 @@ class D3Pipeline:
          stats_all) = _tick_jit(
             tuple(self.layers), self.params, self.topo, tuple(self.states),
             self.sink, self.sink_seen, fb, eb, rb, vb, now, wconf,
-            cfg.outbox(), self.router, self.mesh)
+            cfg.outbox(), self.router, self.delivery, self.mesh)
         self.states = list(new_states)
         self.now += 1
         self._accumulate(stats_all, time.perf_counter() - t0)
@@ -324,7 +339,8 @@ class D3Pipeline:
             quiet=jnp.asarray(quiet0, jnp.int32))
         final, stats_sum = _super_tick_scan(
             tuple(self.layers), self.params, carry, batches,
-            window or cfg.window, cfg.outbox(), self.router, self.mesh)
+            window or cfg.window, cfg.outbox(), self.router, self.delivery,
+            self.mesh)
         self.topo = final.topo
         self.states = list(final.layers)
         self.sink = final.sink
@@ -434,11 +450,11 @@ def _sink_update_body(sink, seen, fb: ev.FeatBatch, part0=0):
 
 
 def _tick_program(layers, params, topo, states, inbox, eb, rb, vb, now,
-                  wconf, outbox_cap, router):
+                  wconf, outbox_cap, router, delivery):
     """ONE micro-tick over the local part block: topology application + L
     staged layer ticks. Runs directly under the LocalRouter and as the
-    shard_map body under the MeshRouter — the two drivers and the two
-    routers all share this program."""
+    shard_map body under the MeshRouter — the two drivers, the two routers
+    and the two delivery backends all share this program."""
     part0 = router.part0()
     topo = st.apply_vertex_batch(topo, vb, part0)
     topo = st.apply_repl_batch(topo, rb, part0)
@@ -448,7 +464,7 @@ def _tick_program(layers, params, topo, states, inbox, eb, rb, vb, now,
         # topology reaches every layer; features only layer 0 (Splitter)
         ls, outbox, stats = layer_tick_body(
             layer, params[f"l{li}"], topo, states[li], inbox, eb, rb,
-            now, wconf, outbox_cap, router)
+            now, wconf, outbox_cap, router, delivery)
         new_states.append(ls)
         stats_all.append(stats)
         inbox = outbox
@@ -456,14 +472,14 @@ def _tick_program(layers, params, topo, states, inbox, eb, rb, vb, now,
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
-                                   "router", "mesh"))
+                                   "router", "delivery", "mesh"))
 def _tick_jit(layers, params, topo, states, sink, sink_seen, inbox, eb, rb,
-              vb, now, wconf, outbox_cap, router, mesh):
+              vb, now, wconf, outbox_cap, router, delivery, mesh):
     """The per-tick driver's device program (reference path)."""
     def prog(params, topo, states, sink, sink_seen, inbox, eb, rb, vb, now):
         topo, states, out, stats = _tick_program(
             layers, params, topo, states, inbox, eb, rb, vb, now, wconf,
-            outbox_cap, router)
+            outbox_cap, router, delivery)
         # sink: final-layer emissions materialize the embedding table
         sink, sink_seen = _sink_update_body(sink, sink_seen, out,
                                             router.part0())
@@ -485,11 +501,11 @@ def _tick_jit(layers, params, topo, states, sink, sink_seen, inbox, eb, rb,
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
-                                   "router", "mesh"),
+                                   "router", "delivery", "mesh"),
          donate_argnums=(2,))
 def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
                      wconf: win.WindowConfig, outbox_cap: int, router,
-                     mesh=None):
+                     delivery=None, mesh=None):
     """T micro-ticks x L layers as one `lax.scan` — the super-tick body.
 
     carry (donated): PipelineCarry — topology, per-layer states, sink and
@@ -507,7 +523,7 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
             fb, eb, rb, vb = batch_t
             topo, new_layers, out, stats_t = _tick_program(
                 layers, params, c.topo, c.layers, fb, eb, rb, vb, c.now,
-                wconf, outbox_cap, router)
+                wconf, outbox_cap, router, delivery)
             sink, sink_seen = _sink_update_body(c.sink, c.sink_seen, out,
                                                 router.part0())
             quiet = quiet_update(c.quiet, new_layers, stats_t, router)

@@ -1,32 +1,38 @@
 """The per-layer micro-tick: streaming (Alg. 1) and windowed (Alg. 2)
-forward pass, factored into a part-local COMPUTE plane and an explicit
-ROUTING plane (ISSUE 2 tentpole).
+forward pass, factored into THREE planes — a part-local COMPUTE plane
+(the four stages below, ISSUE 2), an explicit ROUTING plane
+(`dist/router.py`), and a pluggable DELIVERY plane (`core/delivery.py`,
+ISSUE 3) that lands routed records in the local state blocks.
 
-One tick = two routing rounds (DESIGN §2), now four pure stages with a
+One tick = two routing rounds (DESIGN §2), four pure stages with a
 Router delivery between them:
 
-  round_a_apply : master-addressed feature updates land at local masters;
-                  selectiveBroadcast records for changed masters are
-                  EMITTED as a part-addressed `MsgBatch` (not scattered
-                  into other parts' rows).
+  round_a_apply : master-addressed feature updates land at local masters
+                  (delivery.deliver_set); selectiveBroadcast records for
+                  changed masters are EMITTED as a part-addressed
+                  `MsgBatch` (not scattered into other parts' rows).
        -- router.route(bcast) --
-  round_b_emit  : delivered broadcasts apply at local replicas; per-vertex
-                  feature *deltas* and new-edge messages become aggregator
-                  RMI records (delta, dcnt) addressed to destination
-                  masters. reduce / replace / remove all collapse to
-                  additive records (core/aggregators.py).
+  round_b_emit  : delivered broadcasts apply at local replicas
+                  (delivery.deliver_set); per-vertex feature *deltas* and
+                  new-edge messages become aggregator RMI records
+                  (delta, dcnt) addressed to destination masters.
+                  reduce / replace / remove all collapse to additive
+                  records (core/aggregators.py).
        -- router.route(rmis) --
-  apply_rmis    : one local segment scatter-add applies any RMI mix at the
-                  local masters.
+  apply_rmis    : ONE delivery (delivery.deliver_add) applies any RMI mix
+                  at the local masters — a flat scatter-add on the "xla"
+                  backend, a sorted Pallas segment reduction on "pallas".
   forward_psi   : dirty masters run the update (psi) under the intra-layer
-                  window and emit into a per-part capacity-limited outbox.
+                  window and emit into a per-part capacity-limited outbox;
+                  the aggregator read goes through delivery.agg_read_rows
+                  (fused on "pallas": only the picked rows are divided).
 
 Every stage sees only its LOCAL block of parts ([P_loc, ...], global part
 ids offset by `part0`), so the identical body runs on one device
 (LocalRouter: part0=0, P_loc=P) and inside a `shard_map` over the mesh
-(MeshRouter: part0 = axis_index * P_loc). Scalar TickStats are reduced
-through `router.psum`; the per-part `busy` vector stays local and is
-concatenated by the shard_map out-spec.
+(MeshRouter: part0 = axis_index * P_loc) — on either delivery backend.
+Scalar TickStats are reduced through `router.psum`; the per-part `busy`
+vector stays local and is concatenated by the shard_map out-spec.
 
 Windowing replaces "emit now" with deadline tables:
   inter-layer window -> delays the reduce of a source vertex (red_*),
@@ -48,8 +54,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import windowing as win
-from repro.core.aggregators import mean_read
-from repro.core.events import EdgeBatch, FeatBatch, MsgBatch, ReplBatch
+from repro.core.delivery import XlaDelivery
+from repro.core.events import (EdgeBatch, FeatBatch, MsgBatch, ReplBatch,
+                               concat_msg_batches)
 from repro.core.state import LayerState, TopoState, local_index
 from repro.dist.router import LocalRouter
 
@@ -88,7 +95,7 @@ def add_stats(a: TickStats, b: TickStats) -> TickStats:
 # ===================================================== compute-plane stages
 
 def round_a_apply(topo: TopoState, ls: LayerState, inbox: FeatBatch,
-                  new_repl: ReplBatch, part0):
+                  new_repl: ReplBatch, part0, delivery):
     """Round A, emit half: apply the inbox at LOCAL masters and build the
     broadcast MsgBatch for replication records whose master changed.
 
@@ -102,10 +109,10 @@ def round_a_apply(topo: TopoState, ls: LayerState, inbox: FeatBatch,
                                 inbox.valid)
     feat_flat = ls.feat.reshape(P_loc * N, d_in)
     # coalesce duplicate targets within the tick: last-writer-wins is fine
-    # for idempotent feature values; use scatter (later rows overwrite).
-    feat_flat = feat_flat.at[in_idx].set(inbox.feat, mode="drop")
-    changed = jnp.zeros((P_loc * N,), bool).at[in_idx].set(True, mode="drop")
-    has_feat = ls.has_feat.reshape(P_loc * N).at[in_idx].set(True, mode="drop")
+    # for idempotent feature values (both backends resolve duplicates that
+    # way; valid inbox targets are unique anyway).
+    feat_flat, changed = delivery.deliver_set(feat_flat, in_idx, inbox.feat)
+    has_feat = ls.has_feat.reshape(P_loc * N) | changed
     busy = busy.at[in_lp].add(1, mode="drop")
 
     # replica-creation sync: a NEW replica immediately receives its master's
@@ -140,7 +147,7 @@ def round_a_apply(topo: TopoState, ls: LayerState, inbox: FeatBatch,
 
 def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
                  changed, has_feat, bcast_d: MsgBatch, new_edges: EdgeBatch,
-                 now, wconf: win.WindowConfig, part0, busy, freq):
+                 now, wconf: win.WindowConfig, part0, busy, freq, delivery):
     """Round B, emit half: apply DELIVERED broadcasts at local replicas,
     decide which touched vertices send this tick (inter-layer window), and
     emit the tick's aggregator RMI records.
@@ -154,9 +161,10 @@ def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
     # are unique — one master per replica, host-coalesced inbox)
     b_idx, b_lp = local_index(bcast_d.part, bcast_d.slot, part0, P_loc, N,
                               bcast_d.valid)
-    feat_flat = feat_flat.at[b_idx].set(bcast_d.vec, mode="drop")
-    changed = changed.at[b_idx].set(True, mode="drop")
-    has_feat = has_feat.at[b_idx].set(True, mode="drop")
+    feat_flat, b_touched = delivery.deliver_set(feat_flat, b_idx,
+                                                bcast_d.vec)
+    changed = changed | b_touched
+    has_feat = has_feat | b_touched
     busy = busy.at[b_lp].add(1, mode="drop")
 
     x_sent_flat = ls.x_sent.reshape(P_loc * N, d_in)
@@ -195,19 +203,18 @@ def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
     o_sidx = pp * N + topo.e_src_slot                            # [Pl,E]
     o_live = topo.e_valid & send[o_sidx]
     o_src_part = jnp.broadcast_to(part0 + pp, o_live.shape)
-    rmis = MsgBatch(
-        part=jnp.concatenate([new_edges.dst_master_part,
-                              topo.e_dst_mpart.reshape(-1)]),
-        slot=jnp.concatenate([new_edges.dst_master_slot,
-                              topo.e_dst_mslot.reshape(-1)]),
-        vec=jnp.concatenate([jnp.where(e_ready[:, None], e_msg, 0.0),
-                             jnp.where(o_live.reshape(-1)[:, None],
-                                       delta_vec[o_sidx.reshape(-1)], 0.0)]),
-        cnt=jnp.concatenate([e_ready.astype(jnp.float32),
-                             delta_cnt[o_sidx.reshape(-1)]
-                             * o_live.reshape(-1)]),
-        src_part=jnp.concatenate([new_edges.part, o_src_part.reshape(-1)]),
-        valid=jnp.concatenate([e_ready, o_live.reshape(-1)]))
+    e_rmis = MsgBatch(
+        part=new_edges.dst_master_part, slot=new_edges.dst_master_slot,
+        vec=jnp.where(e_ready[:, None], e_msg, 0.0),
+        cnt=e_ready.astype(jnp.float32),
+        src_part=new_edges.part, valid=e_ready)
+    o_rmis = MsgBatch(
+        part=topo.e_dst_mpart.reshape(-1), slot=topo.e_dst_mslot.reshape(-1),
+        vec=jnp.where(o_live.reshape(-1)[:, None],
+                      delta_vec[o_sidx.reshape(-1)], 0.0),
+        cnt=delta_cnt[o_sidx.reshape(-1)] * o_live.reshape(-1),
+        src_part=o_src_part.reshape(-1), valid=o_live.reshape(-1))
+    rmis = concat_msg_batches(e_rmis, o_rmis)
     n_reduce = jnp.sum(e_ready) + jnp.sum(o_live)
     n_cross = (jnp.sum(e_ready
                        & (new_edges.dst_master_part != new_edges.part))
@@ -221,20 +228,18 @@ def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
             red_pending, red_deadline, rmis, busy, n_reduce, n_cross)
 
 
-def apply_rmis(ls: LayerState, rmis_d: MsgBatch, part0, busy):
-    """Apply DELIVERED aggregator RMIs at local masters: one segment
-    scatter-add regardless of the reduce/replace/remove mix.
+def apply_rmis(ls: LayerState, rmis_d: MsgBatch, part0, busy, delivery):
+    """Apply DELIVERED aggregator RMIs at local masters: one delivery
+    regardless of the reduce/replace/remove mix (flat scatter-add on
+    "xla", sorted segment reduction on "pallas").
 
     Returns (agg_flat, cnt_flat, agg_dirty, busy)."""
     P_loc, N, d_agg = ls.agg.shape
     idx, lp = local_index(rmis_d.part, rmis_d.slot, part0, P_loc, N,
                           rmis_d.valid)
-    live = idx < P_loc * N
-    agg_flat = ls.agg.reshape(P_loc * N, d_agg).at[idx].add(
-        jnp.where(live[:, None], rmis_d.vec, 0.0), mode="drop")
-    cnt_flat = ls.agg_cnt.reshape(P_loc * N).at[idx].add(
-        rmis_d.cnt * live, mode="drop")
-    agg_dirty = jnp.zeros((P_loc * N,), bool).at[idx].max(live, mode="drop")
+    agg_flat, cnt_flat, agg_dirty = delivery.deliver_add(
+        ls.agg.reshape(P_loc * N, d_agg), ls.agg_cnt.reshape(P_loc * N),
+        idx, rmis_d.vec, rmis_d.cnt)
     busy = busy.at[lp].add(1, mode="drop")
     return agg_flat, cnt_flat, agg_dirty, busy
 
@@ -242,7 +247,7 @@ def apply_rmis(ls: LayerState, rmis_d: MsgBatch, part0, busy):
 def forward_psi(layer, params, topo: TopoState, ls: LayerState, feat_flat,
                 has_feat, agg_flat, cnt_flat, agg_dirty, changed, now,
                 wconf: win.WindowConfig, outbox_cap_pp: int, part0, busy,
-                freq):
+                freq, delivery):
     """Forward/update phase (psi) under the intra-layer window, with a
     PER-PART capacity-limited outbox (first `outbox_cap_pp` evicted slots
     per part emit; the rest stay pending -> natural backpressure).
@@ -277,7 +282,7 @@ def forward_psi(layer, params, topo: TopoState, ls: LayerState, feat_flat,
     n_drop = jnp.sum(deferred)
 
     x_self = feat_flat[flat_picked]
-    agg_read = mean_read(agg_flat, cnt_flat)[flat_picked]
+    agg_read = delivery.agg_read_rows(agg_flat, cnt_flat, flat_picked)
     x_out = layer.update(params, x_self, agg_read)
     out_part = jnp.broadcast_to(part0 + jnp.arange(P_loc)[:, None],
                                 picked.shape)
@@ -294,14 +299,17 @@ def forward_psi(layer, params, topo: TopoState, ls: LayerState, feat_flat,
 def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
                     inbox: FeatBatch, new_edges: EdgeBatch,
                     new_repl: ReplBatch, now: jnp.ndarray,
-                    wconf: win.WindowConfig, outbox_cap: int, router=None):
+                    wconf: win.WindowConfig, outbox_cap: int, router=None,
+                    delivery=None):
     """Advance one GNN layer by one tick (pure, trace-friendly).
 
     `layer` supplies message/update (phi/psi): layer.message(params, x) and
     layer.update(params, x_self, agg_read) — e.g. graph/sage.SAGELayer.
-    `router` owns cross-part delivery (default: LocalRouter over the full
-    part axis). `outbox_cap` is the GLOBAL per-tick emission budget; each
-    part gets outbox_cap // router.n_parts slots.
+    `router` owns cross-part transport (default: LocalRouter over the full
+    part axis); `delivery` owns how routed records land in state (default:
+    the XLA scatter reference, see core/delivery.py). `outbox_cap` is the
+    GLOBAL per-tick emission budget; each part gets outbox_cap //
+    router.n_parts slots.
     Returns (new LayerState, outbox FeatBatch, TickStats) — stats scalars
     are router.psum'd (global), `busy` stays local [P_loc].
 
@@ -312,6 +320,8 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
     """
     if router is None:
         router = LocalRouter(n_parts=ls.feat.shape[0])
+    if delivery is None:
+        delivery = XlaDelivery()
     part0 = router.part0()
     P_loc, N, d_in = ls.feat.shape
     cap_pp = max(1, outbox_cap // router.n_parts)
@@ -322,24 +332,26 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
 
     # ---- Round A: apply inbox at masters, emit + route the broadcast
     (feat_flat, changed, has_feat, bcast, busy,
-     n_bcast, bcast_cross) = round_a_apply(topo, ls, inbox, new_repl, part0)
+     n_bcast, bcast_cross) = round_a_apply(topo, ls, inbox, new_repl, part0,
+                                           delivery)
     bcast_d = router.route(bcast)
 
     # ---- Round B: apply broadcast at replicas, emit + route the RMIs
     (feat_flat, changed, has_feat, x_sent_flat, has_sent, red_pending,
      red_deadline, rmis, busy, n_reduce, red_cross) = round_b_emit(
         layer, params, topo, ls, feat_flat, changed, has_feat, bcast_d,
-        new_edges, now, wconf, part0, busy, freq)
+        new_edges, now, wconf, part0, busy, freq, delivery)
     rmis_d = router.route(rmis)
 
     # ---- apply RMIs at local masters
-    agg_flat, cnt_flat, agg_dirty, busy = apply_rmis(ls, rmis_d, part0, busy)
+    agg_flat, cnt_flat, agg_dirty, busy = apply_rmis(ls, rmis_d, part0,
+                                                     busy, delivery)
 
     # ---- forward/update phase (psi), intra-layer window
     (fwd_pending, fwd_deadline, outbox, busy,
      n_emit, n_drop) = forward_psi(
         layer, params, topo, ls, feat_flat, has_feat, agg_flat, cnt_flat,
-        agg_dirty, changed, now, wconf, cap_pp, part0, busy, freq)
+        agg_dirty, changed, now, wconf, cap_pp, part0, busy, freq, delivery)
 
     # ---- adaptive-session CMS update (sketch replicated across devices:
     # local contributions are psum'd so every device applies the same add)
@@ -375,7 +387,8 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
 
 
 layer_tick = partial(jax.jit, static_argnames=("layer", "wconf", "outbox_cap",
-                                               "router"))(layer_tick_body)
+                                               "router", "delivery")
+                     )(layer_tick_body)
 
 
 def has_work(ls: LayerState) -> jnp.ndarray:

@@ -1,24 +1,27 @@
-"""The routing plane: delivery of part-addressed `MsgBatch` records.
+"""The routing plane: transport of part-addressed `MsgBatch` records.
 
-The streaming tick is split into two planes (ISSUE 2 tentpole):
+The streaming tick is split into three planes (ISSUE 2 + ISSUE 3):
 
   * COMPUTE plane — pure part-local stages in `core/tick.py`
     (`round_a_apply`, `round_b_emit`, `apply_rmis`, `forward_psi`) that
     never write into another part's rows; every cross-part effect is a
     `MsgBatch` (core/events.py) addressed by global (part, slot).
-  * ROUTING plane — a Router delivers those records to whichever device
+  * ROUTING plane — a Router moves those records to whichever device
     owns the destination part. Two golden-equivalent implementations:
 
-      LocalRouter : one device owns every part; delivery is the identity
-                    and the apply stages' flat scatter does the rest.
+      LocalRouter : one device owns every part; transport is the identity.
       MeshRouter  : parts are block-sharded over a 1-D ("data",) mesh axis
-                    (`launch/mesh.py`); delivery buckets records by
+                    (`launch/mesh.py`); transport buckets records by
                     destination device and exchanges them with ONE
                     fixed-capacity `lax.all_to_all` per round. Per-bucket
                     capacity equals the full emission capacity C, so no
                     record can ever overflow a bucket (worst case: all C
                     records target one device) — correctness never depends
                     on traffic shape, at the price of a D x C exchange.
+  * DELIVERY plane — once routed, a DeliveryBackend (`core/delivery.py`)
+    lands the records in the local state blocks: "xla" reference scatters
+    or "pallas" sorted segment-reduce kernels, selected by
+    `PipelineConfig.delivery_backend` and orthogonal to the Router choice.
 
 Routers are small frozen dataclasses so they can ride jit boundaries as
 static arguments. `MeshRouter` methods are only valid INSIDE a

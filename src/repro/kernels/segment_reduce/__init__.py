@@ -1,1 +1,3 @@
-from repro.kernels.segment_reduce.ops import segment_sum_sorted, gather_segment_sum  # noqa: F401
+from repro.kernels.segment_reduce.ops import (  # noqa: F401
+    gather_segment_sum, mean_rows, rmi_apply_read, segment_deliver,
+    segment_sum_sorted)

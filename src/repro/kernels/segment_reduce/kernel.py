@@ -51,6 +51,9 @@ def _kernel(eblk_to_vblk, first_visit,      # scalar prefetch
         preferred_element_type=out_ref.dtype)
 
 
+DEFAULT_BLOCK_R = 128
+
+
 @functools.partial(jax.jit, static_argnames=("n_vblocks", "block_e",
                                              "block_v", "interpret"))
 def segment_sum_kernel(msgs, seg_local, eblk_to_vblk, first_visit,
@@ -77,3 +80,32 @@ def segment_sum_kernel(msgs, seg_local, eblk_to_vblk, first_visit,
         out_shape=jax.ShapeDtypeStruct((n_vblocks * block_v, d), msgs.dtype),
         interpret=interpret,
     )(eblk_to_vblk, first_visit, seg_local, msgs)
+
+
+def _mean_rows_kernel(sum_ref, cnt_ref, out_ref):
+    out_ref[...] = sum_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def mean_rows_kernel(sums, cnts, block_r: int = DEFAULT_BLOCK_R,
+                     interpret: bool = True):
+    """Row-wise synopsis read: sums [K_pad, d] / max(cnts [K_pad, 1], 1).
+
+    The VPU half of the fused RMI-apply + read: the caller gathers the
+    picked aggregator rows and this kernel divides them by their counts,
+    so the full [P*N, d] mean table is never materialized. K_pad must be
+    a multiple of block_r (ops.py pads; padded counts are 1). The [*, 1]
+    count block is lane-sub-tile: fine in interpret mode, padded to the
+    (8, 128) f32 tile by Mosaic on real TPUs.
+    """
+    k_pad, d = sums.shape
+    assert k_pad % block_r == 0 and cnts.shape == (k_pad, 1)
+    return pl.pallas_call(
+        _mean_rows_kernel,
+        grid=(k_pad // block_r,),
+        in_specs=[pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+                  pl.BlockSpec((block_r, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, d), sums.dtype),
+        interpret=interpret,
+    )(sums, cnts)

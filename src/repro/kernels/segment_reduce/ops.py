@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.segment_reduce.kernel import (DEFAULT_BLOCK_E,
+                                                 DEFAULT_BLOCK_R,
                                                  DEFAULT_BLOCK_V,
+                                                 mean_rows_kernel,
                                                  segment_sum_kernel)
 
 
@@ -22,14 +24,20 @@ def _is_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("n_segments", "block_e", "block_v",
-                                   "interpret"))
+                                   "interpret", "trim"))
 def segment_sum_sorted(msgs, seg_ids, n_segments: int,
                        block_e: int = DEFAULT_BLOCK_E,
                        block_v: int = DEFAULT_BLOCK_V,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       trim: bool = True):
     """Segment-sum of msgs [E, d] by seg_ids [E] (MUST be sorted ascending;
-    id >= n_segments = padding). Returns [n_segments_pad, d] — caller slices
-    to n_segments.
+    id >= n_segments = padding). Returns [n_segments, d].
+
+    trim=False is the opt-out for block-aligned callers that want the raw
+    padded [n_segments_pad, d] kernel output (n_segments_pad = n_segments
+    rounded up to block_v; the tail rows are zero). It used to be the only
+    behaviour, which silently handed every caller an off-by-block tail to
+    slice — now the slice happens here.
     """
     if interpret is None:
         interpret = not _is_tpu()
@@ -77,7 +85,8 @@ def segment_sum_sorted(msgs, seg_ids, n_segments: int,
     visited = jnp.zeros((n_vblk,), bool).at[eblk_to_vblk].set(True)
     out = out.reshape(n_vblk, block_v, d)
     out = jnp.where(visited[:, None, None], out, 0.0)
-    return out.reshape(n_vblk * block_v, d)
+    out = out.reshape(n_vblk * block_v, d)
+    return out[:n_segments] if trim else out
 
 
 def gather_segment_sum(x, senders, receivers, n_nodes: int, edge_mask=None,
@@ -92,6 +101,110 @@ def gather_segment_sum(x, senders, receivers, n_nodes: int, edge_mask=None,
         else receivers
     order = jnp.argsort(seg)
     msgs = x[senders[order]]
-    out = segment_sum_sorted(msgs, seg[order], n_nodes, block_e=block_e,
+    return segment_sum_sorted(msgs, seg[order], n_nodes, block_e=block_e,
+                              block_v=block_v, interpret=interpret)
+
+
+# ==================== streaming-tick delivery variants (ISSUE 3 tentpole)
+
+@partial(jax.jit, static_argnames=("n_rows", "mode", "block_e", "block_v",
+                                   "interpret"))
+def segment_deliver(idx, vec, cnt, n_rows: int, mode: str = "add",
+                    block_e: int = DEFAULT_BLOCK_E,
+                    block_v: int = DEFAULT_BLOCK_V,
+                    interpret: bool | None = None):
+    """Fixed-capacity message delivery as ONE sorted segment reduction.
+
+    idx [C] int32 destination rows — rows outside [0, n_rows) are the
+    drop sentinel (invalid/padding records, `state.local_index` style);
+    vec [C, d] float payload; cnt [C] float scalar count deltas.
+
+    Returns (vec_out [n_rows, d], cnt_out [n_rows], touched [n_rows]):
+      mode="add" : per-row sums of vec and cnt (aggregator RMI apply);
+      mode="set" : the LAST valid writer's vec/cnt per row (feature
+                   delivery; matches XLA scatter-set update order).
+    touched[r] is True iff any valid record addressed row r — the
+    changed/dirty flag the tick needs, accumulated in the same kernel
+    pass (the count column of the packed payload).
+
+    Layout plane (XLA): mask + stable sort by destination, pack
+    [vec | cnt | touch] into one [C, d+2] payload. Compute plane
+    (Pallas): one `segment_sum_kernel` pass over the packed payload.
+    """
+    if interpret is None:
+        interpret = not _is_tpu()
+    C, d = vec.shape
+    idx = idx.astype(jnp.int32)
+    valid = (idx >= 0) & (idx < n_rows)
+    seg = jnp.where(valid, idx, n_rows)
+    order = jnp.argsort(seg, stable=True)     # stable: record order per row
+    seg_s = seg[order]
+    vec_s, cnt_s, val_s = vec[order], cnt[order], valid[order]
+    if mode == "set":
+        # last-writer-wins: only the final record of each destination run
+        # carries payload into the sum (stable sort preserves write order)
+        is_last = jnp.concatenate([seg_s[1:] != seg_s[:-1],
+                                   jnp.ones((1,), bool)])
+        live = val_s & is_last
+    elif mode == "add":
+        live = val_s
+    else:
+        raise ValueError(f"segment_deliver mode must be 'add' or 'set', "
+                         f"got {mode!r}")
+    payload = jnp.concatenate(
+        [jnp.where(live[:, None], vec_s, 0.0),
+         jnp.where(live, cnt_s, 0.0)[:, None],
+         live.astype(vec.dtype)[:, None]], axis=1)
+    out = segment_sum_sorted(payload, seg_s, n_rows, block_e=block_e,
                              block_v=block_v, interpret=interpret)
-    return out[:n_nodes]
+    return out[:, :d], out[:, d], out[:, d + 1] > 0
+
+
+@partial(jax.jit, static_argnames=("block_r", "interpret"))
+def mean_rows(sums, cnts, block_r: int = DEFAULT_BLOCK_R,
+              interpret: bool | None = None):
+    """Aggregator read at selected rows: sums [K, d] / max(cnts [K], 1).
+
+    Pads K up to a block_r multiple (padding counts are 1 so the padded
+    rows divide cleanly) and runs the VPU `mean_rows_kernel`."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    K, d = sums.shape
+    k_pad = max(block_r, -(-K // block_r) * block_r)
+    sums_p = jnp.zeros((k_pad, d), sums.dtype).at[:K].set(sums)
+    cnts_p = jnp.ones((k_pad, 1), sums.dtype).at[:K, 0].set(cnts)
+    out = mean_rows_kernel(sums_p, cnts_p, block_r=block_r,
+                           interpret=interpret)
+    return out[:K]
+
+
+@partial(jax.jit, static_argnames=("block_e", "block_v", "block_r",
+                                   "interpret"))
+def rmi_apply_read(agg, cnt, idx, vec, dcnt, read_idx,
+                   block_e: int = DEFAULT_BLOCK_E,
+                   block_v: int = DEFAULT_BLOCK_V,
+                   block_r: int = DEFAULT_BLOCK_R,
+                   interpret: bool | None = None):
+    """Fused RMI-apply + mean read in ONE call (paper §4.2.1 primitive).
+
+    Applies a tick's aggregator RMI records (idx, vec, dcnt) onto the
+    (agg [R, d], cnt [R]) synopsis with one `segment_deliver` pass, then
+    reads the MEAN synopsis at `read_idx` [K] through `mean_rows` — the
+    full [R, d] mean table is never materialized, only the K picked rows.
+
+    The streaming tick itself calls the two halves separately
+    (PallasDelivery.deliver_add in apply_rmis, .agg_read_rows in
+    forward_psi) because the read rows are only chosen AFTER the dirty
+    flags exist; this single-call form is for callers that know their
+    read rows up front, and is the tested contract
+    (`rmi_apply_read_ref`) both halves are pinned to.
+
+    Returns (agg', cnt', dirty [R] bool, reads [K, d]).
+    """
+    d_vec, d_cnt, dirty = segment_deliver(
+        idx, vec, dcnt, agg.shape[0], mode="add", block_e=block_e,
+        block_v=block_v, interpret=interpret)
+    agg2, cnt2 = agg + d_vec, cnt + d_cnt
+    reads = mean_rows(agg2[read_idx], cnt2[read_idx], block_r=block_r,
+                      interpret=interpret)
+    return agg2, cnt2, dirty, reads

@@ -16,3 +16,35 @@ def gather_segment_sum_ref(x, senders, receivers, n_nodes, edge_mask=None):
 def segment_sum_sorted_ref(msgs, seg_ids, n_segments):
     """Plain sorted segment-sum (the layout ops.py feeds the kernel)."""
     return jax.ops.segment_sum(msgs, seg_ids, n_segments)
+
+
+def segment_deliver_ref(idx, vec, cnt, n_rows, mode="add"):
+    """Oracle for ops.segment_deliver: plain guarded scatters.
+
+    mode="set" resolves duplicates to the highest record position (the
+    last writer) via an unambiguous scatter-max over positions."""
+    valid = (idx >= 0) & (idx < n_rows)
+    safe = jnp.where(valid, idx, 0)
+    if mode == "add":
+        vec_out = jnp.zeros((n_rows, vec.shape[1]), vec.dtype).at[safe].add(
+            jnp.where(valid[:, None], vec, 0.0))
+        cnt_out = jnp.zeros((n_rows,), cnt.dtype).at[safe].add(cnt * valid)
+    else:
+        pos = jnp.arange(idx.shape[0])
+        last = jnp.full((n_rows,), -1).at[safe].max(
+            jnp.where(valid, pos, -1))
+        win = last >= 0
+        take = jnp.maximum(last, 0)
+        vec_out = jnp.where(win[:, None], vec[take], 0.0)
+        cnt_out = jnp.where(win, cnt[take], 0.0)
+    touched = jnp.zeros((n_rows,), bool).at[safe].max(valid)
+    return vec_out, cnt_out, touched
+
+
+def rmi_apply_read_ref(agg, cnt, idx, vec, dcnt, read_idx):
+    """Oracle for ops.rmi_apply_read: unfused apply, full mean table."""
+    d_vec, d_cnt, dirty = segment_deliver_ref(idx, vec, dcnt, agg.shape[0],
+                                              mode="add")
+    agg2, cnt2 = agg + d_vec, cnt + d_cnt
+    mean = agg2 / jnp.maximum(cnt2, 1.0)[:, None]
+    return agg2, cnt2, dirty, mean[read_idx]

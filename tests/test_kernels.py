@@ -17,8 +17,13 @@ from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import gqa_attention_ref
-from repro.kernels.segment_reduce.ops import gather_segment_sum
-from repro.kernels.segment_reduce.ref import gather_segment_sum_ref
+from repro.kernels.segment_reduce.ops import (gather_segment_sum, mean_rows,
+                                              rmi_apply_read, segment_deliver,
+                                              segment_sum_sorted)
+from repro.kernels.segment_reduce.ref import (gather_segment_sum_ref,
+                                              rmi_apply_read_ref,
+                                              segment_deliver_ref,
+                                              segment_sum_sorted_ref)
 
 
 # ------------------------------------------------------------ segment_reduce
@@ -69,6 +74,146 @@ if HAS_HYPOTHESIS:
 else:
     @pytest.mark.skip(reason="property tests need the optional [test] extra")
     def test_segment_reduce_property():
+        pytest.importorskip("hypothesis")
+
+
+# ------------------------------- delivery variants (ISSUE 3) — `-m pallas`
+
+def _deliver_case(seed, C, R, d):
+    rng = np.random.default_rng(seed)
+    # ragged random segments, including out-of-range sentinels both sides
+    idx = jnp.asarray(rng.integers(-2, R + 4, C).astype(np.int32))
+    vec = jnp.asarray(rng.normal(size=(C, d)).astype(np.float32))
+    cnt = jnp.asarray(rng.integers(-1, 3, C).astype(np.float32))
+    return idx, vec, cnt
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("mode", ["add", "set"])
+@pytest.mark.parametrize("C,R,d", [(64, 37, 6), (7, 129, 4), (300, 9, 8)])
+def test_segment_deliver_matches_ref(mode, C, R, d):
+    idx, vec, cnt = _deliver_case(C * R, C, R, d)
+    out = segment_deliver(idx, vec, cnt, R, mode=mode,
+                          block_e=64, block_v=64)
+    ref = segment_deliver_ref(idx, vec, cnt, R, mode=mode)
+    for got, want in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.pallas
+def test_segment_deliver_set_last_writer_wins():
+    """Duplicate destinations under mode="set" must resolve to the record
+    with the highest position — XLA scatter-set update order."""
+    idx = jnp.asarray([3, 5, 3, 3, 5], jnp.int32)
+    vec = jnp.arange(10, dtype=jnp.float32).reshape(5, 2)
+    cnt = jnp.arange(5, dtype=jnp.float32)
+    v, c, t = segment_deliver(idx, vec, cnt, 8, mode="set",
+                              block_e=64, block_v=64)
+    np.testing.assert_array_equal(np.asarray(v[3]), [6.0, 7.0])   # record 3
+    np.testing.assert_array_equal(np.asarray(v[5]), [8.0, 9.0])   # record 4
+    assert float(c[3]) == 3.0 and float(c[5]) == 4.0
+    np.testing.assert_array_equal(
+        np.asarray(t), [False, False, False, True, False, True, False, False])
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("mode", ["add", "set"])
+def test_segment_deliver_all_padding(mode):
+    """Every record invalid: zero payload, nothing touched."""
+    idx = jnp.full((32,), 99, jnp.int32)
+    v, c, t = segment_deliver(idx, jnp.ones((32, 3)), jnp.ones((32,)), 16,
+                              mode=mode, block_e=64, block_v=64)
+    assert not bool(t.any())
+    np.testing.assert_array_equal(np.asarray(v), 0.0)
+    np.testing.assert_array_equal(np.asarray(c), 0.0)
+
+
+@pytest.mark.pallas
+def test_segment_deliver_single_segment():
+    """All records land on one row (the worst-case hot destination)."""
+    C, R, d = 96, 40, 5
+    rng = np.random.default_rng(7)
+    vec = jnp.asarray(rng.normal(size=(C, d)).astype(np.float32))
+    cnt = jnp.ones((C,), jnp.float32)
+    idx = jnp.full((C,), 11, jnp.int32)
+    v, c, t = segment_deliver(idx, vec, cnt, R, mode="add",
+                              block_e=64, block_v=64)
+    np.testing.assert_allclose(np.asarray(v[11]), np.asarray(vec.sum(0)),
+                               rtol=1e-5, atol=1e-5)
+    assert float(c[11]) == C and bool(t[11]) and int(t.sum()) == 1
+
+
+@pytest.mark.pallas
+def test_rmi_apply_read_fused_matches_ref():
+    rng = np.random.default_rng(3)
+    R, C, K, d = 70, 50, 12, 6
+    agg = jnp.asarray(rng.normal(size=(R, d)).astype(np.float32))
+    cnt = jnp.asarray(rng.integers(0, 4, R).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, R + 6, C).astype(np.int32))
+    vec = jnp.asarray(rng.normal(size=(C, d)).astype(np.float32))
+    dcnt = jnp.asarray(rng.integers(0, 2, C).astype(np.float32))
+    ridx = jnp.asarray(rng.integers(0, R, K).astype(np.int32))
+    out = rmi_apply_read(agg, cnt, idx, vec, dcnt, ridx,
+                         block_e=64, block_v=64, block_r=64)
+    ref = rmi_apply_read_ref(agg, cnt, idx, vec, dcnt, ridx)
+    for got, want in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.pallas
+def test_mean_rows_empty_count_reads_zero():
+    sums = jnp.asarray([[4.0, 8.0], [0.0, 0.0], [3.0, 3.0]])
+    cnts = jnp.asarray([2.0, 0.0, 1.0])
+    out = mean_rows(sums, cnts, block_r=64)
+    np.testing.assert_allclose(np.asarray(out),
+                               [[2.0, 4.0], [0.0, 0.0], [3.0, 3.0]])
+
+
+@pytest.mark.pallas
+def test_segment_sum_sorted_trims_off_by_block_tail():
+    """Regression: segment_sum_sorted used to return the block-padded
+    [n_segments_pad, d] array and rely on every caller to slice."""
+    rng = np.random.default_rng(5)
+    E, n_seg, d = 150, 100, 4            # 100 is NOT a multiple of block_v
+    ids = jnp.sort(jnp.asarray(rng.integers(0, n_seg + 10, E),
+                               dtype=jnp.int32))
+    msgs = jnp.asarray(rng.normal(size=(E, d)).astype(np.float32))
+    out = segment_sum_sorted(msgs, ids, n_seg, block_e=64, block_v=64)
+    assert out.shape == (n_seg, d)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(segment_sum_sorted_ref(
+                                   msgs, ids, n_seg)),
+                               rtol=1e-5, atol=1e-5)
+    # the block-aligned opt-out keeps the old padded contract, zero tail
+    padded = segment_sum_sorted(msgs, ids, n_seg, block_e=64, block_v=64,
+                                trim=False)
+    assert padded.shape == (128, d)
+    np.testing.assert_allclose(np.asarray(padded[:n_seg]), np.asarray(out))
+    np.testing.assert_array_equal(np.asarray(padded[n_seg:]), 0.0)
+
+
+if HAS_HYPOTHESIS:
+    @pytest.mark.pallas
+    @given(st.integers(0, 10_000), st.integers(1, 200), st.integers(2, 60),
+           st.integers(1, 6), st.sampled_from(["add", "set"]))
+    @settings(max_examples=25, deadline=None)
+    def test_segment_deliver_property(seed, C, R, dq, mode):
+        d = dq * 2
+        idx, vec, cnt = _deliver_case(seed, C, R, d)
+        out = segment_deliver(idx, vec, cnt, R, mode=mode,
+                              block_e=64, block_v=32)
+        ref = segment_deliver_ref(idx, vec, cnt, R, mode=mode)
+        for got, want in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(got, np.float32),
+                                       np.asarray(want, np.float32),
+                                       rtol=1e-4, atol=1e-4)
+else:
+    @pytest.mark.skip(reason="property tests need the optional [test] extra")
+    def test_segment_deliver_property():
         pytest.importorskip("hypothesis")
 
 
