@@ -18,8 +18,8 @@ from types import SimpleNamespace
 
 from benchmarks import (bench_comm_volume, bench_delivery, bench_explosion,
                         bench_imbalance, bench_latency, bench_runtime,
-                        bench_scaling, bench_throughput, bench_training,
-                        bench_vs_batch)
+                        bench_scaling, bench_serving, bench_throughput,
+                        bench_training, bench_vs_batch)
 
 ALL = {
     "fig4a_throughput": bench_throughput,
@@ -32,6 +32,7 @@ ALL = {
     "fig7_latency": bench_latency,
     "dist_scaling": bench_scaling,
     "delivery_backend": bench_delivery,
+    "serving": bench_serving,
     # the driver comparison alone (fig4a without the 12-policy sweep) —
     # what the CI perf snapshot tracks
     "driver_comparison": SimpleNamespace(
@@ -42,7 +43,8 @@ ALL = {
 # fixed-seed subsets: every PROFILES benchmark builds its stream from a
 # seeded rng, so CI snapshots are comparable across commits
 PROFILES = {
-    "ci": ["driver_comparison", "dist_scaling", "delivery_backend"],
+    "ci": ["driver_comparison", "dist_scaling", "delivery_backend",
+           "serving"],
 }
 
 

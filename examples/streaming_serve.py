@@ -1,9 +1,12 @@
 """End-to-end serving driver (the paper's kind: online streaming inference).
 
-Sustains a throttled edge stream (batched requests) against the pipeline,
-reports throughput/latency percentiles, checkpoints mid-run, and
-demonstrates crash recovery with an elastic re-scale — the online-query
-deployment loop of DESIGN §2.
+Drives the SUPER-TICK path through a `ServeSession`: every device launch
+ingests a chunk of the edge stream AND admits a batch of point queries
+(embedding reads + on-device link scores, mixed stale_ok/consistent),
+answered from the live sharded state in the launch's single host sync.
+Reports update throughput alongside query latency percentiles,
+checkpoints mid-run, and demonstrates crash recovery with an elastic
+re-scale — the online-query deployment loop of DESIGN §2.
 
     PYTHONPATH=src python examples/streaming_serve.py [--edges 4000]
 """
@@ -17,9 +20,9 @@ from repro.core import windowing as win
 from repro.core.pipeline import D3Pipeline, PipelineConfig
 from repro.ft.checkpoint import CheckpointManager
 from repro.ft.elastic import simulate_failure_and_recover
-from repro.ft.stragglers import StragglerMitigator
 from repro.graph.graphs import powerlaw_edges
 from repro.graph.sage import GraphSAGE
+from repro.serve.session import ServeSession
 
 
 def build(n_nodes, d_in, seed=0):
@@ -28,10 +31,40 @@ def build(n_nodes, d_in, seed=0):
     cfg = PipelineConfig(n_parts=8, node_cap=4 * n_nodes // 8,
                          edge_cap=4096, repl_cap=2 * n_nodes,
                          feat_cap=2048, edge_tick_cap=512,
+                         query_cap=16, query_tick_cap=64,
                          max_nodes=n_nodes, base_parallelism=4,
                          window=win.WindowConfig(kind=win.ADAPTIVE),
                          seed=seed)
     return model, params, D3Pipeline(model, params, cfg)
+
+
+def submit_mix(session, rng, known, queries_per_launch):
+    """A serving traffic mix: 60% stale embeds, 20% consistent embeds,
+    20% stale link scores over already-streamed vertices."""
+    if not known:
+        return
+    pool = np.asarray(sorted(known))
+    n = queries_per_launch
+    session.submit_embed(rng.choice(pool, max(1, int(n * 0.6))))
+    session.submit_embed(rng.choice(pool, max(1, int(n * 0.2))),
+                         consistent=True)
+    pairs = rng.choice(pool, (max(1, int(n * 0.2)), 2))
+    session.submit_link([(int(a), int(b)) for a, b in pairs])
+
+
+def serve_half(session, edges, feats, args, rng, seen, ingested,
+               super_ticks=8):
+    """Interleave update super-ticks with query admissions; queries only
+    name vertices whose edges have already been ingested."""
+    e_chunks, f_chunks = session.pipe.chunk_stream(
+        edges, feats, args.tick_edges, seen=seen)
+    for lo in range(0, len(e_chunks), super_ticks):
+        submit_mix(session, rng, ingested, args.queries_per_launch)
+        session.advance_super(e_chunks[lo: lo + super_ticks],
+                              f_chunks[lo: lo + super_ticks],
+                              T=super_ticks)
+        for ch in e_chunks[lo: lo + super_ticks]:
+            ingested.update(int(u) for u in ch.reshape(-1))
 
 
 def main():
@@ -39,6 +72,7 @@ def main():
     ap.add_argument("--edges", type=int, default=4000)
     ap.add_argument("--nodes", type=int, default=500)
     ap.add_argument("--tick-edges", type=int, default=128)
+    ap.add_argument("--queries-per-launch", type=int, default=32)
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -46,26 +80,18 @@ def main():
     feats = {v: rng.normal(size=16).astype(np.float32)
              for v in range(args.nodes)}
     model, params, pipe = build(args.nodes, 16)
+    session = ServeSession(pipe, driver="super", super_ticks=8)
     mgr = CheckpointManager("results/serve_ckpt", keep=2, async_write=True)
-    straggle = StragglerMitigator(n_shards=4)
 
     half = len(edges) // 2
-    tick_lat = []
-    seen = set()
+    seen, ingested = set(), set()
     t_start = time.perf_counter()
-    for lo in range(0, half, args.tick_edges):
-        chunk = edges[lo: lo + args.tick_edges]
-        f_events = [(int(v), feats[int(v)]) for v in np.unique(chunk)
-                    if int(v) not in seen and not seen.add(int(v))]
-        t0 = time.perf_counter()
-        stats = pipe.tick(chunk, f_events)
-        dt = time.perf_counter() - t0
-        tick_lat.append(dt)
-        straggle.observe_tick(dt, np.asarray(stats[-1].busy))
+    serve_half(session, edges[:half], feats, args, rng, seen, ingested)
     mgr.save_pipeline(step=pipe.now, pipe=pipe)
     mgr.wait()
     print(f"checkpointed at tick {pipe.now} "
-          f"(emitted so far: {pipe.metrics.emitted_total})")
+          f"(emitted so far: {pipe.metrics.emitted_total}, "
+          f"queries answered: {pipe.metrics.queries_answered})")
 
     # ---- crash + recover onto fewer shards, keep serving -------------
     _, _, pipe2 = build(args.nodes, 16)
@@ -73,25 +99,39 @@ def main():
                                               new_parallelism=2)
     print(f"recovered checkpoint step={step}; re-scale 4->2 moved "
           f"{plan.moved_fraction:.0%} of logical parts")
-    for lo in range(half, len(edges), args.tick_edges):
-        chunk = edges[lo: lo + args.tick_edges]
-        f_events = [(int(v), feats[int(v)]) for v in np.unique(chunk)
-                    if int(v) not in seen and not seen.add(int(v))]
-        t0 = time.perf_counter()
-        pipe2.tick(chunk, f_events)
-        tick_lat.append(time.perf_counter() - t0)
-    pipe2.flush()
+    # qid_base: the restored carry still holds session 1's pending
+    # queries — session 2 must not reuse their qids
+    session2 = ServeSession(pipe2, driver="super", super_ticks=8,
+                            qid_base=session._next_qid)
+    serve_half(session2, edges[half:], feats, args, rng, seen, ingested)
+    session2.flush()
     wall = time.perf_counter() - t_start
 
-    lat = np.asarray(tick_lat[2:]) * 1e3      # skip compile ticks
     m = pipe2.metrics
+    # disjoint qid spaces (qid_base): concatenating is collision-free;
+    # adopted answers (restored pending queries) carry no enqueue time
+    answered = (list(session.answers.values())
+                + list(session2.answers.values()))
+    lats = np.asarray([a.latency_s for a in answered
+                       if a.latency_s is not None]) * 1e3
+    stale = np.asarray([a.staleness_ticks for a in answered])
     print(f"stream done: {args.edges} edges in {wall:.1f}s "
           f"({args.edges / wall:.0f} edges/s ingested)")
     print(f"emitted={m.emitted_total + pipe.metrics.emitted_total} "
           f"reduce_msgs={m.reduce_msgs} cross_part={m.cross_part_msgs}")
-    print(f"tick latency ms: p50={np.percentile(lat, 50):.1f} "
-          f"p99={np.percentile(lat, 99):.1f} max={lat.max():.1f}")
-    print(f"embedding table size: {len(pipe2.embeddings())}")
+    n_ok = sum(a.ok for a in answered)
+    print(f"queries resolved={len(answered)} (ok={n_ok}, "
+          f"device-answered="
+          f"{m.queries_answered + pipe.metrics.queries_answered}, "
+          f"dropped={m.queries_dropped + pipe.metrics.queries_dropped})")
+    if lats.size:
+        print(f"query latency ms: p50={np.percentile(lats, 50):.1f} "
+              f"p95={np.percentile(lats, 95):.1f} "
+              f"p99={np.percentile(lats, 99):.1f}; "
+              f"staleness ticks p50={np.percentile(stale, 50):.0f} "
+              f"max={stale.max()}")
+    print(f"embedding table size: {len(pipe2.embeddings())} "
+          f"(read_nodes on 8 vids: {len(pipe2.read_nodes(range(8)))})")
     print("serve driver OK")
 
 

@@ -40,6 +40,17 @@ records land in state — "xla" (reference scatters) or "pallas" (sorted
 segment-reduce kernels, `core/delivery.py`). Both backends run the same
 program under both drivers and both routers, golden-equivalent by test.
 
+Query plane: `PipelineConfig.query_cap > 0` puts a per-part pending
+point-query table (`repro/serve/query.py:QueryState`) in the carry and
+runs the query stage at the end of every tick, AFTER the sink update:
+embedding reads and on-device link scores answered straight from the
+live sharded state, with per-query freshness (`stale_ok` vs
+`consistent`). Answers ride the super-tick scan as its ys — still ONE
+host sync per super-tick (the stats read now also carries the answers).
+Answered rows accumulate host-side; `drain_answers()` pops them
+(`repro/serve/session.py:ServeSession` wraps this with latency
+accounting). `query_cap=0` (default) statically compiles the plane away.
+
 Staging model / constraints:
   - batch capacities derive from PipelineConfig, so every tick's batches
     have identical shapes and stack cleanly along T;
@@ -75,6 +86,10 @@ from repro.core.tick import (add_stats, has_work, layer_tick_body,
 from repro.core.termination import TerminationCoordinator, quiet_update
 from repro.dist.router import LocalRouter, MeshRouter
 from repro.dist.sharding import carry_pspecs, carry_shardings, stats_pspecs
+from repro.serve.query import (KIND_EMBED, KIND_LINK, add_query_stats,
+                               empty_query_batch, init_query_state,
+                               query_batch_from_numpy, query_stage,
+                               zero_query_stats)
 
 
 @dataclass
@@ -87,6 +102,10 @@ class PipelineConfig:
     outbox_cap: Optional[int] = None  # per-tick emission budget (default:
                                       # feat_cap), split evenly over parts
     edge_tick_cap: int = 1024         # new-edge records per tick
+    query_cap: int = 0                # per-part pending point-query slots
+                                      # (0 = query plane compiled away)
+    query_tick_cap: Optional[int] = None  # query admissions per tick
+                                      # (default: query_cap * n_parts)
     window: win.WindowConfig = field(default_factory=win.WindowConfig)
     delivery_backend: str = "xla"     # how routed records land in state
                                       # ("xla" scatters | "pallas" kernels)
@@ -100,6 +119,13 @@ class PipelineConfig:
         """The resolved per-tick emission budget."""
         return self.feat_cap if self.outbox_cap is None else self.outbox_cap
 
+    def query_admissions(self) -> int:
+        """The resolved per-tick query-admission capacity (0 = disabled)."""
+        if self.query_cap <= 0:
+            return 0
+        return (self.query_cap * self.n_parts if self.query_tick_cap is None
+                else self.query_tick_cap)
+
     def validate(self, n_devices: int = 1) -> None:
         """Fail fast with a clear message instead of a shard_map shape
         error deep inside the tick program."""
@@ -110,6 +136,17 @@ class PipelineConfig:
         for name, v in caps.items():
             if v <= 0:
                 raise ValueError(f"PipelineConfig.{name}={v} must be > 0")
+        if self.query_cap < 0:
+            raise ValueError(f"PipelineConfig.query_cap={self.query_cap} "
+                             "must be >= 0 (0 disables the query plane)")
+        if self.query_cap == 0 and self.query_tick_cap:
+            raise ValueError(
+                "PipelineConfig.query_tick_cap is set but query_cap=0 — "
+                "the query plane is disabled; set query_cap > 0 to serve")
+        if self.query_cap > 0 and self.query_admissions() <= 0:
+            raise ValueError(
+                f"PipelineConfig.query_tick_cap={self.query_tick_cap} "
+                "must be > 0 when the query plane is enabled")
         if self.delivery_backend not in DELIVERY_BACKENDS:
             raise ValueError(
                 f"PipelineConfig.delivery_backend="
@@ -137,6 +174,10 @@ class StreamMetrics:
     broadcast_msgs: int = 0
     cross_part_msgs: int = 0
     dropped: int = 0
+    queries_admitted: int = 0
+    queries_answered: int = 0
+    queries_dropped: int = 0
+    query_hold_ticks: int = 0          # pending-query-ticks (backlog integral)
     wall_seconds: float = 0.0
     busy_logical: Optional[np.ndarray] = None
 
@@ -174,6 +215,8 @@ class D3Pipeline:
         self.d_out = dims[-1]
         self.sink = jnp.zeros((cfg.n_parts, cfg.node_cap, self.d_out))
         self.sink_seen = jnp.zeros((cfg.n_parts, cfg.node_cap), bool)
+        self.queries = init_query_state(cfg.n_parts, cfg.query_cap,
+                                        self.d_out)
         if mesh is not None:
             sh = carry_shardings(mesh, len(self.layers))
             self.topo = jax.device_put(self.topo, sh.topo)
@@ -181,6 +224,7 @@ class D3Pipeline:
                            for i, s in enumerate(self.states)]
             self.sink = jax.device_put(self.sink, sh.sink)
             self.sink_seen = jax.device_put(self.sink_seen, sh.sink_seen)
+            self.queries = jax.device_put(self.queries, sh.queries)
         self.now = 0
         self.metrics = StreamMetrics(
             busy_logical=np.zeros(cfg.n_parts, np.int64))
@@ -193,10 +237,59 @@ class D3Pipeline:
         # host-resident twin for super-tick staging (stacked before upload)
         self._empty_edges_np = ev.edge_batch_from_numpy(
             empty_rows, cfg.edge_tick_cap, device=False)
+        self._empty_queries = empty_query_batch(cfg.query_admissions(),
+                                                self.d_out)
+        self._empty_queries_np = empty_query_batch(cfg.query_admissions(),
+                                                   self.d_out, device=False)
+        self._answer_log: list = []    # host-side answered-row columns
 
     # ------------------------------------------------------------ host side
+    def _resolve_queries(self, queries, issue_tick: int) -> dict:
+        """Resolve host query requests [(qid, kind, vid, [vid2], consistent)]
+        to master-(part, slot)-addressed rows. Requests naming a vertex the
+        partitioner has never seen are answered HERE (ok=False, zero
+        payload, answer tick = issue tick) instead of burning device slots.
+        """
+        rows = {k: [] for k in ("qid", "kind", "part", "slot", "part2",
+                                "slot2", "consistent", "issue")}
+        rejects = []
+
+        def locate(vid):
+            if not 0 <= vid < self.cfg.max_nodes:
+                return None
+            return self.part.locate_master(vid, create=False)
+
+        for q in queries:
+            qid, kind, vid = int(q[0]), int(q[1]), int(q[2])
+            vid2 = int(q[3]) if kind == KIND_LINK else 0
+            m = locate(vid)
+            m2 = locate(vid2) if kind == KIND_LINK else (0, 0)
+            if m is None or m2 is None:
+                rejects.append((qid, kind))
+                continue
+            rows["qid"].append(qid)
+            rows["kind"].append(kind)
+            rows["part"].append(m[0])
+            rows["slot"].append(m[1])
+            rows["part2"].append(m2[0])
+            rows["slot2"].append(m2[1])
+            rows["consistent"].append(bool(q[-1]))
+            rows["issue"].append(issue_tick)
+        if rejects:
+            r = np.asarray(rejects, np.int64).reshape(-1, 2)
+            self._answer_log.append({
+                "qid": r[:, 0], "kind": r[:, 1],
+                "ok": np.zeros(len(r), bool),
+                "tick": np.full(len(r), issue_tick, np.int64),
+                "issue": np.full(len(r), issue_tick, np.int64),
+                "vec": np.zeros((len(r), self.d_out), np.float32),
+                "score": np.zeros(len(r), np.float32)})
+        return {k: np.asarray(v) for k, v in rows.items()}
+
     def _build_batches(self, edges: Optional[np.ndarray],
-                       feats: Optional[list], device: bool = True):
+                       feats: Optional[list], device: bool = True,
+                       queries: Optional[list] = None,
+                       issue_tick: Optional[int] = None):
         """One tick's padded batches. device=False keeps numpy leaves for
         the super-tick staging path (stack first, upload once)."""
         cfg = self.cfg
@@ -234,28 +327,79 @@ class D3Pipeline:
             np.asarray(f_vecs, np.float32).reshape(len(f_parts), -1)
             if f_parts else np.zeros((0, 1)),
             cfg.feat_cap, self.states[0].feat.shape[-1], device)
-        return eb, rb, vb, fb
+        if queries:
+            assert cfg.query_cap > 0, \
+                "queries submitted but PipelineConfig.query_cap=0"
+            q_rows = self._resolve_queries(
+                queries, self.now if issue_tick is None else issue_tick)
+            qb = query_batch_from_numpy(q_rows, cfg.query_admissions(),
+                                        self.d_out, device)
+        else:
+            qb = (self._empty_queries if device else self._empty_queries_np)
+        return eb, rb, vb, fb, qb
 
     # ---------------------------------------------------------- device side
     def tick(self, edges: Optional[np.ndarray] = None,
-             feats: Optional[list] = None, window=None):
-        """One micro-tick through the full pipeline."""
+             feats: Optional[list] = None, window=None,
+             queries: Optional[list] = None):
+        """One micro-tick through the full pipeline.
+
+        queries: optional [(qid, kind, vid, [vid2,] consistent), ...]
+        point-query admissions for this tick (needs cfg.query_cap > 0);
+        answered rows accumulate in `drain_answers()`.
+        """
         cfg = self.cfg
         wconf = window or cfg.window
         t0 = time.perf_counter()
-        eb, rb, vb, fb = self._build_batches(edges, feats)
+        eb, rb, vb, fb, qb = self._build_batches(edges, feats,
+                                                 queries=queries)
         now = jnp.asarray(self.now, jnp.int32)
-        (self.topo, new_states, self.sink, self.sink_seen,
-         stats_all) = _tick_jit(
+        (self.topo, new_states, self.sink, self.sink_seen, self.queries,
+         stats_all, answers, qstats) = _tick_jit(
             tuple(self.layers), self.params, self.topo, tuple(self.states),
-            self.sink, self.sink_seen, fb, eb, rb, vb, now, wconf,
-            cfg.outbox(), self.router, self.delivery, self.mesh)
+            self.sink, self.sink_seen, self.queries, fb, eb, rb, vb, qb,
+            now, wconf, cfg.outbox(), self.router, self.delivery, self.mesh)
         self.states = list(new_states)
         self.now += 1
-        self._accumulate(stats_all, time.perf_counter() - t0)
+        self._harvest_answers(answers)
+        self._accumulate(stats_all, time.perf_counter() - t0, qstats=qstats)
         return list(stats_all)
 
-    def _accumulate(self, stats_all, dt, ticks: int = 1):
+    def _harvest_answers(self, answers) -> None:
+        """Pull this launch's answered rows (valid mask) into the host-side
+        answer log. `answers` leaves are [A, ...] (per-tick driver) or
+        [T, A, ...] (super-tick ys); zero-capacity leaves mean the query
+        plane is off."""
+        if answers.valid.size == 0:
+            return
+        a = jax.device_get(answers)
+        mask = np.asarray(a.valid).reshape(-1)
+        if not mask.any():
+            return
+        flat = lambda x: np.asarray(x).reshape(-1)[mask]
+        self._answer_log.append({
+            "qid": flat(a.qid), "kind": flat(a.kind), "ok": flat(a.ok),
+            "tick": flat(a.tick), "issue": flat(a.issue),
+            "vec": np.asarray(a.vec).reshape(-1, a.vec.shape[-1])[mask],
+            "score": flat(a.score)})
+
+    def drain_answers(self) -> dict:
+        """Pop every answered query collected so far as one dict of
+        concatenated numpy columns (qid, kind, ok, tick, issue, vec,
+        score) — empty arrays when nothing answered."""
+        log, self._answer_log = self._answer_log, []
+        if not log:
+            return {"qid": np.zeros(0, np.int64),
+                    "kind": np.zeros(0, np.int64),
+                    "ok": np.zeros(0, bool),
+                    "tick": np.zeros(0, np.int64),
+                    "issue": np.zeros(0, np.int64),
+                    "vec": np.zeros((0, self.d_out), np.float32),
+                    "score": np.zeros(0, np.float32)}
+        return {k: np.concatenate([chunk[k] for chunk in log])
+                for k in log[0]}
+
+    def _accumulate(self, stats_all, dt, ticks: int = 1, qstats=None):
         """Fold per-layer stats into StreamMetrics — one tick's stats from
         the per-tick driver, or `ticks` micro-ticks' summed stats from a
         super-tick (the counters are additive either way)."""
@@ -269,13 +413,20 @@ class D3Pipeline:
             m.dropped += int(s.dropped)
             m.busy_logical += np.asarray(s.busy, np.int64)
         m.emitted_total += int(stats_all[-1].emitted)
+        if qstats is not None:
+            m.queries_admitted += int(qstats.admitted)
+            m.queries_answered += int(qstats.answered)
+            m.queries_dropped += int(qstats.dropped)
+            m.query_hold_ticks += int(qstats.held_ticks)
 
-    def _chunk_stream(self, edges, feats, tick_edges: int,
-                      feat_with_first_edge: bool):
+    def chunk_stream(self, edges, feats, tick_edges: int,
+                     feat_with_first_edge: bool = True, seen=None):
         """Cut an edge stream into micro-tick chunks + aligned feature
         events (each vertex's feature fires in the tick of its first edge).
-        Shared by both drivers so their tick boundaries always agree."""
-        seen = set()
+        Shared by both drivers so their tick boundaries always agree —
+        serving loops that chunk a stream in several calls pass a
+        persistent `seen` set so features still fire exactly once."""
+        seen = set() if seen is None else seen
         e_chunks, f_chunks = [], []
         for lo in range(0, len(edges), tick_edges):
             chunk = edges[lo: lo + tick_edges]
@@ -291,53 +442,65 @@ class D3Pipeline:
         return e_chunks, f_chunks
 
     # ------------------------------------------------------ super-tick path
-    def _stage_super_batches(self, edge_chunks, feat_chunks):
+    def _stage_super_batches(self, edge_chunks, feat_chunks, query_chunks):
         """Host staging: build T per-tick padded batches, stack along T.
 
-        Returns (fb, eb, rb, vb) pytrees with a leading [T] axis — the xs of
-        the super-tick scan. Host partitioner state advances tick by tick
-        exactly as the per-tick driver would have advanced it.
+        Returns (fb, eb, rb, vb, qb) pytrees with a leading [T] axis — the
+        xs of the super-tick scan. Host partitioner state advances tick by
+        tick exactly as the per-tick driver would have advanced it; query
+        issue ticks are stamped with the tick the scan will admit them in.
         """
-        ebs, rbs, vbs, fbs = [], [], [], []
-        for edges_t, feats_t in zip(edge_chunks, feat_chunks):
-            eb, rb, vb, fb = self._build_batches(edges_t, feats_t,
-                                                 device=False)
+        ebs, rbs, vbs, fbs, qbs = [], [], [], [], []
+        for i, (edges_t, feats_t, queries_t) in enumerate(
+                zip(edge_chunks, feat_chunks, query_chunks)):
+            eb, rb, vb, fb, qb = self._build_batches(
+                edges_t, feats_t, device=False, queries=queries_t,
+                issue_tick=self.now + i)
             ebs.append(eb)
             rbs.append(rb)
             vbs.append(vb)
             fbs.append(fb)
+            qbs.append(qb)
         return (ev.stack_batches(fbs), ev.stack_batches(ebs),
-                ev.stack_batches(rbs), ev.stack_batches(vbs))
+                ev.stack_batches(rbs), ev.stack_batches(vbs),
+                ev.stack_batches(qbs))
 
     def run_super_tick(self, edge_chunks=None, feat_chunks=None,
                        T: Optional[int] = None, window=None,
-                       quiet0: int = 0):
+                       quiet0: int = 0, query_chunks=None):
         """Advance T micro-ticks in ONE device program (`lax.scan`).
 
         edge_chunks: list of per-tick edge arrays (or None entries);
-        feat_chunks: list of per-tick [(vid, vec), ...] lists (or None).
+        feat_chunks: list of per-tick [(vid, vec), ...] lists (or None);
+        query_chunks: list of per-tick query-request lists (or None) —
+        the tick() `queries` format, admitted at their staged tick.
         Shorter lists are padded with empty ticks up to T.
         quiet0 seeds the consecutive-quiet-tick counter (flush chaining).
 
         Returns (per-layer summed TickStats tuple, quiet_ticks) — the ONLY
-        host sync of the super-tick.
+        host sync of the super-tick (one device_get that also carries the
+        T ticks' stacked answers and the summed QueryStats).
         """
         cfg = self.cfg
         t0 = time.perf_counter()
         edge_chunks = list(edge_chunks) if edge_chunks is not None else []
         feat_chunks = list(feat_chunks) if feat_chunks is not None else []
-        n = max(len(edge_chunks), len(feat_chunks), 1)
+        query_chunks = list(query_chunks) if query_chunks is not None else []
+        n = max(len(edge_chunks), len(feat_chunks), len(query_chunks), 1)
         T = int(T) if T is not None else n
         assert T >= n, f"T={T} smaller than the {n} staged ticks"
         edge_chunks += [None] * (T - len(edge_chunks))
         feat_chunks += [None] * (T - len(feat_chunks))
-        batches = self._stage_super_batches(edge_chunks, feat_chunks)
+        query_chunks += [None] * (T - len(query_chunks))
+        batches = self._stage_super_batches(edge_chunks, feat_chunks,
+                                            query_chunks)
 
         carry = st.PipelineCarry(
             topo=self.topo, layers=tuple(self.states), sink=self.sink,
-            sink_seen=self.sink_seen, now=jnp.asarray(self.now, jnp.int32),
+            sink_seen=self.sink_seen, queries=self.queries,
+            now=jnp.asarray(self.now, jnp.int32),
             quiet=jnp.asarray(quiet0, jnp.int32))
-        final, stats_sum = _super_tick_scan(
+        final, stats_sum, qstats_sum, answers = _super_tick_scan(
             tuple(self.layers), self.params, carry, batches,
             window or cfg.window, cfg.outbox(), self.router, self.delivery,
             self.mesh)
@@ -345,10 +508,15 @@ class D3Pipeline:
         self.states = list(final.layers)
         self.sink = final.sink
         self.sink_seen = final.sink_seen
+        self.queries = final.queries
         self.now += T
-        # the one host sync per super-tick: summed stats + quiet counter
-        host_stats, quiet = jax.device_get((stats_sum, final.quiet))
-        self._accumulate(host_stats, time.perf_counter() - t0, ticks=T)
+        # the one host sync per super-tick: summed stats + quiet counter +
+        # query stats + the T ticks' stacked answers, in ONE device_get
+        host_stats, quiet, host_qstats, host_answers = jax.device_get(
+            (stats_sum, final.quiet, qstats_sum, answers))
+        self._harvest_answers(host_answers)
+        self._accumulate(host_stats, time.perf_counter() - t0, ticks=T,
+                         qstats=host_qstats)
         return host_stats, int(quiet)
 
     def run_stream_super(self, edges: np.ndarray, feats: dict,
@@ -360,8 +528,8 @@ class D3Pipeline:
         into super-ticks of `super_ticks` ticks each (the tail group is
         padded with empty ticks so every launch reuses one compiled scan).
         """
-        e_chunks, f_chunks = self._chunk_stream(edges, feats, tick_edges,
-                                                feat_with_first_edge)
+        e_chunks, f_chunks = self.chunk_stream(edges, feats, tick_edges,
+                                               feat_with_first_edge)
         for lo in range(0, len(e_chunks), super_ticks):
             self.run_super_tick(e_chunks[lo: lo + super_ticks],
                                 f_chunks[lo: lo + super_ticks],
@@ -396,8 +564,8 @@ class D3Pipeline:
         in the tick its first edge appears (feature stream aligned with the
         topology stream, as in the paper's temporal edge-list datasets).
         """
-        e_chunks, f_chunks = self._chunk_stream(edges, feats, tick_edges,
-                                                feat_with_first_edge)
+        e_chunks, f_chunks = self.chunk_stream(edges, feats, tick_edges,
+                                               feat_with_first_edge)
         for chunk, f_events in zip(e_chunks, f_chunks):
             self.tick(chunk, f_events)
         return self
@@ -418,19 +586,32 @@ class D3Pipeline:
                            f"within {max_ticks} flush ticks")
 
     # ------------------------------------------------------------- queries
-    def embeddings(self) -> dict:
-        """Materialized final-layer embeddings {vid: vector} (masters).
+    def read_nodes(self, vids) -> dict:
+        """Device-side partial gather of sink embeddings for a vid set.
 
-        One numpy gather over the partitioner's master tables — no
-        per-vid Python loop over the max_nodes id space."""
-        sink = np.asarray(self.sink)
-        seen = np.asarray(self.sink_seen)
+        Only the requested rows are gathered (on device, from the live —
+        possibly sharded — sink) and transferred; vids the partitioner has
+        never seen, or whose master never materialized an embedding, are
+        absent from the result. This is the host-side oracle of the query
+        plane's stale_ok reads: a stale_ok answer at tick t bit-matches
+        `read_nodes` called right after tick t.
+        """
+        vids = np.asarray(list(vids) if not isinstance(vids, np.ndarray)
+                          else vids, np.int64).reshape(-1)
         t = self.part.t
-        vids = np.flatnonzero(t.master >= 0)
-        p, s = t.master[vids], t.master_slot[vids]
-        ok = seen[p, s]
-        vids, vecs = vids[ok], sink[p[ok], s[ok]]
-        return {int(v): vecs[i] for i, v in enumerate(vids)}
+        vids = vids[(vids >= 0) & (vids < t.max_nodes)]
+        vids = vids[t.master[vids] >= 0]
+        if vids.size == 0:
+            return {}
+        p = jnp.asarray(t.master[vids])
+        s = jnp.asarray(t.master_slot[vids])
+        vecs, seen = jax.device_get((self.sink[p, s], self.sink_seen[p, s]))
+        return {int(v): vecs[i] for i, v in enumerate(vids) if seen[i]}
+
+    def embeddings(self) -> dict:
+        """Materialized final-layer embeddings {vid: vector} (masters) —
+        a thin wrapper over `read_nodes` for every vid with a master."""
+        return self.read_nodes(np.flatnonzero(self.part.t.master >= 0))
 
     def physical_busy_per_layer(self):
         """Per-layer physical busy vectors under the explosion factor."""
@@ -471,33 +652,54 @@ def _tick_program(layers, params, topo, states, inbox, eb, rb, vb, now,
     return topo, tuple(new_states), inbox, tuple(stats_all)
 
 
+def _tick_silent(stats_all, layer_states, router):
+    """The query plane's quiescence gate for one tick: True iff no message
+    moved anywhere (the stats scalars are already router-psum'd) AND no
+    window timer is pending anywhere (psum'd has_work vote) — i.e. nothing
+    already ingested can still change any target. Consistent queries only
+    answer at such ticks."""
+    moved = jnp.int32(0)
+    for s in stats_all:
+        moved = moved + s.emitted + s.reduce_msgs + s.broadcast_msgs
+    timers = jnp.int32(0)
+    for ls in layer_states:
+        timers = timers + has_work(ls).astype(jnp.int32)
+    return (moved == 0) & (router.psum(timers) == 0)
+
+
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh"))
-def _tick_jit(layers, params, topo, states, sink, sink_seen, inbox, eb, rb,
-              vb, now, wconf, outbox_cap, router, delivery, mesh):
+def _tick_jit(layers, params, topo, states, sink, sink_seen, queries,
+              inbox, eb, rb, vb, qb, now, wconf, outbox_cap, router,
+              delivery, mesh):
     """The per-tick driver's device program (reference path)."""
-    def prog(params, topo, states, sink, sink_seen, inbox, eb, rb, vb, now):
+    def prog(params, topo, states, sink, sink_seen, queries, inbox, eb,
+             rb, vb, qb, now):
         topo, states, out, stats = _tick_program(
             layers, params, topo, states, inbox, eb, rb, vb, now, wconf,
             outbox_cap, router, delivery)
         # sink: final-layer emissions materialize the embedding table
         sink, sink_seen = _sink_update_body(sink, sink_seen, out,
                                             router.part0())
-        return topo, states, sink, sink_seen, stats
+        # query plane: answer point queries from the fresh sink
+        queries, ans, qstats = query_stage(
+            queries, qb, states, sink, sink_seen, now,
+            _tick_silent(stats, states, router), router)
+        return topo, states, sink, sink_seen, queries, stats, ans, qstats
 
     if mesh is None:
-        return prog(params, topo, states, sink, sink_seen, inbox, eb, rb,
-                    vb, now)
+        return prog(params, topo, states, sink, sink_seen, queries, inbox,
+                    eb, rb, vb, qb, now)
     cp = carry_pspecs(len(layers))
     sharded = shard_map(
         prog, mesh=mesh,
         in_specs=(P(), cp.topo, cp.layers, cp.sink, cp.sink_seen,
-                  P(), P(), P(), P(), P()),
-        out_specs=(cp.topo, cp.layers, cp.sink, cp.sink_seen,
-                   stats_pspecs(len(layers))),
+                  cp.queries, P(), P(), P(), P(), P(), P()),
+        out_specs=(cp.topo, cp.layers, cp.sink, cp.sink_seen, cp.queries,
+                   stats_pspecs(len(layers)), P("data"), P()),
         check_rep=False)
-    return sharded(params, topo, states, sink, sink_seen, inbox, eb, rb,
-                   vb, now)
+    return sharded(params, topo, states, sink, sink_seen, queries, inbox,
+                   eb, rb, vb, qb, now)
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
@@ -508,40 +710,48 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
                      delivery=None, mesh=None):
     """T micro-ticks x L layers as one `lax.scan` — the super-tick body.
 
-    carry (donated): PipelineCarry — topology, per-layer states, sink and
-    the tick clock / quiet counter, all device-resident (and part-sharded
-    when a mesh is given: the scan runs INSIDE the shard_map, so the carry
-    never leaves its owning shard between ticks).
-    batches: (fb, eb, rb, vb) pytrees with leading [T] axis (scan xs).
-    Returns (final carry, per-layer TickStats summed over the T ticks).
+    carry (donated): PipelineCarry — topology, per-layer states, sink,
+    the pending-query table and the tick clock / quiet counter, all
+    device-resident (and part-sharded when a mesh is given: the scan runs
+    INSIDE the shard_map, so the carry never leaves its owning shard
+    between ticks).
+    batches: (fb, eb, rb, vb, qb) pytrees with leading [T] axis (scan xs).
+    Returns (final carry, per-layer TickStats summed over the T ticks,
+    summed QueryStats, per-tick stacked AnswerBatch — the scan's ys).
     """
     def scan_prog(params, carry, batches):
         n_parts_loc = carry.topo.n_parts          # LOCAL block under mesh
 
         def body(state, batch_t):
-            c, ssum = state
-            fb, eb, rb, vb = batch_t
+            c, ssum, qsum = state
+            fb, eb, rb, vb, qb = batch_t
             topo, new_layers, out, stats_t = _tick_program(
                 layers, params, c.topo, c.layers, fb, eb, rb, vb, c.now,
                 wconf, outbox_cap, router, delivery)
             sink, sink_seen = _sink_update_body(c.sink, c.sink_seen, out,
                                                 router.part0())
+            queries, ans, qstats_t = query_stage(
+                c.queries, qb, new_layers, sink, sink_seen, c.now,
+                _tick_silent(stats_t, new_layers, router), router)
             quiet = quiet_update(c.quiet, new_layers, stats_t, router)
             new_c = st.PipelineCarry(
                 topo=topo, layers=new_layers, sink=sink,
-                sink_seen=sink_seen, now=c.now + jnp.int32(1), quiet=quiet)
+                sink_seen=sink_seen, queries=queries,
+                now=c.now + jnp.int32(1), quiet=quiet)
             ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
-            return (new_c, ssum), None
+            return (new_c, ssum, add_query_stats(qsum, qstats_t)), ans
 
         zeros = tuple(zero_stats(n_parts_loc) for _ in layers)
-        (final, stats_sum), _ = jax.lax.scan(body, (carry, zeros), batches)
-        return final, stats_sum
+        (final, stats_sum, qstats_sum), answers = jax.lax.scan(
+            body, (carry, zeros, zero_query_stats()), batches)
+        return final, stats_sum, qstats_sum, answers
 
     if mesh is None:
         return scan_prog(params, carry, batches)
     cp = carry_pspecs(len(layers))
     sharded = shard_map(scan_prog, mesh=mesh,
                         in_specs=(P(), cp, P()),
-                        out_specs=(cp, stats_pspecs(len(layers))),
+                        out_specs=(cp, stats_pspecs(len(layers)), P(),
+                                   P(None, "data")),
                         check_rep=False)
     return sharded(params, carry, batches)

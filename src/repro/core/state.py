@@ -102,6 +102,9 @@ class PipelineCarry:
     layers: tuple                 # tuple[LayerState, ...] (one per GNN layer)
     sink: jnp.ndarray             # [P, N, d_out] materialized embeddings
     sink_seen: jnp.ndarray        # [P, N] bool
+    queries: object               # serve/query.py QueryState — the pending
+                                  # point-query table ([P, Q] slots; Q=0
+                                  # compiles the query plane away)
     now: jnp.ndarray              # int32 scalar — the tick clock
     quiet: jnp.ndarray            # int32 scalar — consecutive quiescent ticks
 
@@ -113,7 +116,8 @@ for _cls, _df in (
     (LayerState, ["feat", "has_feat", "x_sent", "has_sent", "agg", "agg_cnt",
                   "red_pending", "red_deadline", "fwd_pending", "fwd_deadline",
                   "cms", "last_touch"]),
-    (PipelineCarry, ["topo", "layers", "sink", "sink_seen", "now", "quiet"]),
+    (PipelineCarry, ["topo", "layers", "sink", "sink_seen", "queries",
+                     "now", "quiet"]),
 ):
     jax.tree_util.register_dataclass(_cls, data_fields=_df, meta_fields=[])
 

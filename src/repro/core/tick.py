@@ -1,8 +1,12 @@
 """The per-layer micro-tick: streaming (Alg. 1) and windowed (Alg. 2)
-forward pass, factored into THREE planes — a part-local COMPUTE plane
+forward pass, factored into FOUR planes — a part-local COMPUTE plane
 (the four stages below, ISSUE 2), an explicit ROUTING plane
-(`dist/router.py`), and a pluggable DELIVERY plane (`core/delivery.py`,
-ISSUE 3) that lands routed records in the local state blocks.
+(`dist/router.py`), a pluggable DELIVERY plane (`core/delivery.py`,
+ISSUE 3) that lands routed records in the local state blocks, and a
+QUERY plane (`serve/query.py`, ISSUE 4) that answers point queries from
+the state the other three maintain — it runs after the layer ticks and
+the sink update (see `core/pipeline.py`), reading this module's
+red/fwd pending flags as the per-target freshness signal.
 
 One tick = two routing rounds (DESIGN §2), four pure stages with a
 Router delivery between them:

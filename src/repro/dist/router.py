@@ -22,6 +22,10 @@ The streaming tick is split into three planes (ISSUE 2 + ISSUE 3):
     lands the records in the local state blocks: "xla" reference scatters
     or "pallas" sorted segment-reduce kernels, selected by
     `PipelineConfig.delivery_backend` and orthogonal to the Router choice.
+  * QUERY plane — `repro/serve/query.py` answers point queries from the
+    state the other three maintain; its link-score forwarding hop rides
+    `route` as one extra fixed-capacity all_to_all lane per tick
+    (`route` is generic over any part-addressed batch pytree).
 
 Routers are small frozen dataclasses so they can ride jit boundaries as
 static arguments. `MeshRouter` methods are only valid INSIDE a
@@ -34,10 +38,9 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 from jax import lax
-
-from repro.core.events import MsgBatch
 
 
 @dataclass(frozen=True)
@@ -57,7 +60,7 @@ class LocalRouter:
         """Global id of the first locally-owned part."""
         return jnp.int32(0)
 
-    def route(self, msg: MsgBatch) -> MsgBatch:
+    def route(self, msg):
         return msg
 
     def psum(self, x):
@@ -87,14 +90,19 @@ class MeshRouter:
     def psum(self, x):
         return lax.psum(x, self.axis)
 
-    def route(self, msg: MsgBatch) -> MsgBatch:
+    def route(self, msg):
         """Deliver records to the devices owning their destination parts.
 
-        Compaction: rank each valid record among records bound for the
-        same destination device (cumsum over a one-hot [C, D] membership),
-        scatter into a [D, C] send buffer, all_to_all, return the [D * C]
-        received rows (block j = what device j sent here). Invalid rows
-        and empty bucket tail stay masked out.
+        Generic over any part-addressed batch pytree with `part`/`valid`
+        fields (`MsgBatch` for the compute plane's two rounds, the query
+        plane's `QueryBatch` wire lane): compaction ranks each valid
+        record among records bound for the same destination device
+        (cumsum over a one-hot [C, D] membership), scatters into a
+        [D, C] send buffer per field, one all_to_all, and returns the
+        [D * C] received rows (block j = what device j sent here) —
+        preserving global (source part, slot) record order, so delivery
+        is order-identical to the LocalRouter's. Invalid rows and empty
+        bucket tails stay masked out.
         """
         D = self.n_devices
         if D == 1:
@@ -114,9 +122,4 @@ class MeshRouter:
 
         ex = lambda x: lax.all_to_all(x, self.axis, split_axis=0,
                                       concat_axis=0, tiled=True)
-        return MsgBatch(part=ex(bucket(msg.part)),
-                        slot=ex(bucket(msg.slot)),
-                        vec=ex(bucket(msg.vec)),
-                        cnt=ex(bucket(msg.cnt)),
-                        src_part=ex(bucket(msg.src_part)),
-                        valid=ex(bucket(msg.valid)))
+        return jax.tree.map(lambda x: ex(bucket(x)), msg)

@@ -103,6 +103,7 @@ def _carry_tree(n_layers: int, part, rep):
     """Build a PipelineCarry-shaped tree with `part` at every
     part-leading leaf and `rep` at every replicated leaf."""
     from repro.core.state import LayerState, PipelineCarry, TopoState
+    from repro.serve.query import QueryState
     topo = TopoState(
         e_src_slot=part, e_dst_slot=part, e_dst_mpart=part, e_dst_mslot=part,
         e_valid=part, r_master_slot=part, r_rep_part=part, r_rep_slot=part,
@@ -111,8 +112,11 @@ def _carry_tree(n_layers: int, part, rep):
         feat=part, has_feat=part, x_sent=part, has_sent=part, agg=part,
         agg_cnt=part, red_pending=part, red_deadline=part, fwd_pending=part,
         fwd_deadline=part, cms=rep, last_touch=part)
+    queries = QueryState(
+        qid=part, kind=part, slot=part, part2=part, slot2=part,
+        consistent=part, ok=part, issue=part, vec=part, pending=part)
     return PipelineCarry(topo=topo, layers=(layer,) * n_layers, sink=part,
-                         sink_seen=part, now=rep, quiet=rep)
+                         sink_seen=part, queries=queries, now=rep, quiet=rep)
 
 
 def carry_pspecs(n_layers: int, axis: str = "data"):

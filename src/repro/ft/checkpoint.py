@@ -181,7 +181,9 @@ class CheckpointManager:
     def save_pipeline(self, step: int, pipe):
         """Full engine snapshot: device state + host partitioner tables +
         metrics. Window-pending state (the in-flight events) is inside
-        LayerState, so this IS the Chandy-Lamport-equivalent cut."""
+        LayerState and held point queries live in the QueryState table,
+        so this IS the Chandy-Lamport-equivalent cut — a restored carry
+        answers pending `consistent` queries identically."""
         t = pipe.part.t
         aux = {
             "degree": t.degree, "replicas": t.replicas, "load": t.load,
@@ -194,18 +196,20 @@ class CheckpointManager:
             "now": np.asarray(pipe.now),
         }
         tree = {"topo": pipe.topo, "layers": pipe.states, "sink": pipe.sink,
-                "sink_seen": pipe.sink_seen, "params": pipe.params}
+                "sink_seen": pipe.sink_seen, "queries": pipe.queries,
+                "params": pipe.params}
         self.save(step, tree, meta={"now": pipe.now}, aux=aux)
 
     def restore_pipeline(self, pipe, step: int | None = None) -> int:
         template = {"topo": pipe.topo, "layers": pipe.states,
                     "sink": pipe.sink, "sink_seen": pipe.sink_seen,
-                    "params": pipe.params}
+                    "queries": pipe.queries, "params": pipe.params}
         tree, got_step = self.restore(template, step)
         pipe.topo = tree["topo"]
         pipe.states = tree["layers"]
         pipe.sink = tree["sink"]
         pipe.sink_seen = tree["sink_seen"]
+        pipe.queries = tree["queries"]
         pipe.params = tree["params"]
         h = self.restore_aux(got_step)
         t = pipe.part.t

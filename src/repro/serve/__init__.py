@@ -1,0 +1,13 @@
+"""The query plane: on-device point queries over the live sharded state.
+
+`serve/query.py` — event records + the device-side query stage (the
+fourth plane of the streaming tick); `serve/session.py` — the host-side
+ServeSession that interleaves update chunks with query admissions over
+both pipeline drivers and reports end-to-end latency percentiles.
+"""
+from repro.serve.query import (KIND_EMBED, KIND_LINK, AnswerBatch,
+                               QueryBatch, QueryState, QueryStats)
+from repro.serve.session import ServeSession
+
+__all__ = ["KIND_EMBED", "KIND_LINK", "AnswerBatch", "QueryBatch",
+           "QueryState", "QueryStats", "ServeSession"]

@@ -1,0 +1,196 @@
+"""Host-side serving loop: interleave graph updates and point queries.
+
+`ServeSession` wraps a query-enabled `D3Pipeline` (cfg.query_cap > 0) and
+drives EITHER pipeline driver with queries aboard:
+
+  * driver="tick"  — per-tick reference path: queued submissions admit in
+    the very next micro-tick (`advance(edges, feats)`);
+  * driver="super" — the donated super-tick `lax.scan`: `advance_super`
+    stages T update micro-ticks and spreads the queued submissions over
+    them, so queries admit while updates are still flowing through the
+    same device launch. Answers come back in the launch's single host
+    sync.
+
+The session keeps the host-side truth the device never sees: wall-clock
+enqueue times per qid. Every harvested answer gets an end-to-end
+enqueue->answer latency (submission to host-visible result, INCLUDING the
+super-tick batching delay — that is the serving latency a client would
+observe) plus tick-domain staleness (answer_tick - issue_tick).
+`latency_stats()` reports p50/p95/p99 histogram summaries.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serve.query import KIND_EMBED, KIND_LINK
+
+
+@dataclass
+class Answer:
+    """One resolved point query (host view)."""
+    qid: int
+    kind: int                 # KIND_EMBED | KIND_LINK
+    ok: bool                  # False: endpoint never materialized, the
+                              # vertex was unknown, or the pending table
+                              # overflowed (re-submit in that case)
+    vec: np.ndarray           # embedding (KIND_EMBED; zeros otherwise)
+    score: float              # link score (KIND_LINK; 0.0 otherwise)
+    issue_tick: int
+    answer_tick: int
+    latency_s: float          # wall-clock enqueue -> host-visible answer;
+                              # None for adopted answers (queries restored
+                              # from a checkpoint another session issued)
+
+    @property
+    def staleness_ticks(self) -> int:
+        return self.answer_tick - self.issue_tick
+
+
+@dataclass
+class _PendingMeta:
+    enqueued_at: float
+    kind: int
+
+
+@dataclass
+class ServeSession:
+    pipe: object                                   # a query-enabled D3Pipeline
+    driver: str = "super"                          # "super" | "tick"
+    super_ticks: int = 8                           # T per device launch
+    qid_base: int = 0                              # first qid this session
+                                                   # assigns — hand over the
+                                                   # previous session's
+                                                   # _next_qid when restoring
+                                                   # a checkpoint that holds
+                                                   # its pending queries
+    answers: dict = field(default_factory=dict)    # qid -> Answer
+    _queue: list = field(default_factory=list)     # un-admitted submissions
+    _meta: dict = field(default_factory=dict)      # qid -> _PendingMeta
+    _next_qid: int = 0
+
+    def __post_init__(self):
+        if self.pipe.cfg.query_cap <= 0:
+            raise ValueError(
+                "ServeSession needs a query-enabled pipeline: set "
+                "PipelineConfig.query_cap > 0 (the query plane is "
+                "compiled away at query_cap=0)")
+        if self.driver not in ("super", "tick"):
+            raise ValueError(f"driver={self.driver!r}: 'super' or 'tick'")
+        self._next_qid = max(self._next_qid, int(self.qid_base))
+
+    # ------------------------------------------------------------- submit
+    def _submit(self, rows) -> list:
+        now = time.perf_counter()
+        qids = []
+        for row in rows:
+            qid = self._next_qid
+            self._next_qid += 1
+            self._queue.append((qid,) + row)
+            self._meta[qid] = _PendingMeta(enqueued_at=now, kind=row[0])
+            qids.append(qid)
+        return qids
+
+    def submit_embed(self, vids, consistent: bool = False) -> list:
+        """Enqueue embedding reads; returns the assigned qids."""
+        return self._submit([(KIND_EMBED, int(v), 0, consistent)
+                             for v in np.asarray(vids).reshape(-1)])
+
+    def submit_link(self, pairs, consistent: bool = False) -> list:
+        """Enqueue link-score queries for (u, v) pairs; returns qids."""
+        return self._submit([(KIND_LINK, int(u), int(v), consistent)
+                             for u, v in pairs])
+
+    # ------------------------------------------------------------ advance
+    def advance(self, edges=None, feats=None, window=None):
+        """One micro-tick (driver='tick'): queued submissions admit now,
+        up to the per-tick admission budget (the rest stay queued)."""
+        cap = self.pipe.cfg.query_admissions()
+        q, self._queue = self._queue[:cap], self._queue[cap:]
+        stats = self.pipe.tick(edges, feats, window=window,
+                               queries=q or None)
+        self._harvest()
+        return stats
+
+    def advance_super(self, edge_chunks=None, feat_chunks=None,
+                      T=None, window=None, quiet0: int = 0):
+        """One super-tick (driver='super'): queued submissions spread
+        over the launch's T micro-ticks (earliest first, at most
+        `query_admissions()` per tick), so admission interleaves with
+        the update stream on device. Submissions beyond the launch's
+        admission budget stay queued for the next advance — they never
+        overflow a tick's fixed-capacity query batch."""
+        edge_chunks = list(edge_chunks) if edge_chunks is not None else []
+        feat_chunks = list(feat_chunks) if feat_chunks is not None else []
+        n = max(len(edge_chunks), len(feat_chunks), 1)
+        T = int(T) if T is not None else n
+        per_tick = self.pipe.cfg.query_admissions()
+        q, self._queue = self._queue[:per_tick * T], self._queue[per_tick * T:]
+        q_chunks = [q[i * per_tick: (i + 1) * per_tick] for i in range(T)]
+        out = self.pipe.run_super_tick(edge_chunks, feat_chunks, T=T,
+                                       window=window, quiet0=quiet0,
+                                       query_chunks=q_chunks)
+        self._harvest()
+        return out
+
+    def step(self, edges=None, feats=None, **kw):
+        """Driver-agnostic advance: one tick or one super-tick."""
+        if self.driver == "tick":
+            return self.advance(edges, feats, **kw)
+        e = [edges] if edges is not None else None
+        f = [feats] if feats is not None else None
+        return self.advance_super(e, f, T=self.super_ticks, **kw)
+
+    def flush(self, max_ticks: int = 128):
+        """Drain the pipeline (and any held consistent queries answer at
+        the first silent tick)."""
+        if self.driver == "tick":
+            ran = self.pipe.flush(max_ticks=max_ticks)
+        else:
+            ran = self.pipe.flush_super(max_ticks=max_ticks,
+                                        T=self.super_ticks)
+        self._harvest()
+        return ran
+
+    # ------------------------------------------------------------ results
+    def _harvest(self):
+        cols = self.pipe.drain_answers()
+        t_now = time.perf_counter()
+        for i in range(len(cols["qid"])):
+            qid = int(cols["qid"][i])
+            meta = self._meta.pop(qid, None)
+            self.answers[qid] = Answer(
+                qid=qid, kind=int(cols["kind"][i]), ok=bool(cols["ok"][i]),
+                vec=np.asarray(cols["vec"][i]),
+                score=float(cols["score"][i]),
+                issue_tick=int(cols["issue"][i]),
+                answer_tick=int(cols["tick"][i]),
+                # adopted answers (restored pending queries another session
+                # issued) have no enqueue time — excluded from percentiles
+                latency_s=(t_now - meta.enqueued_at) if meta else None)
+
+    @property
+    def outstanding(self) -> int:
+        """Submitted but not yet answered (queued + held on device)."""
+        return len(self._meta) + len(self._queue)
+
+    def latency_stats(self) -> dict:
+        """p50/p95/p99 end-to-end latency (ms) + staleness + counts."""
+        lats = np.asarray([a.latency_s for a in self.answers.values()
+                           if a.latency_s is not None])
+        if lats.size == 0:
+            return {"answered": len(self.answers),
+                    "outstanding": self.outstanding}
+        stale = np.asarray([a.staleness_ticks
+                            for a in self.answers.values()])
+        return {
+            "answered": len(self.answers),
+            "outstanding": self.outstanding,
+            "p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "p95_ms": float(np.percentile(lats, 95) * 1e3),
+            "p99_ms": float(np.percentile(lats, 99) * 1e3),
+            "staleness_ticks_p50": float(np.percentile(stale, 50)),
+            "staleness_ticks_max": int(stale.max()),
+        }

@@ -61,6 +61,60 @@ def test_checkpoint_restart_mid_stream(tmp_path):
         np.testing.assert_allclose(vec, ref[vid], rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("where", ["local", "mesh"])
+def test_checkpoint_restores_pending_consistent_queries(tmp_path, where):
+    """A carry checkpointed with HELD `consistent` point queries (the
+    query plane's in-flight state) must restore into a fresh pipeline and
+    answer them identically — same qids, same answer ticks, bit-equal
+    payloads — on the LocalRouter and on a mesh."""
+    from repro.launch.mesh import make_stream_mesh
+    from repro.serve.query import KIND_EMBED, KIND_LINK
+
+    edges, feats = make_stream()
+    mesh = make_stream_mesh(1) if where == "mesh" else None
+
+    def make_qpipe():
+        model = GraphSAGE((6, 12, 12))
+        params = model.init(jax.random.key(0))
+        cfg = PipelineConfig(
+            n_parts=4, node_cap=64, edge_cap=256, repl_cap=256,
+            feat_cap=256, edge_tick_cap=64, max_nodes=40, query_cap=8,
+            window=win.WindowConfig(kind=win.TUMBLING, interval=4))
+        return D3Pipeline(model, params, cfg, mesh=mesh)
+
+    u, v = int(edges[0, 0]), int(edges[0, 1])
+    pipe = make_qpipe()
+    pipe.run_stream(edges[:80], feats, tick_edges=16)
+    pipe.tick(edges[80:], queries=[(1, KIND_EMBED, u, True),
+                                   (2, KIND_LINK, u, v, True),
+                                   (3, KIND_EMBED, v, False)])
+    pipe.drain_answers()                   # anything already answered
+    held = int(np.asarray(jax.device_get(pipe.queries.pending)).sum())
+    assert held > 0, "test needs queries still pending at the cut"
+
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    mgr.save_pipeline(step=1, pipe=pipe)
+    pipe2 = make_qpipe()
+    assert mgr.restore_pipeline(pipe2) == 1
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(pipe2.queries.pending)),
+        np.asarray(jax.device_get(pipe.queries.pending)))
+
+    def finish(p):
+        p.flush(max_ticks=128)
+        ans = p.drain_answers()
+        order = np.argsort(ans["qid"])
+        return {k: val[order] for k, val in ans.items()}
+
+    a, b = finish(pipe), finish(pipe2)
+    assert a["qid"].size == held
+    np.testing.assert_array_equal(b["qid"], a["qid"])
+    np.testing.assert_array_equal(b["tick"], a["tick"])
+    np.testing.assert_array_equal(b["ok"], a["ok"])
+    np.testing.assert_array_equal(b["vec"], a["vec"])
+    np.testing.assert_array_equal(b["score"], a["score"])
+
+
 def test_checkpoint_gc_and_latest(tmp_path):
     mgr = CheckpointManager(tmp_path, keep=2)
     for s in (1, 2, 3, 4):
