@@ -1,12 +1,36 @@
-"""Paper Fig. 4b: communication volume — cross-part message bytes for
-streaming vs windowed policies (the paper reports iterative communication
-volume of the second GNN layer; we count cross-part RMI + broadcast rows
-times row bytes)."""
+"""Paper Fig. 4b: communication volume.
+
+Two row families:
+
+  fig4b_comm_volume[<policy>]      — cross-part message ROWS per window
+      policy (streaming/tumbling/session/adaptive) on the hub-heavy
+      stream, in-process: the paper's iterative-communication-volume
+      comparison (windowing coalesces messages).
+
+  fig4b_comm_volume[wire,<mode>]   — MEASURED all_to_all wire bytes of
+      the routing plane on a real (forced) 4-device CPU mesh, read from
+      the new TickStats/StreamMetrics wire counters (ISSUE 5) instead of
+      being inferred from message counts:
+        dense  : route_cap=None — worst-case D x C buckets (the
+                 pre-ISSUE-5 sizing);
+        capped : route_cap = C_rmi // D — traffic-adaptive buckets; same
+                 stream, same convergence (golden-equivalent by test),
+                 a fraction of the wire. `reduction_x` is the measured
+                 dense/capped byte ratio (the acceptance bar is >= 2x),
+                 `events_per_s` guards against the capped exchange
+                 costing throughput.
+"""
 from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
 
 from repro.core import windowing as win
 
 from benchmarks.common import D_HID, fmt_row, make_case, make_pipeline, run_and_time
+
+REPO = Path(__file__).resolve().parents[1]
 
 POLICIES = {
     "streaming": win.WindowConfig(kind=win.STREAMING),
@@ -14,6 +38,67 @@ POLICIES = {
     "session": win.WindowConfig(kind=win.SESSION, interval=4),
     "adaptive": win.WindowConfig(kind=win.ADAPTIVE),
 }
+
+_WIRE_WORKER = """
+import time
+import numpy as np
+import jax
+from repro.core import windowing as win
+from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.graph.graphs import powerlaw_edges
+from repro.graph.sage import GraphSAGE
+from repro.launch.mesh import make_stream_mesh
+
+D = 4
+N_EDGES = {n_edges}
+rng = np.random.default_rng(0)
+n_nodes = 200
+edges = powerlaw_edges(rng, n_nodes, N_EDGES, 1.1)      # hub-heavy
+feats = {{v: rng.normal(size=16).astype(np.float32) for v in range(n_nodes)}}
+
+N_PARTS, EDGE_CAP, EDGE_TICK_CAP = 8, 1024, 64
+C_RMI = EDGE_TICK_CAP + (N_PARTS // D) * EDGE_CAP       # local RMI lane
+
+def run(route_cap):
+    model = GraphSAGE((16, 32, 32))
+    params = model.init(jax.random.key(0))
+    cfg = PipelineConfig(n_parts=N_PARTS, node_cap=256, edge_cap=EDGE_CAP,
+                         repl_cap=512, feat_cap=512,
+                         edge_tick_cap=EDGE_TICK_CAP, max_nodes=n_nodes,
+                         route_cap=route_cap,
+                         window=win.WindowConfig(kind=win.STREAMING))
+    pipe = D3Pipeline(model, params, cfg, mesh=make_stream_mesh(D))
+    t0 = time.perf_counter()
+    pipe.run_stream_super(edges, feats, tick_edges=64, super_ticks=8)
+    pipe.flush_super(max_ticks=128, T=8)
+    wall = time.perf_counter() - t0
+    m = pipe.metrics
+    print(f"RESULT,{{'dense' if route_cap is None else 'capped'}},"
+          f"{{m.wire_bytes}},{{m.wire_rows}},{{m.route_deferred}},"
+          f"{{m.route_dropped}},{{N_EDGES / wall:.1f}}")
+
+run(None)
+run(C_RMI // D)
+"""
+
+
+def _wire_rows(n_edges: int, timeout: int = 560):
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": "/root", "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
+    r = subprocess.run(
+        [sys.executable, "-c", _WIRE_WORKER.format(n_edges=n_edges)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError("comm-volume wire worker failed:\n"
+                           + r.stderr[-2000:])
+    out = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT,"):
+            _, mode, by, rows, defer, drop, evs = line.split(",")
+            out[mode] = (int(by), int(rows), int(defer), int(drop),
+                         float(evs))
+    return out
 
 
 def run(scale: str = "small"):
@@ -31,6 +116,21 @@ def run(scale: str = "small"):
             f"fig4b_comm_volume[{name}]", 1e6 * wall,
             f"cross_msgs={pipe.metrics.cross_part_msgs};"
             f"mb={vol_mb:.2f};reduction_x={base / max(vol_mb, 1e-9):.2f}"))
+
+    # measured wire bytes, dense vs capped, D=4 hub-heavy (subprocess:
+    # the host-platform device count is fixed at backend init)
+    wire = _wire_rows({"small": 1200, "full": 8000}[scale])
+    d_by, d_rows, _, _, d_evs = wire["dense"]
+    c_by, c_rows, c_def, c_drop, c_evs = wire["capped"]
+    rows.append(fmt_row(
+        "fig4b_comm_volume[wire,dense]", 1e6 / max(d_evs, 1e-9),
+        f"wire_mb={d_by / 2**20:.2f};wire_rows={d_rows};"
+        f"events_per_s={d_evs:.0f}"))
+    rows.append(fmt_row(
+        "fig4b_comm_volume[wire,capped]", 1e6 / max(c_evs, 1e-9),
+        f"wire_mb={c_by / 2**20:.2f};wire_rows={c_rows};"
+        f"events_per_s={c_evs:.0f};deferred={c_def};dropped={c_drop};"
+        f"reduction_x={d_by / max(c_by, 1):.2f}"))
     return rows
 
 

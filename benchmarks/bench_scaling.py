@@ -40,21 +40,21 @@ n_nodes = 200
 edges = powerlaw_edges(rng, n_nodes, N_EDGES, 1.3)
 feats = {{v: rng.normal(size=16).astype(np.float32) for v in range(n_nodes)}}
 
-def build(mesh=None):
+def build(mesh=None, route_cap=None):
     model = GraphSAGE((16, 32, 32))
     params = model.init(jax.random.key(0))
     cfg = PipelineConfig(n_parts=8, node_cap=256, edge_cap=2048,
                          repl_cap=512, feat_cap=512, edge_tick_cap=64,
-                         max_nodes=n_nodes,
+                         max_nodes=n_nodes, route_cap=route_cap,
                          window=win.WindowConfig(kind=win.STREAMING))
     return D3Pipeline(model, params, cfg, mesh=mesh)
 
-def timed(mesh=None):
-    pipe = build(mesh)                       # warm-up: compile the scan
+def timed(mesh=None, route_cap=None):
+    pipe = build(mesh, route_cap)            # warm-up: compile the scan
     pipe.run_stream_super(edges[:512], feats, tick_edges=TICK_EDGES,
                           super_ticks=SUPER_T)
     pipe.flush_super(max_ticks=64, T=SUPER_T)
-    pipe = build(mesh)
+    pipe = build(mesh, route_cap)
     t0 = time.perf_counter()
     pipe.run_stream_super(edges, feats, tick_edges=TICK_EDGES,
                           super_ticks=SUPER_T)
@@ -64,6 +64,11 @@ def timed(mesh=None):
 if D == 1:
     print(f"RESULT,local,{{timed(None):.1f}}")
 print(f"RESULT,mesh,{{timed(make_stream_mesh(D)):.1f}}")
+if D == 4:
+    # traffic-adaptive exchange: route_cap = C_rmi // D (ISSUE 5) — the
+    # dense row above is the baseline it must not regress against
+    c_rmi = 64 + (8 // D) * 2048
+    print(f"RESULT,capped,{{timed(make_stream_mesh(D), c_rmi // D):.1f}}")
 """
 
 
@@ -100,6 +105,11 @@ def run(scale: str = "small"):
         rows.append(fmt_row(f"scaling[mesh,D={d}]", 1e6 / res["mesh"],
                             f"events_per_s={res['mesh']:.0f};"
                             f"vs_local={rel:.2f}x"))
+        if "capped" in res:
+            rows.append(fmt_row(
+                f"scaling[mesh,D={d},capped]", 1e6 / res["capped"],
+                f"events_per_s={res['capped']:.0f};"
+                f"vs_dense={res['capped'] / res['mesh']:.2f}x"))
     return rows
 
 

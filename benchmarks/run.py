@@ -44,7 +44,7 @@ ALL = {
 # seeded rng, so CI snapshots are comparable across commits
 PROFILES = {
     "ci": ["driver_comparison", "dist_scaling", "delivery_backend",
-           "serving"],
+           "serving", "fig4b_comm_volume"],
 }
 
 

@@ -66,7 +66,9 @@ def _layer_specs(d):
         agg=sds((P, N, d), f32), agg_cnt=sds((P, N), f32),
         red_pending=sds((P, N), b), red_deadline=sds((P, N), i32),
         fwd_pending=sds((P, N), b), fwd_deadline=sds((P, N), i32),
-        cms=sds((4, 2048), f32), last_touch=sds((P, N), i32))
+        cms=sds((4, 2048), f32), last_touch=sds((P, N), i32),
+        bc_defer=sds((0, d + 5), f32), bc_defer_ok=sds((0,), b),
+        rmi_defer=sds((0, d + 5), f32), rmi_defer_ok=sds((0,), b))
 
 
 def input_specs(model, shape_name: str) -> dict:
@@ -93,12 +95,12 @@ def step(model, shape_name: str):
     wconf = win.WindowConfig(kind=win.TUMBLING, interval=4)
 
     def stream_step(params, topo, state0, state1, inbox, eb, rb, now):
-        s0, out0, st0 = layer_tick(model.layers[0], params["l0"], topo,
-                                   state0, inbox, eb, rb, now, wconf,
-                                   FEAT_CAP)
-        s1, out1, st1 = layer_tick(model.layers[1], params["l1"], topo,
-                                   state1, out0, eb, rb, now, wconf,
-                                   FEAT_CAP)
+        s0, out0, st0, _ = layer_tick(model.layers[0], params["l0"], topo,
+                                      state0, inbox, eb, rb, now, wconf,
+                                      FEAT_CAP)
+        s1, out1, st1, _ = layer_tick(model.layers[1], params["l1"], topo,
+                                      state1, out0, eb, rb, now, wconf,
+                                      FEAT_CAP)
         return s0, s1, out1
 
     return stream_step

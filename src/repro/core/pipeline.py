@@ -64,7 +64,7 @@ Staging model / constraints:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Optional
 
@@ -81,14 +81,14 @@ from repro.core.delivery import BACKENDS as DELIVERY_BACKENDS
 from repro.core.delivery import make_delivery
 from repro.core.explosion import layer_parallelisms, physical_busy
 from repro.core.partitioner import StreamingPartitioner
-from repro.core.tick import (add_stats, has_work, layer_tick_body,
-                             zero_stats)
+from repro.core.tick import add_stats, layer_tick_body, zero_stats
 from repro.core.termination import TerminationCoordinator, quiet_update
 from repro.dist.router import LocalRouter, MeshRouter
 from repro.dist.sharding import carry_pspecs, carry_shardings, stats_pspecs
 from repro.serve.query import (KIND_EMBED, KIND_LINK, add_query_stats,
                                empty_query_batch, init_query_state,
-                               query_batch_from_numpy, query_stage,
+                               query_admit_stage, query_answer_stage,
+                               query_batch_from_numpy, wire_width,
                                zero_query_stats)
 
 
@@ -106,6 +106,18 @@ class PipelineConfig:
                                       # (0 = query plane compiled away)
     query_tick_cap: Optional[int] = None  # query admissions per tick
                                       # (default: query_cap * n_parts)
+    route_cap: Optional[int] = None   # routing plane: per-destination
+                                      # all_to_all bucket rows (None = each
+                                      # lane's full capacity — dense,
+                                      # never-overflow semantics); smaller
+                                      # caps shrink the wire D x C -> D x
+                                      # cap and defer overflow as
+                                      # backpressure (dist/router.py)
+    route_defer_cap: Optional[int] = None  # per-device defer-ring rows per
+                                      # lane (default: the lane's local
+                                      # capacity); only meaningful with
+                                      # route_cap set on a multi-device
+                                      # mesh
     window: win.WindowConfig = field(default_factory=win.WindowConfig)
     delivery_backend: str = "xla"     # how routed records land in state
                                       # ("xla" scatters | "pallas" kernels)
@@ -125,6 +137,20 @@ class PipelineConfig:
             return 0
         return (self.query_cap * self.n_parts if self.query_tick_cap is None
                 else self.query_tick_cap)
+
+    def defer_rows(self, lane_capacity: int, n_devices: int) -> int:
+        """GLOBAL (n_devices * per-device) defer-ring rows for a routed
+        lane of the given per-device emission capacity — 0 whenever the
+        capped exchange cannot overflow (dense default, one device, or
+        route_cap >= the lane capacity), which compiles the backpressure
+        path away."""
+        if n_devices <= 1 or self.route_cap is None:
+            return 0
+        if self.route_cap >= lane_capacity:    # bucket >= lane: no overflow
+            return 0
+        per_dev = (lane_capacity if self.route_defer_cap is None
+                   else self.route_defer_cap)
+        return n_devices * per_dev
 
     def validate(self, n_devices: int = 1) -> None:
         """Fail fast with a clear message instead of a shard_map shape
@@ -147,6 +173,27 @@ class PipelineConfig:
             raise ValueError(
                 f"PipelineConfig.query_tick_cap={self.query_tick_cap} "
                 "must be > 0 when the query plane is enabled")
+        if self.route_cap is not None and self.route_cap <= 0:
+            raise ValueError(
+                f"PipelineConfig.route_cap={self.route_cap} must be > 0 "
+                "(or None for the dense never-overflow exchange)")
+        if self.route_defer_cap is not None and self.route_defer_cap < 0:
+            raise ValueError(
+                f"PipelineConfig.route_defer_cap={self.route_defer_cap} "
+                "must be >= 0 (0 disables deferral: bucket overflow then "
+                "drops, counted in TickStats.route_dropped)")
+        if (self.route_defer_cap == 0 and self.query_cap > 0
+                and self.route_cap is not None and n_devices > 1
+                and self.route_cap < (self.n_parts // n_devices)
+                * self.query_cap):
+            raise ValueError(
+                "route_defer_cap=0 with a capped query wire lane "
+                f"(route_cap={self.route_cap} < per-device wire capacity "
+                f"{(self.n_parts // n_devices) * self.query_cap}): a "
+                "dropped link-tail record would strand its qid with no "
+                "ok=False answer — MsgBatch lanes may drop loudly, the "
+                "wire lane must be able to defer. Leave route_defer_cap "
+                "unset (defaults to the lane capacity) or raise route_cap")
         if self.delivery_backend not in DELIVERY_BACKENDS:
             raise ValueError(
                 f"PipelineConfig.delivery_backend="
@@ -178,6 +225,13 @@ class StreamMetrics:
     queries_answered: int = 0
     queries_dropped: int = 0
     query_hold_ticks: int = 0          # pending-query-ticks (backlog integral)
+    # measured routing-plane wire telemetry (ISSUE 5): summed over every
+    # all_to_all launch of every tick — what bench_comm_volume.py reports
+    wire_rows: int = 0                 # live records shipped on the wire
+    wire_bytes: int = 0                # exchanged send-buffer bytes
+    route_deferred: int = 0            # records carried by backpressure
+    route_dropped: int = 0             # records lost to FULL defer rings
+                                       # (0 in any correctly-sized config)
     wall_seconds: float = 0.0
     busy_logical: Optional[np.ndarray] = None
 
@@ -199,8 +253,10 @@ class D3Pipeline:
         self.mesh = mesh
         n_dev = int(mesh.shape["data"]) if mesh is not None else 1
         cfg.validate(n_devices=n_dev)
-        self.router = (MeshRouter(cfg.n_parts, n_dev) if mesh is not None
-                       else LocalRouter(cfg.n_parts))
+        self.router = (MeshRouter(cfg.n_parts, n_dev,
+                                  route_cap=cfg.route_cap,
+                                  pack_backend=cfg.delivery_backend)
+                       if mesh is not None else LocalRouter(cfg.n_parts))
         self.delivery = make_delivery(cfg.delivery_backend)
         self.layers = list(model.layers)
         self.params = params
@@ -209,14 +265,23 @@ class D3Pipeline:
         self.topo = st.init_topo(cfg.n_parts, cfg.edge_cap, cfg.repl_cap,
                                  cfg.node_cap)
         dims = [l.in_dim for l in self.layers] + [self.layers[-1].out_dim]
+        # routing-plane backpressure rings, sized per lane from the LOCAL
+        # (per-device) emission capacities (0 rows = compiled away)
+        p_loc = cfg.n_parts // n_dev
+        bc_rows = cfg.defer_rows(p_loc * cfg.repl_cap, n_dev)
+        rmi_rows = cfg.defer_rows(cfg.edge_tick_cap + p_loc * cfg.edge_cap,
+                                  n_dev)
         self.states = [st.init_layer(cfg.n_parts, cfg.node_cap, dims[i],
-                                     dims[i])
+                                     dims[i], bc_defer_rows=bc_rows,
+                                     rmi_defer_rows=rmi_rows)
                        for i in range(len(self.layers))]
         self.d_out = dims[-1]
         self.sink = jnp.zeros((cfg.n_parts, cfg.node_cap, self.d_out))
         self.sink_seen = jnp.zeros((cfg.n_parts, cfg.node_cap), bool)
-        self.queries = init_query_state(cfg.n_parts, cfg.query_cap,
-                                        self.d_out)
+        self.queries = init_query_state(
+            cfg.n_parts, cfg.query_cap, self.d_out,
+            wire_defer_rows=cfg.defer_rows(p_loc * cfg.query_cap, n_dev))
+        self._wire_bytes_per_tick = self._static_wire_bytes(dims, n_dev)
         if mesh is not None:
             sh = carry_shardings(mesh, len(self.layers))
             self.topo = jax.device_put(self.topo, sh.topo)
@@ -243,6 +308,30 @@ class D3Pipeline:
                                                    self.d_out, device=False)
         self._answer_log: list = []    # host-side answered-row columns
 
+    def _static_wire_bytes(self, dims, n_dev: int) -> int:
+        """EXACT all_to_all bytes per tick across the whole mesh — a
+        compile-time constant of (config, mesh): every device ships a
+        [D, cap * W] f32 send buffer per lane per route_lanes call, so
+        per-tick bytes = D * sum_lanes D * cap * W * 4. Accounted here in
+        host int arithmetic (StreamMetrics.wire_bytes) instead of on
+        device, where a float counter would round past 2**24 and an
+        int32 one would overflow at production capacities. The lane
+        capacities/widths are the same constants the defer-ring sizing
+        above uses (MsgBatch width d + 5, QueryBatch width d + 10)."""
+        if self.mesh is None or n_dev <= 1:
+            return 0
+        cfg = self.cfg
+        p_loc = cfg.n_parts // n_dev
+        lanes = []
+        for li in range(len(self.layers)):
+            lanes.append((p_loc * cfg.repl_cap, dims[li] + 5))
+            lanes.append((cfg.edge_tick_cap + p_loc * cfg.edge_cap,
+                          dims[li] + 5))
+        if cfg.query_cap > 0:
+            lanes.append((p_loc * cfg.query_cap, wire_width(self.d_out)))
+        return n_dev * sum(n_dev * self.router.lane_cap(c) * w * 4
+                           for c, w in lanes)
+
     # ------------------------------------------------------------ host side
     def _resolve_queries(self, queries, issue_tick: int) -> dict:
         """Resolve host query requests [(qid, kind, vid, [vid2], consistent)]
@@ -262,6 +351,12 @@ class D3Pipeline:
         for q in queries:
             qid, kind, vid = int(q[0]), int(q[1]), int(q[2])
             vid2 = int(q[3]) if kind == KIND_LINK else 0
+            # qids ride the packed f32 wire (dist/wire.py): values at or
+            # beyond 2**24 would round and answer under the WRONG qid —
+            # reject here, where the answer still carries the exact qid
+            if not 0 <= qid < 2 ** 24:
+                rejects.append((qid, kind))
+                continue
             m = locate(vid)
             m2 = locate(vid2) if kind == KIND_LINK else (0, 0)
             if m is None or m2 is None:
@@ -406,11 +501,15 @@ class D3Pipeline:
         m = self.metrics
         m.ticks += ticks
         m.wall_seconds += dt
+        m.wire_bytes += ticks * self._wire_bytes_per_tick
         for s in stats_all:
             m.reduce_msgs += int(s.reduce_msgs)
             m.broadcast_msgs += int(s.broadcast_msgs)
             m.cross_part_msgs += int(s.cross_part_msgs)
             m.dropped += int(s.dropped)
+            m.wire_rows += int(s.wire_rows)
+            m.route_deferred += int(s.route_deferred)
+            m.route_dropped += int(s.route_dropped)
             m.busy_logical += np.asarray(s.busy, np.int64)
         m.emitted_total += int(stats_all[-1].emitted)
         if qstats is not None:
@@ -580,7 +679,7 @@ class D3Pipeline:
         override = win.WindowConfig(kind=win.STREAMING) if drain else None
         for i in range(max_ticks):
             stats = self.tick(window=override)
-            if term.observe(self.states, stats):
+            if term.observe(self.states, stats, queries=self.queries):
                 return i + 1
         raise RuntimeError("pipeline failed to terminate "
                            f"within {max_ticks} flush ticks")
@@ -630,41 +729,51 @@ def _sink_update_body(sink, seen, fb: ev.FeatBatch, part0=0):
     return sink.reshape(P_loc, N, d), seen.reshape(P_loc, N)
 
 
-def _tick_program(layers, params, topo, states, inbox, eb, rb, vb, now,
-                  wconf, outbox_cap, router, delivery):
-    """ONE micro-tick over the local part block: topology application + L
-    staged layer ticks. Runs directly under the LocalRouter and as the
-    shard_map body under the MeshRouter — the two drivers, the two routers
-    and the two delivery backends all share this program."""
+def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
+                  inbox, eb, rb, vb, qb, now, wconf, outbox_cap, router,
+                  delivery):
+    """ONE full micro-tick over the local part block: topology application,
+    the query plane's admit/head-hop stage (start-of-tick), L staged layer
+    ticks — with the query wire lane FUSED into layer 0's round-B exchange
+    (one all_to_all carries both, ISSUE 5) — the sink update, and the
+    query plane's answer stage. Runs directly under the LocalRouter and as
+    the shard_map body under the MeshRouter — the two drivers, the two
+    routers and the two delivery backends all share this program."""
     part0 = router.part0()
     topo = st.apply_vertex_batch(topo, vb, part0)
     topo = st.apply_repl_batch(topo, rb, part0)
     topo = st.apply_edge_batch(topo, eb, part0)
+    # does this tick ingest anything that could move state? (replicated
+    # batches — every device votes identically); consistent link heads
+    # only fire when the whole tick is provably still (serve/query.py)
+    batch_work = (jnp.any(inbox.valid) | jnp.any(eb.valid)
+                  | jnp.any(rb.valid))
+    queries, wire, adm_drop, n_adm = query_admit_stage(
+        queries, qb, states, sink, sink_seen, router, batch_work)
+    wire_d = None
     new_states, stats_all = [], []
     for li, layer in enumerate(layers):
-        # topology reaches every layer; features only layer 0 (Splitter)
-        ls, outbox, stats = layer_tick_body(
+        # topology reaches every layer; features only layer 0 (Splitter);
+        # the query wire rides layer 0's round-B collective
+        extra = ((wire, (queries.wire_defer, queries.wire_defer_ok))
+                 if li == 0 and wire is not None else None)
+        ls, outbox, stats, extra_out = layer_tick_body(
             layer, params[f"l{li}"], topo, states[li], inbox, eb, rb,
-            now, wconf, outbox_cap, router, delivery)
+            now, wconf, outbox_cap, router, delivery, extra_lane=extra)
+        if extra is not None:
+            wire_d, (wdb, wdo) = extra_out
+            queries = replace(queries, wire_defer=wdb, wire_defer_ok=wdo)
         new_states.append(ls)
         stats_all.append(stats)
         inbox = outbox
-    return topo, tuple(new_states), inbox, tuple(stats_all)
-
-
-def _tick_silent(stats_all, layer_states, router):
-    """The query plane's quiescence gate for one tick: True iff no message
-    moved anywhere (the stats scalars are already router-psum'd) AND no
-    window timer is pending anywhere (psum'd has_work vote) — i.e. nothing
-    already ingested can still change any target. Consistent queries only
-    answer at such ticks."""
-    moved = jnp.int32(0)
-    for s in stats_all:
-        moved = moved + s.emitted + s.reduce_msgs + s.broadcast_msgs
-    timers = jnp.int32(0)
-    for ls in layer_states:
-        timers = timers + has_work(ls).astype(jnp.int32)
-    return (moved == 0) & (router.psum(timers) == 0)
+    # sink: final-layer emissions materialize the embedding table
+    sink, sink_seen = _sink_update_body(sink, sink_seen, inbox, part0)
+    # query plane: answer point queries from the fresh sink
+    queries, ans, qstats = query_answer_stage(
+        queries, wire_d, qb, adm_drop, n_adm, tuple(new_states), sink,
+        sink_seen, now, stats_all, router)
+    return (topo, tuple(new_states), sink, sink_seen, queries,
+            tuple(stats_all), ans, qstats)
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
@@ -675,17 +784,9 @@ def _tick_jit(layers, params, topo, states, sink, sink_seen, queries,
     """The per-tick driver's device program (reference path)."""
     def prog(params, topo, states, sink, sink_seen, queries, inbox, eb,
              rb, vb, qb, now):
-        topo, states, out, stats = _tick_program(
-            layers, params, topo, states, inbox, eb, rb, vb, now, wconf,
-            outbox_cap, router, delivery)
-        # sink: final-layer emissions materialize the embedding table
-        sink, sink_seen = _sink_update_body(sink, sink_seen, out,
-                                            router.part0())
-        # query plane: answer point queries from the fresh sink
-        queries, ans, qstats = query_stage(
-            queries, qb, states, sink, sink_seen, now,
-            _tick_silent(stats, states, router), router)
-        return topo, states, sink, sink_seen, queries, stats, ans, qstats
+        return _tick_program(
+            layers, params, topo, states, sink, sink_seen, queries, inbox,
+            eb, rb, vb, qb, now, wconf, outbox_cap, router, delivery)
 
     if mesh is None:
         return prog(params, topo, states, sink, sink_seen, queries, inbox,
@@ -725,15 +826,13 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
         def body(state, batch_t):
             c, ssum, qsum = state
             fb, eb, rb, vb, qb = batch_t
-            topo, new_layers, out, stats_t = _tick_program(
-                layers, params, c.topo, c.layers, fb, eb, rb, vb, c.now,
-                wconf, outbox_cap, router, delivery)
-            sink, sink_seen = _sink_update_body(c.sink, c.sink_seen, out,
-                                                router.part0())
-            queries, ans, qstats_t = query_stage(
-                c.queries, qb, new_layers, sink, sink_seen, c.now,
-                _tick_silent(stats_t, new_layers, router), router)
-            quiet = quiet_update(c.quiet, new_layers, stats_t, router)
+            (topo, new_layers, sink, sink_seen, queries, stats_t, ans,
+             qstats_t) = _tick_program(
+                layers, params, c.topo, c.layers, c.sink, c.sink_seen,
+                c.queries, fb, eb, rb, vb, qb, c.now, wconf, outbox_cap,
+                router, delivery)
+            quiet = quiet_update(c.quiet, new_layers, stats_t, router,
+                                 queries=queries)
             new_c = st.PipelineCarry(
                 topo=topo, layers=new_layers, sink=sink,
                 sink_seen=sink_seen, queries=queries,

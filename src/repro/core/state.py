@@ -82,6 +82,15 @@ class LayerState:
     # adaptive-session state: CountMinSketch of per-vertex update frequency
     cms: jnp.ndarray              # [depth, width] float32
     last_touch: jnp.ndarray       # [P, N] int32
+    # routing-plane backpressure (ISSUE 5): per-lane defer rings of packed
+    # wire rows that overflowed a capped all_to_all bucket and re-enter the
+    # next tick's exchange (dist/wire.py format; [D * K, W] globally,
+    # block-sharded like every part-leading table so each device carries
+    # its own [K, W] ring; K = 0 under the dense default / LocalRouter)
+    bc_defer: jnp.ndarray         # [DK_b, W_b] f32  round-A broadcast lane
+    bc_defer_ok: jnp.ndarray      # [DK_b] bool      occupied ring slots
+    rmi_defer: jnp.ndarray        # [DK_r, W_r] f32  round-B RMI lane
+    rmi_defer_ok: jnp.ndarray     # [DK_r] bool
 
     @property
     def node_cap(self):
@@ -115,7 +124,8 @@ for _cls, _df in (
                  "r_valid", "v_exists", "is_master"]),
     (LayerState, ["feat", "has_feat", "x_sent", "has_sent", "agg", "agg_cnt",
                   "red_pending", "red_deadline", "fwd_pending", "fwd_deadline",
-                  "cms", "last_touch"]),
+                  "cms", "last_touch", "bc_defer", "bc_defer_ok",
+                  "rmi_defer", "rmi_defer_ok"]),
     (PipelineCarry, ["topo", "layers", "sink", "sink_seen", "queries",
                      "now", "quiet"]),
 ):
@@ -136,17 +146,26 @@ def init_topo(n_parts: int, edge_cap: int, repl_cap: int,
 
 
 def init_layer(n_parts: int, node_cap: int, d_in: int, d_agg: int,
-               cms_depth: int = 4, cms_width: int = 2048) -> LayerState:
+               cms_depth: int = 4, cms_width: int = 2048,
+               bc_defer_rows: int = 0, rmi_defer_rows: int = 0) -> LayerState:
+    """bc/rmi_defer_rows are the GLOBAL (n_devices * per-device) defer-ring
+    row counts for the routing plane's backpressure path — 0 (the dense
+    default and the only valid value off-mesh) compiles it away. The wire
+    row width is the lane's MsgBatch packed width: d + 5 scalar columns
+    (part, slot, cnt, src_part, valid), see dist/wire.py."""
     zf = lambda *s: jnp.zeros(s, jnp.float32)
     zi = lambda *s: jnp.zeros(s, jnp.int32)
     zb = lambda *s: jnp.zeros(s, bool)
+    w_b, w_r = d_in + 5, d_agg + 5
     return LayerState(
         feat=zf(n_parts, node_cap, d_in), has_feat=zb(n_parts, node_cap),
         x_sent=zf(n_parts, node_cap, d_in), has_sent=zb(n_parts, node_cap),
         agg=zf(n_parts, node_cap, d_agg), agg_cnt=zf(n_parts, node_cap),
         red_pending=zb(n_parts, node_cap), red_deadline=zi(n_parts, node_cap),
         fwd_pending=zb(n_parts, node_cap), fwd_deadline=zi(n_parts, node_cap),
-        cms=zf(cms_depth, cms_width), last_touch=zi(n_parts, node_cap))
+        cms=zf(cms_depth, cms_width), last_touch=zi(n_parts, node_cap),
+        bc_defer=zf(bc_defer_rows, w_b), bc_defer_ok=zb(bc_defer_rows),
+        rmi_defer=zf(rmi_defer_rows, w_r), rmi_defer_ok=zb(rmi_defer_rows))
 
 
 def apply_edge_batch(topo: TopoState, eb, part0=0) -> TopoState:

@@ -20,22 +20,41 @@ import jax.numpy as jnp
 from repro.core.tick import has_work
 
 
+def pending_work(layer_states, queries=None) -> jnp.ndarray:
+    """LOCAL in-flight-work count (int32): window timers + the routing
+    plane's per-lane defer rings (both via `has_work`) + the query
+    plane's wire-lane backlog when a QueryState is given.
+
+    This is THE single aggregation every quiescence / silence gate uses —
+    `quiet_update` (super-tick scan), `TerminationCoordinator.observe`
+    (per-tick flush) and the query plane's silence gates
+    (serve/query.py:_plane_work). A new carried-work source added here
+    reaches all of them at once; added anywhere else it silently weakens
+    some gate."""
+    timers = jnp.zeros((), jnp.int32)
+    for ls in layer_states:
+        timers = timers + has_work(ls).astype(jnp.int32)
+    if queries is not None:
+        timers = timers + jnp.sum(queries.wire_defer_ok.astype(jnp.int32))
+    return timers
+
+
 def quiet_update(quiet: jnp.ndarray, layer_states, tick_stats,
-                 router=None) -> jnp.ndarray:
+                 router=None, queries=None) -> jnp.ndarray:
     """One in-graph step of quiescence tracking.
 
-    quiet: int32 scalar — consecutive ticks with no movement and no timers.
-    Resets to 0 on any emission/reduce/broadcast or pending window state.
-    Under a sharded tick (`router=MeshRouter`) the pending-timer vote is
+    quiet: int32 scalar — consecutive ticks with no movement and no
+    in-flight work (`pending_work`: window timers, routing-plane defer
+    rings, the query plane's wire backlog when `queries` is given).
+    Resets to 0 on any emission/reduce/broadcast or pending work.
+    Under a sharded tick (`router=MeshRouter`) the pending-work vote is
     psum'd so every device agrees on the same counter (the stats scalars
     are already globally reduced by the tick body).
     """
     moved = jnp.zeros((), bool)
     for s in tick_stats:
         moved = moved | ((s.emitted + s.reduce_msgs + s.broadcast_msgs) > 0)
-    timers = jnp.zeros((), jnp.int32)
-    for ls in layer_states:
-        timers = timers + has_work(ls).astype(jnp.int32)
+    timers = pending_work(layer_states, queries)
     if router is not None:
         timers = router.psum(timers)
     return jnp.where(moved | (timers > 0), jnp.int32(0),
@@ -58,12 +77,14 @@ class TerminationCoordinator:
         streaks must survive the host round-trip between launches."""
         return self._quiet
 
-    def observe(self, layer_states, tick_stats) -> bool:
-        """Feed one tick's observations; True once terminated."""
+    def observe(self, layer_states, tick_stats, queries=None) -> bool:
+        """Feed one tick's observations; True once terminated.
+        queries: optional QueryState — votes the wire-lane backlog as
+        pending work (same `pending_work` aggregation as the device
+        paths)."""
         moved = any(int(s.emitted) + int(s.reduce_msgs) + int(s.broadcast_msgs)
                     for s in tick_stats)
-        timers = any(bool(has_work(ls)) for ls in layer_states)
-        if moved or timers:
+        if moved or bool(pending_work(layer_states, queries)):
             self._quiet = 0
         else:
             self._quiet += 1

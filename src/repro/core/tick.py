@@ -15,14 +15,18 @@ Router delivery between them:
                   (delivery.deliver_set); selectiveBroadcast records for
                   changed masters are EMITTED as a part-addressed
                   `MsgBatch` (not scattered into other parts' rows).
-       -- router.route(bcast) --
+       -- router.route_lanes((bcast,), ...) --
   round_b_emit  : delivered broadcasts apply at local replicas
                   (delivery.deliver_set); per-vertex feature *deltas* and
                   new-edge messages become aggregator RMI records
                   (delta, dcnt) addressed to destination masters.
                   reduce / replace / remove all collapse to additive
                   records (core/aggregators.py).
-       -- router.route(rmis) --
+       -- router.route_lanes((rmis, [query wire]), ...) --
+                  each route_lanes call is ONE packed all_to_all (ISSUE 5)
+                  with per-destination buckets capped by route_cap;
+                  overflow defers into per-lane rings in LayerState
+                  (bc_defer/rmi_defer) and re-enters next tick.
   apply_rmis    : ONE delivery (delivery.deliver_add) applies any RMI mix
                   at the local masters — a flat scatter-add on the "xla"
                   backend, a sorted Pallas segment reduction on "pallas".
@@ -62,7 +66,7 @@ from repro.core.delivery import XlaDelivery
 from repro.core.events import (EdgeBatch, FeatBatch, MsgBatch, ReplBatch,
                                concat_msg_batches)
 from repro.core.state import LayerState, TopoState, local_index
-from repro.dist.router import LocalRouter
+from repro.dist.router import LocalRouter, add_receipts
 
 
 @dataclass(frozen=True)
@@ -72,12 +76,23 @@ class TickStats:
     cross_part_msgs: jnp.ndarray     # messages leaving their part ("network")
     emitted: jnp.ndarray             # forward emissions to the next layer
     dropped: jnp.ndarray             # emissions deferred by outbox capacity
+    # routing-plane wire telemetry (ISSUE 5) — MEASURED exchange counters,
+    # psum'd over the mesh; all zero under LocalRouter / a 1-device mesh.
+    # The emission counters above are counted at EMISSION time, so they
+    # stay exactly equal across route_cap settings — these count the wire.
+    # (Wire BYTES are a compile-time constant per tick and are accounted
+    # host-side in exact ints: StreamMetrics.wire_bytes.)
+    wire_rows: jnp.ndarray           # live records shipped on all_to_all
+    route_deferred: jnp.ndarray      # records pushed to defer rings
+    route_dropped: jnp.ndarray       # records lost to a FULL defer ring
     busy: jnp.ndarray                # [P] per-part processed-event proxy
 
 
 jax.tree_util.register_dataclass(
     TickStats, data_fields=["broadcast_msgs", "reduce_msgs",
-                            "cross_part_msgs", "emitted", "dropped", "busy"],
+                            "cross_part_msgs", "emitted", "dropped",
+                            "wire_rows", "route_deferred",
+                            "route_dropped", "busy"],
     meta_fields=[])
 
 
@@ -88,7 +103,8 @@ def zero_stats(n_parts: int) -> TickStats:
     mesh `n_parts` is the LOCAL part count (busy stays shard-local)."""
     z = jnp.zeros((), jnp.int32)
     return TickStats(broadcast_msgs=z, reduce_msgs=z, cross_part_msgs=z,
-                     emitted=z, dropped=z,
+                     emitted=z, dropped=z, wire_rows=z,
+                     route_deferred=z, route_dropped=z,
                      busy=jnp.zeros((n_parts,), jnp.int32))
 
 
@@ -304,7 +320,7 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
                     inbox: FeatBatch, new_edges: EdgeBatch,
                     new_repl: ReplBatch, now: jnp.ndarray,
                     wconf: win.WindowConfig, outbox_cap: int, router=None,
-                    delivery=None):
+                    delivery=None, extra_lane=None):
     """Advance one GNN layer by one tick (pure, trace-friendly).
 
     `layer` supplies message/update (phi/psi): layer.message(params, x) and
@@ -314,8 +330,15 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
     the XLA scatter reference, see core/delivery.py). `outbox_cap` is the
     GLOBAL per-tick emission budget; each part gets outbox_cap //
     router.n_parts slots.
-    Returns (new LayerState, outbox FeatBatch, TickStats) — stats scalars
-    are router.psum'd (global), `busy` stays local [P_loc].
+
+    extra_lane: optional (batch, (defer_rows, defer_ok)) — one extra
+    part-addressed lane FUSED into this layer's round-B exchange (same
+    all_to_all launch; ISSUE 5 lane fusion). The pipeline rides the query
+    plane's link-score wire on layer 0 this way.
+
+    Returns (new LayerState, outbox FeatBatch, TickStats, extra_out) —
+    stats scalars are router.psum'd (global), `busy` stays local [P_loc];
+    extra_out is None, or (delivered extra lane, its new defer ring).
 
     This is the un-jitted body so the super-tick driver can inline all L
     layers inside one `lax.scan` step (and the mesh path can wrap the whole
@@ -338,14 +361,26 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
     (feat_flat, changed, has_feat, bcast, busy,
      n_bcast, bcast_cross) = round_a_apply(topo, ls, inbox, new_repl, part0,
                                            delivery)
-    bcast_d = router.route(bcast)
+    (bcast_d,), (bc_defer,), rcpt = router.route_lanes(
+        (bcast,), ((ls.bc_defer, ls.bc_defer_ok),))
 
     # ---- Round B: apply broadcast at replicas, emit + route the RMIs
+    # (the optional extra lane shares this exchange's single all_to_all)
     (feat_flat, changed, has_feat, x_sent_flat, has_sent, red_pending,
      red_deadline, rmis, busy, n_reduce, red_cross) = round_b_emit(
         layer, params, topo, ls, feat_flat, changed, has_feat, bcast_d,
         new_edges, now, wconf, part0, busy, freq, delivery)
-    rmis_d = router.route(rmis)
+    rmi_defer_in = (ls.rmi_defer, ls.rmi_defer_ok)
+    if extra_lane is None:
+        (rmis_d,), (rmi_defer,), rcpt_b = router.route_lanes(
+            (rmis,), (rmi_defer_in,))
+        extra_out = None
+    else:
+        xbatch, xdefer = extra_lane
+        (rmis_d, extra_d), (rmi_defer, xdefer_new), rcpt_b = \
+            router.route_lanes((rmis, xbatch), (rmi_defer_in, xdefer))
+        extra_out = (extra_d, xdefer_new)
+    rcpt = add_receipts(rcpt, rcpt_b)
 
     # ---- apply RMIs at local masters
     agg_flat, cnt_flat, agg_dirty, busy = apply_rmis(ls, rmis_d, part0,
@@ -381,13 +416,18 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
         cms=cms,
         last_touch=jnp.where(changed, now,
                              ls.last_touch.reshape(P_loc * N)
-                             ).reshape(P_loc, N))
+                             ).reshape(P_loc, N),
+        bc_defer=bc_defer[0], bc_defer_ok=bc_defer[1],
+        rmi_defer=rmi_defer[0], rmi_defer_ok=rmi_defer[1])
     psum = router.psum
     stats = TickStats(broadcast_msgs=psum(n_bcast),
                       reduce_msgs=psum(n_reduce),
                       cross_part_msgs=psum(bcast_cross + red_cross),
-                      emitted=psum(n_emit), dropped=psum(n_drop), busy=busy)
-    return new_ls, outbox, stats
+                      emitted=psum(n_emit), dropped=psum(n_drop),
+                      wire_rows=psum(rcpt.rows),
+                      route_deferred=psum(rcpt.deferred),
+                      route_dropped=psum(rcpt.dropped), busy=busy)
+    return new_ls, outbox, stats, extra_out
 
 
 layer_tick = partial(jax.jit, static_argnames=("layer", "wconf", "outbox_cap",
@@ -396,5 +436,8 @@ layer_tick = partial(jax.jit, static_argnames=("layer", "wconf", "outbox_cap",
 
 
 def has_work(ls: LayerState) -> jnp.ndarray:
-    """Termination-detection predicate: any pending timer or unsent delta."""
-    return jnp.any(ls.red_pending) | jnp.any(ls.fwd_pending)
+    """Termination-detection predicate: any pending timer, unsent delta, or
+    route-deferred record still waiting in a backpressure ring (carried
+    wire rows are in-flight work — quiescence must not fire over them)."""
+    return (jnp.any(ls.red_pending) | jnp.any(ls.fwd_pending)
+            | jnp.any(ls.bc_defer_ok) | jnp.any(ls.rmi_defer_ok))

@@ -287,7 +287,9 @@ class TrainingCoordinator:
                 red_deadline=st.red_deadline,
                 fwd_pending=jnp.zeros_like(st.fwd_pending),
                 fwd_deadline=st.fwd_deadline, cms=st.cms,
-                last_touch=st.last_touch)
+                last_touch=st.last_touch,
+                bc_defer=st.bc_defer, bc_defer_ok=st.bc_defer_ok,
+                rmi_defer=st.rmi_defer, rmi_defer_ok=st.rmi_defer_ok)
             feat, has = nf, nh
         # masters' final embeddings -> sink
         is_m = pipe.topo.is_master

@@ -85,12 +85,20 @@ def cms_delta(shape, keys: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
 
     Split out from `cms_update` so a sharded tick can keep the sketch
     replicated: each device builds its local delta, psums it, and every
-    device applies the identical add (repro/dist/router.py)."""
+    device applies the identical add (repro/dist/router.py).
+
+    ONE batched scatter-add over all depth rows at once (flattened
+    [depth * width] table, row-offset indices) — this runs every tick
+    inside the super-tick scan under the ADAPTIVE policy, where the old
+    per-depth Python loop of scatters cost `depth` kernel launches.
+    The sums are exact small counts, so the scatter order is irrelevant.
+    """
     depth, width = shape
     idx = cms_hash(keys, depth, width)                       # [depth, n]
-    rows = [jnp.zeros((width,), weights.dtype).at[idx[d]].add(weights)
-            for d in range(depth)]
-    return jnp.stack(rows)
+    flat = idx + width * jnp.arange(depth, dtype=idx.dtype)[:, None]
+    w = jnp.broadcast_to(weights, idx.shape)
+    return jnp.zeros((depth * width,), weights.dtype).at[
+        flat.reshape(-1)].add(w.reshape(-1)).reshape(depth, width)
 
 
 def cms_update(cms: jnp.ndarray, keys: jnp.ndarray, weights: jnp.ndarray,

@@ -1,6 +1,6 @@
-"""The routing plane: transport of part-addressed `MsgBatch` records.
+"""The routing plane: transport of part-addressed record batches.
 
-The streaming tick is split into three planes (ISSUE 2 + ISSUE 3):
+The streaming tick is split into four planes (ISSUE 2-5):
 
   * COMPUTE plane — pure part-local stages in `core/tick.py`
     (`round_a_apply`, `round_b_emit`, `apply_rmis`, `forward_psi`) that
@@ -11,21 +11,46 @@ The streaming tick is split into three planes (ISSUE 2 + ISSUE 3):
 
       LocalRouter : one device owns every part; transport is the identity.
       MeshRouter  : parts are block-sharded over a 1-D ("data",) mesh axis
-                    (`launch/mesh.py`); transport buckets records by
+                    (`launch/mesh.py`); transport compacts records by
                     destination device and exchanges them with ONE
-                    fixed-capacity `lax.all_to_all` per round. Per-bucket
-                    capacity equals the full emission capacity C, so no
-                    record can ever overflow a bucket (worst case: all C
-                    records target one device) — correctness never depends
-                    on traffic shape, at the price of a D x C exchange.
+                    `lax.all_to_all` per `route_lanes` call — ALL fields
+                    of ALL lanes in the call ride a single packed wire
+                    buffer (`dist/wire.py`), so a MsgBatch round costs one
+                    collective launch instead of one per field, and the
+                    round-B RMI lane + the query-plane wire lane share one
+                    launch per tick (ISSUE 5 lane fusion).
   * DELIVERY plane — once routed, a DeliveryBackend (`core/delivery.py`)
     lands the records in the local state blocks: "xla" reference scatters
     or "pallas" sorted segment-reduce kernels, selected by
     `PipelineConfig.delivery_backend` and orthogonal to the Router choice.
   * QUERY plane — `repro/serve/query.py` answers point queries from the
-    state the other three maintain; its link-score forwarding hop rides
-    `route` as one extra fixed-capacity all_to_all lane per tick
-    (`route` is generic over any part-addressed batch pytree).
+    state the other three maintain; its link-score wire hop rides
+    `route_lanes` fused with layer 0's round-B exchange.
+
+Traffic-adaptive capped exchange (ISSUE 5 tentpole): the per-destination
+send bucket holds `route_cap` rows (default None = the lane's full
+emission capacity C — the pre-ISSUE-5 worst-case sizing, under which no
+record can ever overflow and the exchange is bit-for-bit the dense one).
+With `route_cap < C` the wire shrinks from D x C to D x cap rows per
+lane; live records that overflow their bucket are NOT dropped — they are
+deferred into a per-lane carry ring (packed rows riding the
+`PipelineCarry`, see `dist/wire.py:init_defer`) and re-enter the next
+tick's exchange AHEAD of fresh emissions (FIFO per destination, which
+keeps feature-broadcast ordering intact). Quiescence voting counts defer
+occupancy as pending work (`core/tick.py:has_work`), so a flush never
+terminates with records still in flight. Only a defer ring that is
+ITSELF full drops rows, and loudly: the per-tick `RouteReceipt.dropped`
+count surfaces in TickStats/StreamMetrics — size `route_defer_cap`
+accordingly (default: one full emission capacity per lane).
+
+Compaction uses `kernels/route_pack`: one stable sort by destination +
+rank-from-run-start (replacing the O(C * D) one-hot membership cumsum),
+with the placement scatter runnable as a Pallas one-hot-MXU pass
+(`pack_backend="pallas"`, reusing the segment_reduce machinery) or a
+plain XLA scatter (`"xla"`). Invalid destination parts are MASKED OUT of
+the exchange (pre-ISSUE-5 the `jnp.clip(part // Pl, 0, D-1)` silently
+misrouted them to the last device, where they burned bucket capacity
+before being dropped at delivery).
 
 Routers are small frozen dataclasses so they can ride jit boundaries as
 static arguments. `MeshRouter` methods are only valid INSIDE a
@@ -37,10 +62,50 @@ CountMinSketch update (identity on one device).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.dist.wire import field_col, pack_lane, unpack_lane
+from repro.kernels.route_pack.ops import route_pack, route_plan
+
+
+@dataclass(frozen=True)
+class RouteReceipt:
+    """Measured wire telemetry of one route_lanes call (int32 scalars,
+    local to the calling device — the tick body psums them into
+    TickStats so StreamMetrics reports EXACT exchanged rows).
+
+      rows     : live records actually shipped on the wire this call;
+      deferred : live records pushed into the defer rings (backpressure);
+      dropped  : live records lost to a FULL defer ring (loud — see
+                 module docstring; 0 in any correctly-sized config).
+
+    Wire BYTES are deliberately absent: the send-buffer size of a
+    route_lanes call is a compile-time constant of (lanes, caps), so the
+    pipeline accounts bytes host-side in exact int arithmetic
+    (`D3Pipeline._static_wire_bytes`) instead of rounding them through a
+    device float or overflowing an int32.
+    """
+    rows: jnp.ndarray
+    deferred: jnp.ndarray
+    dropped: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    RouteReceipt, data_fields=["rows", "deferred", "dropped"],
+    meta_fields=[])
+
+
+def zero_receipt() -> RouteReceipt:
+    z = jnp.zeros((), jnp.int32)
+    return RouteReceipt(rows=z, deferred=z, dropped=z)
+
+
+def add_receipts(a: RouteReceipt, b: RouteReceipt) -> RouteReceipt:
+    return jax.tree.map(jnp.add, a, b)
 
 
 @dataclass(frozen=True)
@@ -63,21 +128,35 @@ class LocalRouter:
     def route(self, msg):
         return msg
 
+    def route_lanes(self, lanes, defers):
+        """No wire: lanes deliver as-is, defer rings stay empty (they are
+        zero-capacity under this router — see core/pipeline.py)."""
+        return tuple(lanes), tuple(defers), zero_receipt()
+
     def psum(self, x):
         return x
 
 
 @dataclass(frozen=True)
 class MeshRouter:
-    """Sharded router: parts block-sharded over `axis`, all_to_all delivery.
+    """Sharded router: parts block-sharded over `axis`, packed capped
+    all_to_all delivery.
 
     Device d owns parts [d * Pl, (d + 1) * Pl) with Pl = n_parts
     // n_devices (validated by PipelineConfig.validate). Must run inside a
     shard_map over `axis` whose size is exactly `n_devices`.
+
+    route_cap   : per-destination send-bucket rows (None = each lane's
+                  full capacity — never-overflow dense semantics).
+    pack_backend: how route_pack places rows into the send buffer
+                  ("xla" scatter | "pallas" one-hot MXU pass); follows
+                  PipelineConfig.delivery_backend.
     """
     n_parts: int
     n_devices: int
     axis: str = "data"
+    route_cap: Optional[int] = None
+    pack_backend: str = "xla"
 
     @property
     def n_local_parts(self) -> int:
@@ -90,36 +169,89 @@ class MeshRouter:
     def psum(self, x):
         return lax.psum(x, self.axis)
 
-    def route(self, msg):
-        """Deliver records to the devices owning their destination parts.
+    def lane_cap(self, capacity: int) -> int:
+        """Resolved per-destination bucket rows for a lane of the given
+        local emission capacity."""
+        if self.route_cap is None:
+            return capacity
+        return max(1, min(self.route_cap, capacity))
 
-        Generic over any part-addressed batch pytree with `part`/`valid`
-        fields (`MsgBatch` for the compute plane's two rounds, the query
-        plane's `QueryBatch` wire lane): compaction ranks each valid
-        record among records bound for the same destination device
-        (cumsum over a one-hot [C, D] membership), scatters into a
-        [D, C] send buffer per field, one all_to_all, and returns the
-        [D * C] received rows (block j = what device j sent here) —
-        preserving global (source part, slot) record order, so delivery
-        is order-identical to the LocalRouter's. Invalid rows and empty
-        bucket tails stay masked out.
+    def route_lanes(self, lanes, defers):
+        """Deliver several record lanes with ONE all_to_all.
+
+        lanes : tuple of part-addressed batch pytrees with `part`/`valid`
+                fields (MsgBatch, QueryBatch, ...), local capacities C_i.
+        defers: matching tuple of (packed rows [K_i, W_i] f32, occupied
+                [K_i] bool) carry rings; K_i = 0 disables backpressure
+                for that lane (then bucket overflow — impossible at the
+                dense default — would drop, counted).
+
+        Per lane: carried rows re-enter FIRST, fresh emissions after
+        (stable destination sort keeps FIFO per destination, so a
+        replica's feature broadcasts always apply in emission order);
+        the first `lane_cap(C_i)` records per destination ship, the rest
+        defer. Send buffers are concatenated along the row axis so the
+        whole call is a single [D, sum_i cap_i * W_i] tiled all_to_all.
+
+        Returns (delivered lanes tuple — capacity D * cap_i each, block
+        j = what device j sent here, rank order within a block = source
+        emission order; new defers tuple; RouteReceipt).
         """
         D = self.n_devices
         if D == 1:
-            return msg
+            return tuple(lanes), tuple(defers), zero_receipt()
         Pl = self.n_local_parts
-        C = msg.valid.shape[0]
-        dst_dev = jnp.clip(msg.part // Pl, 0, D - 1)
-        member = (jnp.where(msg.valid, dst_dev, D)[:, None]
-                  == jnp.arange(D)[None, :])                      # [C, D]
-        pos = jnp.cumsum(member.astype(jnp.int32), axis=0) - 1
-        pos_row = jnp.sum(jnp.where(member, pos, 0), axis=1)      # [C]
-        send_idx = jnp.where(msg.valid, dst_dev * C + pos_row, D * C)
 
-        def bucket(x):
-            buf = jnp.zeros((D * C,) + x.shape[1:], x.dtype)
-            return buf.at[send_idx].set(x, mode="drop")
+        sends, metas, new_defers = [], [], []
+        n_ship = jnp.zeros((), jnp.int32)
+        n_defer = jnp.zeros((), jnp.int32)
+        n_drop = jnp.zeros((), jnp.int32)
+        for lane, (dbuf, dok) in zip(lanes, defers):
+            packed = pack_lane(lane)                           # [C, W]
+            C, W = packed.shape
+            K = dbuf.shape[0]
+            cap = self.lane_cap(C)
+            allp = jnp.concatenate([dbuf, packed]) if K else packed
+            parts = allp[:, field_col(lane, "part")].astype(jnp.int32)
+            # mask invalid destinations OUT of the exchange (never clip
+            # onto the last device) — deferred rows only ever hold valid
+            # records, their occupancy flag is the live mask
+            fresh_ok = (lane.valid & (lane.part >= 0)
+                        & (lane.part < self.n_parts))
+            ok = jnp.concatenate([dok, fresh_ok]) if K else fresh_ok
+            dst = jnp.where(ok, parts // Pl, D)
 
-        ex = lambda x: lax.all_to_all(x, self.axis, split_axis=0,
-                                      concat_axis=0, tiled=True)
-        return jax.tree.map(lambda x: ex(bucket(x)), msg)
+            order, ship_s, slot_s, left_s = route_plan(dst, ok, D, cap)
+            rows_s = allp[order]
+            send = route_pack(rows_s, slot_s, D * cap,
+                              backend=self.pack_backend)       # [D*cap, W]
+            sends.append(send.reshape(D, cap * W))
+            metas.append((lane, cap, W))
+            n_ship = n_ship + jnp.sum(ship_s.astype(jnp.int32))
+
+            if K:
+                lrank = jnp.cumsum(left_s.astype(jnp.int32)) - 1
+                keep = left_s & (lrank < K)
+                didx = jnp.where(keep, lrank, K)
+                nbuf = jnp.zeros_like(dbuf).at[didx].set(rows_s,
+                                                         mode="drop")
+                nok = jnp.zeros((K,), bool).at[didx].set(True, mode="drop")
+                new_defers.append((nbuf, nok))
+                n_defer = n_defer + jnp.sum(keep.astype(jnp.int32))
+                n_drop = n_drop + jnp.sum((left_s & ~keep
+                                           ).astype(jnp.int32))
+            else:
+                new_defers.append((dbuf, dok))
+                n_drop = n_drop + jnp.sum(left_s.astype(jnp.int32))
+
+        buf = jnp.concatenate(sends, axis=1)                   # [D, X]
+        got = lax.all_to_all(buf, self.axis, split_axis=0,
+                             concat_axis=0, tiled=True)        # [D, X]
+        outs, off = [], 0
+        for proto, cap, W in metas:
+            blk = got[:, off:off + cap * W].reshape(D * cap, W)
+            off += cap * W
+            outs.append(unpack_lane(blk, proto))
+        receipt = RouteReceipt(rows=n_ship, deferred=n_defer,
+                               dropped=n_drop)
+        return tuple(outs), tuple(new_defers), receipt

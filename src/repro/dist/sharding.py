@@ -108,13 +108,17 @@ def _carry_tree(n_layers: int, part, rep):
         e_src_slot=part, e_dst_slot=part, e_dst_mpart=part, e_dst_mslot=part,
         e_valid=part, r_master_slot=part, r_rep_part=part, r_rep_slot=part,
         r_valid=part, v_exists=part, is_master=part)
+    # defer rings are [D * K, W] globally — block-sharded on axis 0 like
+    # every part-leading table, so each device carries its own [K, W] ring
     layer = LayerState(
         feat=part, has_feat=part, x_sent=part, has_sent=part, agg=part,
         agg_cnt=part, red_pending=part, red_deadline=part, fwd_pending=part,
-        fwd_deadline=part, cms=rep, last_touch=part)
+        fwd_deadline=part, cms=rep, last_touch=part,
+        bc_defer=part, bc_defer_ok=part, rmi_defer=part, rmi_defer_ok=part)
     queries = QueryState(
         qid=part, kind=part, slot=part, part2=part, slot2=part,
-        consistent=part, ok=part, issue=part, vec=part, pending=part)
+        consistent=part, ok=part, issue=part, vec=part, pending=part,
+        wire_defer=part, wire_defer_ok=part)
     return PipelineCarry(topo=topo, layers=(layer,) * n_layers, sink=part,
                          sink_seen=part, queries=queries, now=rep, quiet=rep)
 
@@ -135,5 +139,6 @@ def stats_pspecs(n_layers: int, axis: str = "data"):
     body (replicated), the per-part busy vector concatenates over parts."""
     from repro.core.tick import TickStats
     one = TickStats(broadcast_msgs=P(), reduce_msgs=P(), cross_part_msgs=P(),
-                    emitted=P(), dropped=P(), busy=P(axis))
+                    emitted=P(), dropped=P(), wire_rows=P(),
+                    route_deferred=P(), route_dropped=P(), busy=P(axis))
     return tuple(one for _ in range(n_layers))

@@ -1,0 +1,96 @@
+"""Wire format of the routing plane: one packed f32 buffer per lane.
+
+The pre-ISSUE-5 `MeshRouter.route` exchanged every field of a routed
+batch as its OWN `lax.all_to_all` (a MsgBatch is 6 leaves -> 6 collective
+launches per round, a QueryBatch 11). The packed wire format fuses a
+lane's fields into ONE [C, W] float32 buffer — integer fields are
+value-cast (exact for |v| < 2**24, see below), bools become 0/1 — so a
+whole lane (and, via `MeshRouter.route_lanes`, SEVERAL lanes) crosses
+the mesh in a single collective. The same packed rows are what the
+per-lane defer ring carries across ticks (`route_cap` backpressure):
+deferred records re-enter the next tick's exchange by simple
+concatenation, no re-materialization of the typed batch.
+
+Layout contract: columns follow the batch dataclass's registered
+data_fields order; a [C] field takes one column, a [C, d] field takes d.
+`field_col` resolves a field name to its column (the router needs the
+`part` column to re-derive destinations for carried rows).
+
+Integer transport is VALUE-cast, not bit-cast, because the Pallas
+`route_pack` placement runs the rows through a one-hot MXU matmul
+(`segment_reduce` machinery) where bit-cast int patterns would be
+NaN/Inf-poisonous. Exactness holds for |v| < 2**24 — parts, slots,
+ticks and kinds by construction; host-assigned qids must respect it
+(documented in serve/query.py).
+"""
+from __future__ import annotations
+
+from dataclasses import fields as dc_fields
+
+import jax
+import jax.numpy as jnp
+
+
+def _leaf_width(leaf) -> int:
+    if leaf.ndim == 1:
+        return 1
+    assert leaf.ndim == 2, f"wire leaves are [C] or [C, d], got {leaf.shape}"
+    return leaf.shape[1]
+
+
+def lane_width(batch) -> int:
+    """Total packed row width W of a part-addressed batch pytree."""
+    return sum(_leaf_width(l) for l in jax.tree.leaves(batch))
+
+
+def field_col(batch, name: str) -> int:
+    """First packed column of scalar field `name` (dataclass field order ==
+    registered data_fields order == tree-leaf order for every batch)."""
+    off = 0
+    leaves = jax.tree.leaves(batch)
+    for f, leaf in zip(dc_fields(batch), leaves):
+        if f.name == name:
+            return off
+        off += _leaf_width(leaf)
+    raise KeyError(f"{type(batch).__name__} has no field {name!r}")
+
+
+def pack_lane(batch) -> jnp.ndarray:
+    """Batch pytree (capacity C) -> packed [C, W] float32 wire rows."""
+    cols = []
+    for leaf in jax.tree.leaves(batch):
+        x = leaf.astype(jnp.float32)
+        cols.append(x[:, None] if x.ndim == 1 else x)
+    return jnp.concatenate(cols, axis=1)
+
+
+def unpack_lane(buf: jnp.ndarray, proto):
+    """Packed [R, W] rows -> a batch like `proto` with capacity R.
+
+    `proto` only contributes structure/dtypes/trailing dims; its capacity
+    is ignored (delivered capacity is the wire's D * cap rows).
+    """
+    leaves, treedef = jax.tree.flatten(proto)
+    out, off = [], 0
+    for l in leaves:
+        w = _leaf_width(l)
+        sl = buf[:, off:off + w]
+        off += w
+        if l.ndim == 1:
+            sl = sl[:, 0]
+        if l.dtype == jnp.bool_:
+            sl = sl > 0.5
+        else:
+            sl = sl.astype(l.dtype)       # exact: ints ride as exact floats
+        out.append(sl)
+    assert off == buf.shape[1], \
+        f"wire width mismatch: proto wants {off}, buffer has {buf.shape[1]}"
+    return jax.tree.unflatten(treedef, out)
+
+
+def init_defer(rows: int, width: int):
+    """An empty defer ring: (packed rows [rows, width] f32, occupied [rows]).
+
+    rows == 0 compiles the backpressure path away (the dense default)."""
+    return (jnp.zeros((rows, width), jnp.float32),
+            jnp.zeros((rows,), bool))

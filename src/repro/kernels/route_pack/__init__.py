@@ -1,0 +1,4 @@
+from repro.kernels.route_pack.ops import route_pack, route_plan
+from repro.kernels.route_pack.ref import route_pack_ref, route_plan_ref
+
+__all__ = ["route_pack", "route_plan", "route_pack_ref", "route_plan_ref"]

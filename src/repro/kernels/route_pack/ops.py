@@ -1,0 +1,90 @@
+"""route_pack: sort-by-destination rank packing for the routing plane.
+
+Replaces the O(C * D) one-hot [C, D] membership cumsum + per-field
+scatter that `MeshRouter.route` used for bucketing (ISSUE 5 tentpole)
+with a plan/place pair:
+
+  route_plan  : ONE stable sort by destination device; per-record rank =
+                position - run start (searchsorted over the sorted keys).
+                Records beyond the per-destination bucket capacity `cap`
+                are flagged as overflow — the router defers them as
+                backpressure instead of shipping air.
+  route_pack  : place the packed wire rows at their [D * cap] send slots.
+                "xla" backend: one scatter of the whole [*, W] row block.
+                "pallas" backend: every send slot receives at most ONE
+                row, so placement IS a sorted segment-sum — reuses the
+                one-hot MXU `segment_sum_kernel` machinery from
+                kernels/segment_reduce (interpret=True off-TPU).
+
+Both backends are bit-identical for finite rows (the one-hot matmul
+multiplies by exact 0/1 and each output slot sums exactly one row).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.ops import segment_sum_sorted
+
+DEFAULT_BLOCK_E = 128
+DEFAULT_BLOCK_V = 128
+
+
+@partial(jax.jit, static_argnames=("n_dev", "cap"))
+def route_plan(dst, ok, n_dev: int, cap: int):
+    """Compaction plan for one lane.
+
+    dst [N] int32 destination device per record (any value — rows with
+    ok=False OR an out-of-range destination are excluded, matching
+    `route_plan_ref`); ok [N] bool live-record mask.
+
+    Returns (order, ship_s, slot_s, left_s):
+      order  [N] : stable sort permutation grouping records by destination
+                   (sentinel-keyed dead rows sink to the tail) — apply it
+                   to the packed rows before placement;
+      ship_s [N] : post-permutation mask of records that fit their bucket;
+      slot_s [N] : post-permutation [D * cap] send slot (dst * cap + rank),
+                   n_dev * cap sentinel for everything not shipped;
+      left_s [N] : post-permutation mask of live records that overflowed
+                   (the router's defer/backpressure set). FIFO per
+                   destination: the stable sort preserves record order
+                   within a destination, so earlier records always ship
+                   (or defer) before later ones.
+    """
+    n = dst.shape[0]
+    key = jnp.where(ok & (dst >= 0) & (dst < n_dev), dst, n_dev)
+    order = jnp.argsort(key, stable=True)
+    key_s = key[order]
+    starts = jnp.searchsorted(key_s, jnp.arange(n_dev + 1)).astype(jnp.int32)
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[jnp.minimum(key_s, n_dev)]
+    live = key_s < n_dev
+    ship_s = live & (rank < cap)
+    slot_s = jnp.where(ship_s, key_s * cap + rank, n_dev * cap)
+    return order, ship_s, slot_s, live & ~ship_s
+
+
+@partial(jax.jit, static_argnames=("n_slots", "backend", "block_e",
+                                   "block_v", "interpret"))
+def route_pack(rows, slots, n_slots: int, backend: str = "xla",
+               block_e: int = DEFAULT_BLOCK_E,
+               block_v: int = DEFAULT_BLOCK_V,
+               interpret: bool | None = None):
+    """Place packed wire rows [N, W] at `slots` [N] of a [n_slots, W] send
+    buffer (slot == n_slots is the drop sentinel; each live slot receives
+    at most one row — guaranteed by route_plan's rank construction).
+    """
+    if backend == "xla":
+        return jnp.zeros((n_slots,) + rows.shape[1:], rows.dtype).at[
+            slots].set(rows, mode="drop")
+    if backend != "pallas":
+        raise ValueError(f"route_pack backend must be 'xla' or 'pallas', "
+                         f"got {backend!r}")
+    # slots from route_plan are ascending over shipped records but the
+    # sentinel rows sit interleaved where buckets overflowed — one more
+    # stable sort restores the sorted-segment contract of the kernel.
+    order = jnp.argsort(slots, stable=True)
+    return segment_sum_sorted(rows[order], slots[order], n_slots,
+                              block_e=block_e, block_v=block_v,
+                              interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the route_pack op."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def route_plan_ref(dst, ok, n_dev: int, cap: int):
+    """O(N * D) reference plan: per-destination membership cumsum ranks
+    (the pre-ISSUE-5 bucketing formulation, kept as the oracle)."""
+    member = (jnp.where(ok, dst, n_dev)[:, None]
+              == jnp.arange(n_dev)[None, :])                    # [N, D]
+    pos = jnp.cumsum(member.astype(jnp.int32), axis=0) - 1
+    rank = jnp.sum(jnp.where(member, pos, 0), axis=1)
+    live = ok & (dst >= 0) & (dst < n_dev)
+    ship = live & (rank < cap)
+    slot = jnp.where(ship, dst * cap + rank, n_dev * cap)
+    return ship, slot, live & ~ship
+
+
+def route_pack_ref(rows, slots, n_slots: int):
+    """Guarded scatter placement (the xla path, spelled out)."""
+    return jnp.zeros((n_slots,) + rows.shape[1:], rows.dtype).at[slots].set(
+        rows, mode="drop")

@@ -14,8 +14,9 @@ master (part, slot) coordinates so the device never hashes a vertex id.
   QueryBatch  : admissions (host-built, replicated-injected like the
                 FeatBatch inbox; each part filters its own rows) AND the
                 wire format of the link-score forwarding hop, which rides
-                the Router as ONE extra fixed-capacity all_to_all lane
-                per tick.
+                the Router FUSED into layer 0's round-B exchange (ISSUE 5
+                lane fusion: one all_to_all launch carries the RMI lane
+                and the query wire).
   QueryState  : the per-part pending-query table inside PipelineCarry —
                 fixed [P, Q] slots, so held `consistent` queries survive
                 super-ticks, donation, sharding and checkpoints.
@@ -53,6 +54,25 @@ Freshness modes (per query, the `consistent` flag):
 Admission overflow (a full pending table) is never silent: the dropped
 records come back as ok=False answer rows in the same tick, so the
 client keeps a retriable qid, and QueryStats counts them.
+
+Tick placement (ISSUE 5): the plane runs as TWO stages. Admissions and
+the link HEAD hop run at the START of the tick (`query_admit_stage`) so
+the wire can share layer 0's round-B all_to_all; the head's h_u read is
+therefore the start-of-tick sink (one tick of bounded staleness on the
+head endpoint for stale_ok links — the tail endpoint and every EMBED
+read stay end-of-tick fresh). `consistent` heads only fire at a
+START-silent tick (no pending window state, no deferred wire rows, an
+empty update batch), at which nothing can move during the tick, so the
+head value equals the end-of-tick value and the two hops of a
+consistent link still answer within ONE tick with a consistent
+snapshot. Answers (`query_answer_stage`) run after the sink update,
+exactly as before. Host qids must stay below 2**24: the packed wire
+value-casts ints to f32 (dist/wire.py).
+
+Under wire-lane backpressure (`route_cap` smaller than the tick's wire
+traffic) tail records can arrive a tick late; a consistent link then
+scores the snapshot of its (quiet) head tick rather than its answer
+tick — after a drain flush the two coincide.
 """
 from __future__ import annotations
 
@@ -61,6 +81,8 @@ from dataclasses import dataclass, replace
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.termination import pending_work
 
 # query kinds (host submits EMBED/LINK; LINK_TAIL is the device-internal
 # second hop of a link-score query, never admitted from host)
@@ -115,6 +137,12 @@ class QueryState:
     issue: jnp.ndarray        # [P, Q] int32
     vec: jnp.ndarray          # [P, Q, d] float (h_u for tail-hop rows)
     pending: jnp.ndarray      # [P, Q] bool
+    # wire-lane backpressure ring (ISSUE 5): packed QueryBatch rows that
+    # overflowed the capped fused exchange, re-entering next tick
+    # (dist/wire.py format; [D * K, W] global, block-sharded; K = 0 under
+    # the dense default / LocalRouter)
+    wire_defer: jnp.ndarray   # [DK, W] f32
+    wire_defer_ok: jnp.ndarray  # [DK] bool
 
     @property
     def query_cap(self):
@@ -147,33 +175,52 @@ class QueryStats:
     answered: jnp.ndarray     # answers emitted this tick
     dropped: jnp.ndarray      # admissions lost to a full pending table
     held_ticks: jnp.ndarray   # pending-query-ticks (backlog integral)
+    wire_backlog: jnp.ndarray  # wire rows still deferred after this tick
+                               # (a gauge: the host flush loop must keep
+                               # ticking while it is non-zero)
 
 
 for _cls, _fields in (
     (QueryBatch, ["qid", "kind", "part", "slot", "part2", "slot2",
                   "consistent", "ok", "issue", "vec", "valid"]),
     (QueryState, ["qid", "kind", "slot", "part2", "slot2", "consistent",
-                  "ok", "issue", "vec", "pending"]),
+                  "ok", "issue", "vec", "pending", "wire_defer",
+                  "wire_defer_ok"]),
     (AnswerBatch, ["qid", "kind", "ok", "tick", "issue", "vec", "score",
                    "valid"]),
-    (QueryStats, ["admitted", "answered", "dropped", "held_ticks"]),
+    (QueryStats, ["admitted", "answered", "dropped", "held_ticks",
+                  "wire_backlog"]),
 ):
     jax.tree_util.register_dataclass(_cls, data_fields=_fields,
                                      meta_fields=[])
 
 
-def init_query_state(n_parts: int, query_cap: int, d: int) -> QueryState:
+def wire_width(d: int) -> int:
+    """Packed row width of the QueryBatch wire lane (dist/wire.py)."""
+    from repro.dist.wire import lane_width
+    return lane_width(empty_query_batch(1, d))
+
+
+def init_query_state(n_parts: int, query_cap: int, d: int,
+                     wire_defer_rows: int = 0) -> QueryState:
+    """wire_defer_rows: GLOBAL (n_devices * per-device) rows of the wire
+    lane's backpressure ring — 0 (dense default / off-mesh) compiles the
+    deferral path away."""
     zi = lambda: jnp.zeros((n_parts, query_cap), jnp.int32)
     zb = lambda: jnp.zeros((n_parts, query_cap), bool)
     return QueryState(qid=zi(), kind=zi(), slot=zi(), part2=zi(),
                       slot2=zi(), consistent=zb(), ok=zb(), issue=zi(),
                       vec=jnp.zeros((n_parts, query_cap, d), jnp.float32),
-                      pending=zb())
+                      pending=zb(),
+                      wire_defer=jnp.zeros((wire_defer_rows, wire_width(d)),
+                                           jnp.float32),
+                      wire_defer_ok=jnp.zeros((wire_defer_rows,), bool))
 
 
 def zero_query_stats() -> QueryStats:
     z = jnp.zeros((), jnp.int32)
-    return QueryStats(admitted=z, answered=z, dropped=z, held_ticks=z)
+    return QueryStats(admitted=z, answered=z, dropped=z, held_ticks=z,
+                      wire_backlog=z)
 
 
 def add_query_stats(a: QueryStats, b: QueryStats) -> QueryStats:
@@ -258,7 +305,8 @@ def admit(qs: QueryState, qb: QueryBatch, part0):
         ok=scat(qs.ok, qb.ok), issue=scat(qs.issue, qb.issue),
         vec=qs.vec.reshape(P_loc * Q, d).at[flat].set(
             qb.vec, mode="drop").reshape(P_loc, Q, d),
-        pending=scat(qs.pending, admitted))
+        pending=scat(qs.pending, admitted),
+        wire_defer=qs.wire_defer, wire_defer_ok=qs.wire_defer_ok)
     return new, jnp.sum(admitted), ok & ~admitted
 
 
@@ -274,66 +322,84 @@ def _drop_answers(qb: QueryBatch, dropped, now, d: int) -> AnswerBatch:
         score=jnp.zeros((C,), jnp.float32), valid=dropped)
 
 
-def query_stage(qs: QueryState, qb: QueryBatch, layer_states, sink,
-                sink_seen, now, silent, router):
-    """One tick of the query plane, run AFTER the sink update so answers
-    read the freshest representations.
-
-    1. admit the host's new queries (replicated batch, local filter);
-    2. link-score head hop: ready KIND_LINK rows gather h_u and emit a
-       KIND_LINK_TAIL wire record to the second endpoint's master part —
-       `router.route` carries it (the extra all_to_all lane), then the
-       delivered records admit into the local tables (same tick);
-    3. answer: ready KIND_EMBED rows gather the sink row, ready
-       KIND_LINK_TAIL rows fire <vec, h_v>; answered slots free. Rows
-       dropped by a full pending table answer ok=False instead of
-       vanishing (see _drop_answers).
-
-    Readiness: stale_ok rows are always ready; `consistent` rows wait for
-    clean target flags (no red/fwd pending at any layer) AND `silent` —
-    the caller's device-global quiescence signal for this tick (no
-    message moved AND no window timers pending anywhere), so nothing
-    already ingested can still change the target. At a silent tick every
-    flag is clear, so a consistent link's head and tail fire together.
-
-    Returns (new QueryState, AnswerBatch [P_loc*Q + C_adm + P_loc*Q],
-    QueryStats). A zero-capacity table (query plane disabled)
-    short-circuits statically: no extra routing lane, no answer buffers,
-    the exact pre-query-plane program.
-    """
+def _target(qs: QueryState, N: int):
     P_loc, Q = qs.qid.shape
-    d = qs.vec.shape[-1]
-    if Q == 0:                        # statically disabled: plane compiles away
-        empty = AnswerBatch(
-            qid=jnp.zeros((0,), jnp.int32), kind=jnp.zeros((0,), jnp.int32),
-            ok=jnp.zeros((0,), bool), tick=jnp.zeros((0,), jnp.int32),
-            issue=jnp.zeros((0,), jnp.int32),
-            vec=jnp.zeros((0, d), jnp.float32),
-            score=jnp.zeros((0,), jnp.float32), valid=jnp.zeros((0,), bool))
-        return qs, empty, zero_query_stats()
+    return (jnp.arange(P_loc)[:, None] * N
+            + jnp.clip(qs.slot, 0, N - 1)).reshape(-1)         # [P*Q]
 
-    part0 = router.part0()
-    N = sink.shape[1]
-    sink_flat = sink.reshape(P_loc * N, d)
-    seen_flat = sink_seen.reshape(P_loc * N)
+
+def _empty_answers(d: int) -> AnswerBatch:
+    return AnswerBatch(
+        qid=jnp.zeros((0,), jnp.int32), kind=jnp.zeros((0,), jnp.int32),
+        ok=jnp.zeros((0,), bool), tick=jnp.zeros((0,), jnp.int32),
+        issue=jnp.zeros((0,), jnp.int32),
+        vec=jnp.zeros((0, d), jnp.float32),
+        score=jnp.zeros((0,), jnp.float32), valid=jnp.zeros((0,), bool))
+
+
+def _plane_work(qs: QueryState, layer_states):
+    """The shared inputs of BOTH silence gates (start and end of tick):
+    per-row clean flags (no red/fwd pending at any layer for that target
+    row) and the local pending-work count — the SAME
+    `termination.pending_work` aggregation the quiescence gates use, so
+    the consistent-snapshot guarantee and flush termination can never
+    disagree about what counts as in-flight."""
+    P_loc, N = layer_states[0].red_pending.shape
     dirty = jnp.zeros((P_loc, N), bool)
     for ls in layer_states:
         dirty = dirty | ls.red_pending | ls.fwd_pending
-    clean_flat = ~dirty.reshape(P_loc * N)
+    return ~dirty.reshape(P_loc * N), pending_work(layer_states, qs)
 
-    qs, n_adm1, drop1 = admit(qs, qb, part0)
 
-    def target(qs):
-        return (jnp.arange(P_loc)[:, None] * N
-                + jnp.clip(qs.slot, 0, N - 1)).reshape(-1)     # [P*Q]
+def query_admit_stage(qs: QueryState, qb: QueryBatch, layer_states, sink,
+                      sink_seen, router, batch_work):
+    """START-of-tick half of the query plane (before the layer ticks).
 
-    def ready(qs, tgt):
-        return qs.pending & (~qs.consistent
-                             | (clean_flat[tgt] & silent).reshape(P_loc, Q))
+    1. admit the host's new queries (replicated batch, local filter);
+    2. link-score head hop: ready KIND_LINK rows gather h_u from the
+       START-of-tick sink and emit a KIND_LINK_TAIL wire record to the
+       second endpoint's master part. The returned wire batch rides
+       layer 0's round-B exchange (ONE fused all_to_all — ISSUE 5), and
+       the delivered records reach `query_answer_stage` the same tick.
 
-    # ---- link head hop: gather h_u, forward to the tail endpoint
-    tgt = target(qs)
-    fire_head = ready(qs, tgt) & (qs.kind == KIND_LINK)
+    Readiness of consistent heads uses START-silence: no pending window
+    state or deferred route/wire rows anywhere (psum'd vote) and an
+    empty update batch (`batch_work`) — under which NOTHING can move
+    during this tick, so the head's h_u equals its end-of-tick value and
+    the link scores a consistent snapshot.
+
+    Returns (new state, wire QueryBatch [P_loc*Q], admission-drop mask,
+    n_admitted). Q == 0 short-circuits statically (no wire lane).
+    """
+    P_loc, Q = qs.qid.shape
+    if Q == 0:
+        return qs, None, None, jnp.zeros((), jnp.int32)
+    part0 = router.part0()
+    d = qs.vec.shape[-1]
+    N = sink.shape[1]
+    sink_flat = sink.reshape(P_loc * N, d)
+    seen_flat = sink_seen.reshape(P_loc * N)
+    clean_flat, work = _plane_work(qs, layer_states)
+    silent_start = (router.psum(work) == 0) & ~batch_work
+
+    qs, n_adm, drop = admit(qs, qb, part0)
+
+    tgt = _target(qs, N)
+    fire_head = (qs.pending & (qs.kind == KIND_LINK)
+                 & (~qs.consistent
+                    | (clean_flat[tgt] & silent_start).reshape(P_loc, Q)))
+    K = qs.wire_defer_ok.shape[0]
+    if K:
+        # wire-ring headroom gate: a head only fires if the backpressure
+        # ring could carry its tail even if NOTHING ships this tick, so
+        # the ring structurally cannot overflow and no link query can
+        # ever be dropped on the wire (a lost tail would strand its qid).
+        # Gated heads stay in the pending table — backpressure propagates
+        # to admissions, which answer ok=False retriably when full.
+        free = jnp.int32(K) - jnp.sum(qs.wire_defer_ok.astype(jnp.int32))
+        fh_flat = fire_head.reshape(-1)
+        head_rank = jnp.cumsum(fh_flat.astype(jnp.int32)) - 1
+        fire_head = (fh_flat & (head_rank < free)).reshape(P_loc, Q)
     fh = fire_head.reshape(-1)
     wire = QueryBatch(
         qid=qs.qid.reshape(-1), kind=jnp.full((P_loc * Q,), KIND_LINK_TAIL,
@@ -346,12 +412,52 @@ def query_stage(qs: QueryState, qb: QueryBatch, layer_states, sink,
         issue=qs.issue.reshape(-1),
         vec=jnp.where(fh[:, None], sink_flat[tgt], 0.0), valid=fh)
     qs = replace(qs, pending=qs.pending & ~fire_head)
-    wire_d = router.route(wire)
+    return qs, wire, drop, n_adm
+
+
+def query_answer_stage(qs: QueryState, wire_d, qb: QueryBatch, drop1,
+                       n_adm, layer_states, sink, sink_seen, now,
+                       stats_all, router):
+    """END-of-tick half: runs AFTER the sink update so answers read the
+    freshest representations.
+
+    1. admit the DELIVERED wire records (link tails — possibly carried
+       over from an earlier tick by wire-lane backpressure);
+    2. answer: ready KIND_EMBED rows gather the sink row, ready
+       KIND_LINK_TAIL rows fire <vec, h_v>; answered slots free. Rows
+       dropped by a full pending table answer ok=False instead of
+       vanishing (see _drop_answers).
+
+    Readiness: stale_ok rows are always ready; `consistent` rows wait
+    for clean target flags AND end-of-tick global silence: no message
+    moved this tick (the psum'd stats) and no pending window state,
+    deferred route rows, or wire backlog anywhere.
+
+    Returns (new QueryState, AnswerBatch [P_loc*Q + C_adm + |wire_d|],
+    QueryStats). Q == 0 short-circuits statically to the exact
+    pre-query-plane program.
+    """
+    P_loc, Q = qs.qid.shape
+    d = qs.vec.shape[-1]
+    if Q == 0:
+        return qs, _empty_answers(d), zero_query_stats()
+
+    part0 = router.part0()
+    N = sink.shape[1]
+    sink_flat = sink.reshape(P_loc * N, d)
+    seen_flat = sink_seen.reshape(P_loc * N)
+    clean_flat, timers = _plane_work(qs, layer_states)
+    moved = jnp.zeros((), jnp.int32)
+    for s in stats_all:
+        moved = moved + s.emitted + s.reduce_msgs + s.broadcast_msgs
+    silent = (moved == 0) & (router.psum(timers) == 0)
+
     qs, n_adm2, drop2 = admit(qs, wire_d, part0)
 
-    # ---- answer: EMBED reads the sink row, LINK_TAIL fires the score
-    tgt = target(qs)
-    fire = ready(qs, tgt) & (qs.kind != KIND_LINK)
+    tgt = _target(qs, N)
+    fire = (qs.pending & (qs.kind != KIND_LINK)
+            & (~qs.consistent
+               | (clean_flat[tgt] & silent).reshape(P_loc, Q)))
     ff = fire.reshape(-1)
     h = sink_flat[tgt]
     is_tail = (qs.kind == KIND_LINK_TAIL).reshape(-1)
@@ -375,8 +481,9 @@ def query_stage(qs: QueryState, qb: QueryBatch, layer_states, sink,
     psum = router.psum
     del n_adm2                        # tail re-admits are not new client queries
     stats = QueryStats(
-        admitted=psum(n_adm1),
+        admitted=psum(n_adm),
         answered=psum(jnp.sum(fire)),
         dropped=psum(jnp.sum(drop1) + jnp.sum(drop2)),
-        held_ticks=psum(jnp.sum(qs.pending)))
+        held_ticks=psum(jnp.sum(qs.pending)),
+        wire_backlog=psum(jnp.sum(qs.wire_defer_ok.astype(jnp.int32))))
     return qs, ans, stats

@@ -230,7 +230,7 @@ def test_last_slot_emission_not_lost_by_topk_padding():
     rb = repl_batch_from_numpy({k: np.zeros(0, np.int64) for k in
                                 ("part", "repl_slot", "master_slot",
                                  "rep_part", "rep_slot")}, 4)
-    new_ls, outbox, stats = layer_tick_body(
+    new_ls, outbox, stats, _ = layer_tick_body(
         layer, params["l0"], topo, ls, fb, eb, rb,
         jnp.int32(0), win.WindowConfig(kind=win.STREAMING), outbox_cap=2)
     assert int(stats.emitted) == 1

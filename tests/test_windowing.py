@@ -106,3 +106,20 @@ def test_cms_decay_shrinks_stale_counts():
     cms = win.cms_update(cms, jnp.asarray([9]), jnp.asarray([0.0]), decay=0.5)
     after = float(win.cms_query(cms, key)[0])
     assert after == pytest.approx(before * 0.5)
+
+
+def test_cms_delta_batched_scatter_matches_per_depth_loop():
+    """Regression for the ISSUE 5 vectorization: cms_delta's single
+    batched scatter over [depth, n] flattened indices must reproduce the
+    old per-depth Python loop of scatters exactly (counts are small exact
+    f32 integers, so order cannot matter)."""
+    rng = np.random.default_rng(0)
+    depth, width, n = 4, 512, 200
+    keys = jnp.asarray(rng.integers(0, 10_000, n))
+    weights = jnp.asarray((rng.random(n) < 0.5).astype(np.float32))
+    got = win.cms_delta((depth, width), keys, weights)
+    idx = win.cms_hash(keys, depth, width)
+    ref = jnp.stack([jnp.zeros((width,), jnp.float32).at[idx[d]].add(weights)
+                     for d in range(depth)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert got.shape == (depth, width)
