@@ -1,0 +1,128 @@
+"""Delta-gated incremental propagation (ISSUE 6 tentpole).
+
+Row family ``delta_gating[eps=<e>]``, one row per gating threshold on the
+SAME hub-heavy power-law stream followed by waves of tiny feature
+updates (log-uniform delta norms in [1e-6, 1e-3] — the sub-threshold
+churn the gate exists for):
+
+  eps=0      — exact mode, the PR 5 baseline (bit-identical program by
+               the test_delta_gating golden matrix);
+  eps=1e-05  — gates only the tiniest churn (sanity midpoint);
+  eps=0.001  — gates most of the update churn (the acceptance point:
+               >= 3x update-phase RMI reduction).
+
+Derived fields per row:
+  msgs        — total reduce_msgs of the whole run (gated <= exact:
+                the CI validator's monotonicity gate);
+  upd_msgs    — reduce_msgs of the update phase only (the gated traffic;
+                reduction_x is computed on this);
+  suppressed  — RMIs the gate withheld (0 at eps=0);
+  events_per_s— end-to-end event throughput (gating must not cost time);
+  err         — worst-vertex L2 distance of the final sink from the
+                static oracle on the final snapshot;
+  bound       — the eps-derived Lipschitz chain bound for the 2-layer
+                SAGE stack: e1 = ||W1_n||2 eps, bound = ||W2_s||2 e1 +
+                ||W2_n||2 (e1 + eps)  (err <= bound is the approximation
+                contract; at eps=0 err is plain f32 noise);
+  reduction_x — upd_msgs(eps=0) / upd_msgs(eps).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core.oracle import build_snapshot, oracle_embeddings
+from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.core import windowing as win
+from repro.graph.graphs import powerlaw_edges
+from repro.graph.sage import GraphSAGE
+
+from benchmarks.common import D_HID, D_IN, fmt_row
+
+EPS_SWEEP = (0.0, 1e-5, 1e-3)
+
+
+def _make_stream(rng, n_nodes, n_edges):
+    edges = powerlaw_edges(rng, n_nodes, n_edges, 1.1)      # hub-heavy
+    feats = {v: rng.normal(size=D_IN).astype(np.float32)
+             for v in range(n_nodes)}
+    return edges, feats
+
+
+def _update_waves(rng, feats, n_waves):
+    """Waves of per-vertex feature nudges with log-uniform L2 norms in
+    [1e-6, 1e-3]: a fixed eps splits the churn into suppressed and
+    emitted fractions. Returns (per-wave event lists, final features)."""
+    cur = {v: np.asarray(f, np.float32).copy() for v, f in feats.items()}
+    waves = []
+    for _ in range(n_waves):
+        events = []
+        for v in sorted(cur):
+            d = rng.normal(size=D_IN).astype(np.float32)
+            norm = 10.0 ** rng.uniform(-6.0, -3.0)
+            d *= norm / max(float(np.linalg.norm(d)), 1e-12)
+            cur[v] = cur[v] + d
+            events.append((v, cur[v].copy()))
+        waves.append(events)
+    return waves, cur
+
+
+def _bound(params, eps: float) -> float:
+    s1n = np.linalg.norm(np.asarray(params["l0"]["neigh"]["w"]), 2)
+    s2s = np.linalg.norm(np.asarray(params["l1"]["self"]["w"]), 2)
+    s2n = np.linalg.norm(np.asarray(params["l1"]["neigh"]["w"]), 2)
+    e1 = s1n * eps
+    return float(s2s * e1 + s2n * (e1 + eps))
+
+
+def run(scale: str = "small"):
+    n_nodes, n_edges, n_waves = {"small": (200, 1000, 6),
+                                 "full": (400, 8000, 12)}[scale]
+    rng = np.random.default_rng(0)
+    edges, feats = _make_stream(rng, n_nodes, n_edges)
+    waves, final_feats = _update_waves(rng, feats, n_waves)
+    n_events = len(edges) + n_waves * n_nodes
+
+    model = GraphSAGE((D_IN, D_HID, D_HID))
+    params = model.init(jax.random.key(0))
+    g, _ = build_snapshot(edges, final_feats, D_IN, n_nodes)
+    oracle = np.asarray(oracle_embeddings(model, params, g))
+
+    rows, upd_base = [], None
+    for eps in EPS_SWEEP:
+        cfg = PipelineConfig(
+            n_parts=8, node_cap=max(128, 4 * n_nodes // 8),
+            edge_cap=max(256, 4 * n_edges // 8), repl_cap=2 * n_nodes,
+            feat_cap=2048, edge_tick_cap=1024, max_nodes=n_nodes,
+            window=win.WindowConfig(kind=win.STREAMING), delta_eps=eps)
+        pipe = D3Pipeline(model, params, cfg)
+        t0 = time.perf_counter()
+        pipe.run_stream(edges, feats, tick_edges=64)
+        pipe.flush(max_ticks=256)
+        build_msgs = pipe.metrics.reduce_msgs
+        for events in waves:
+            pipe.tick(feats=events)
+        pipe.flush(max_ticks=256)
+        wall = time.perf_counter() - t0
+
+        m = pipe.metrics
+        upd_msgs = m.reduce_msgs - build_msgs
+        if upd_base is None:
+            upd_base = upd_msgs                     # the eps=0 baseline
+        emb = pipe.embeddings()
+        err = max(float(np.linalg.norm(emb[v] - oracle[v])) for v in emb)
+        rows.append(fmt_row(
+            f"delta_gating[eps={eps:g}]", 1e6 * wall / n_events,
+            f"msgs={m.reduce_msgs};upd_msgs={upd_msgs};"
+            f"suppressed={m.suppressed};"
+            f"events_per_s={n_events / wall:.0f};"
+            f"err={err:.3e};bound={_bound(params, eps):.3e};"
+            f"reduction_x={upd_base / max(upd_msgs, 1):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -16,7 +16,8 @@ import sys
 import traceback
 from types import SimpleNamespace
 
-from benchmarks import (bench_comm_volume, bench_delivery, bench_explosion,
+from benchmarks import (bench_comm_volume, bench_delivery,
+                        bench_delta_gating, bench_explosion,
                         bench_imbalance, bench_latency, bench_runtime,
                         bench_scaling, bench_serving, bench_throughput,
                         bench_training, bench_vs_batch)
@@ -32,6 +33,7 @@ ALL = {
     "fig7_latency": bench_latency,
     "dist_scaling": bench_scaling,
     "delivery_backend": bench_delivery,
+    "delta_gating": bench_delta_gating,
     "serving": bench_serving,
     # the driver comparison alone (fig4a without the 12-policy sweep) —
     # what the CI perf snapshot tracks
@@ -44,7 +46,7 @@ ALL = {
 # seeded rng, so CI snapshots are comparable across commits
 PROFILES = {
     "ci": ["driver_comparison", "dist_scaling", "delivery_backend",
-           "serving", "fig4b_comm_volume"],
+           "serving", "fig4b_comm_volume", "delta_gating"],
 }
 
 

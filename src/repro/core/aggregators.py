@@ -32,14 +32,20 @@ import jax.numpy as jnp
 def mean_read(agg_sum: jnp.ndarray, agg_cnt: jnp.ndarray) -> jnp.ndarray:
     """Read the MEAN synopsis; empty neighborhoods read as zeros.
 
+    A neighborhood emptied (or driven negative) by remove/replace RMIs can
+    hold a nonzero float residual in sigma while n <= 0 — the clamp-to-1
+    divide alone would read that stale `sigma/1`, so reads where n <= 0
+    are masked to zeros (the empty-neighborhood value the static oracle
+    produces for an isolated vertex).
+
     This is the full-table read used by the "xla" delivery backend (XLA
     fuses the division into the downstream gather); the "pallas" backend
     reads only the forward stage's picked rows through
     `kernels/segment_reduce/ops.mean_rows` — same math, no [P*N, d]
     intermediate (core/delivery.py).
     """
-    cnt = jnp.maximum(agg_cnt, 1.0)[..., None]
-    return agg_sum / cnt
+    cnt = agg_cnt[..., None]
+    return jnp.where(cnt > 0, agg_sum / jnp.maximum(cnt, 1.0), 0.0)
 
 
 def sum_read(agg_sum: jnp.ndarray, agg_cnt: jnp.ndarray) -> jnp.ndarray:
@@ -48,3 +54,39 @@ def sum_read(agg_sum: jnp.ndarray, agg_cnt: jnp.ndarray) -> jnp.ndarray:
 
 
 READERS = {"mean": mean_read, "sum": sum_read}
+
+
+# ------------------------------------------------- delta gates (ISSUE 6)
+# Per-aggregator re-emission gates for delta-gated propagation
+# (core/tick.py:round_b_emit). Each gate answers: given a source vertex
+# that already sent phi(x_sent), is the cumulative un-emitted delta to
+# phi(x) too small to move the destination synopsis by more than eps?
+# True = suppress the re-emission (the residual stays un-sent and is
+# re-gated against the same x_sent on the next touch).
+#
+# MEAN/SUM are additive: the synopsis moves by at most the L2 norm of the
+# delta (mean divides by n >= 1, so the mean moves even less).
+# MAX/MIN are the monotonic short-circuit of the grow-only contract
+# (module docstring): a replacement message that does not EXCEED the
+# previously-sent message (componentwise, beyond eps) cannot raise a MAX
+# synopsis at all, so it is always safe to skip — including deltas whose
+# L2 norm is large but points the non-growing way.
+
+def _l2_gate(msg_new: jnp.ndarray, msg_old: jnp.ndarray,
+             eps: float) -> jnp.ndarray:
+    d2 = jnp.sum(jnp.square(msg_new - msg_old), axis=-1)
+    return d2 <= eps * eps
+
+
+def _max_gate(msg_new: jnp.ndarray, msg_old: jnp.ndarray,
+              eps: float) -> jnp.ndarray:
+    return jnp.all(msg_new <= msg_old + eps, axis=-1)
+
+
+def _min_gate(msg_new: jnp.ndarray, msg_old: jnp.ndarray,
+              eps: float) -> jnp.ndarray:
+    return jnp.all(msg_new >= msg_old - eps, axis=-1)
+
+
+GATES = {"mean": _l2_gate, "sum": _l2_gate,
+         "max": _max_gate, "min": _min_gate}

@@ -203,6 +203,46 @@ def concat_msg_batches(a: MsgBatch, b: MsgBatch) -> MsgBatch:
     return jax.tree.map(lambda x, y: jnp.concatenate([x, y]), a, b)
 
 
+def coalesce_msg_batch(b: MsgBatch, n_slots: int) -> MsgBatch:
+    """Coalesce same-destination records of one MsgBatch (ISSUE 6).
+
+    Aggregator RMIs are additive (core/aggregators.py), so every record
+    addressed to the same (part, slot) within one tick can be pre-summed
+    BEFORE the routing plane: the coalesced batch keeps the capacity (the
+    routing wire is fixed-shape) but carries one live row per distinct
+    destination — fewer live rows through the capped all_to_all buckets
+    and the defer rings. `n_slots` is the per-part slot count (the
+    destination key is part * n_slots + slot).
+
+    Each run's vec/cnt are the sum over the run's records, its src_part
+    the first record's (cross-part stats are counted at emission time,
+    pre-coalesce — see round_b_emit). The summation ORDER of f32 payloads
+    differs from record order, so the delta-gated tick only coalesces in
+    approximate mode (delta_eps > 0), where reordering is within budget.
+    ADD semantics only — never coalesce a set-semantics lane this way.
+    """
+    C = b.part.shape[0]
+    big = jnp.int32(n_slots) * jnp.max(b.part + 1) + jnp.int32(C)
+    key = jnp.where(b.valid, b.part * n_slots + b.slot, big)
+    order = jnp.argsort(key, stable=True)
+    key_s = key[order]
+    valid_s = b.valid[order]
+    head = jnp.concatenate([jnp.ones((1,), bool), key_s[1:] != key_s[:-1]])
+    run = jnp.cumsum(head) - 1                   # run index per sorted row
+    vec = jnp.zeros_like(b.vec).at[run].add(
+        jnp.where(valid_s[:, None], b.vec[order], 0.0))
+    cnt = jnp.zeros_like(b.cnt).at[run].add(
+        jnp.where(valid_s, b.cnt[order], 0.0))
+    # run-head rows carry the destination; non-head rows are dead padding
+    pos = jnp.where(head, run, C - 1)
+    take = jnp.zeros((C,), jnp.int32).at[pos].max(
+        jnp.arange(C, dtype=jnp.int32))          # head's sorted position
+    src = order[take]                            # original row of each head
+    live = jnp.zeros((C,), bool).at[pos].set(head & valid_s, mode="drop")
+    return MsgBatch(part=b.part[src], slot=b.slot[src], vec=vec, cnt=cnt,
+                    src_part=b.src_part[src], valid=live)
+
+
 def stack_batches(batches):
     """Stack same-capacity event batches along a new leading tick axis.
 

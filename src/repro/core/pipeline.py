@@ -119,6 +119,15 @@ class PipelineConfig:
                                       # route_cap set on a multi-device
                                       # mesh
     window: win.WindowConfig = field(default_factory=win.WindowConfig)
+    delta_eps: float = 0.0            # delta-gated propagation (ISSUE 6):
+                                      # a touched vertex only re-emits when
+                                      # ||phi(x) - phi(x_sent)|| > eps
+                                      # (core/tick.py:round_b_emit). 0.0 =
+                                      # exact mode, bit-for-bit the ungated
+                                      # program; > 0 bounds the per-vertex
+                                      # un-sent delta by eps (approximate,
+                                      # error-bounded) and coalesces
+                                      # same-destination RMIs pre-routing
     delivery_backend: str = "xla"     # how routed records land in state
                                       # ("xla" scatters | "pallas" kernels)
     partitioner: str = "hdrf"
@@ -173,6 +182,10 @@ class PipelineConfig:
             raise ValueError(
                 f"PipelineConfig.query_tick_cap={self.query_tick_cap} "
                 "must be > 0 when the query plane is enabled")
+        if not (self.delta_eps >= 0.0):   # rejects negatives AND NaN
+            raise ValueError(
+                f"PipelineConfig.delta_eps={self.delta_eps} must be a "
+                "finite value >= 0 (0 = exact/ungated propagation)")
         if self.route_cap is not None and self.route_cap <= 0:
             raise ValueError(
                 f"PipelineConfig.route_cap={self.route_cap} must be > 0 "
@@ -232,6 +245,11 @@ class StreamMetrics:
     route_deferred: int = 0            # records carried by backpressure
     route_dropped: int = 0             # records lost to FULL defer rings
                                        # (0 in any correctly-sized config)
+    suppressed: int = 0                # delta-gated RMIs NOT emitted
+                                       # (ISSUE 6; 0 at delta_eps=0) —
+                                       # the saved message volume:
+                                       # reduce_msgs + suppressed tracks
+                                       # the ungated reduce_msgs
     wall_seconds: float = 0.0
     busy_logical: Optional[np.ndarray] = None
 
@@ -453,7 +471,8 @@ class D3Pipeline:
          stats_all, answers, qstats) = _tick_jit(
             tuple(self.layers), self.params, self.topo, tuple(self.states),
             self.sink, self.sink_seen, self.queries, fb, eb, rb, vb, qb,
-            now, wconf, cfg.outbox(), self.router, self.delivery, self.mesh)
+            now, wconf, cfg.outbox(), self.router, self.delivery, self.mesh,
+            cfg.delta_eps)
         self.states = list(new_states)
         self.now += 1
         self._harvest_answers(answers)
@@ -510,6 +529,7 @@ class D3Pipeline:
             m.wire_rows += int(s.wire_rows)
             m.route_deferred += int(s.route_deferred)
             m.route_dropped += int(s.route_dropped)
+            m.suppressed += int(s.n_suppressed)
             m.busy_logical += np.asarray(s.busy, np.int64)
         m.emitted_total += int(stats_all[-1].emitted)
         if qstats is not None:
@@ -602,7 +622,7 @@ class D3Pipeline:
         final, stats_sum, qstats_sum, answers = _super_tick_scan(
             tuple(self.layers), self.params, carry, batches,
             window or cfg.window, cfg.outbox(), self.router, self.delivery,
-            self.mesh)
+            self.mesh, cfg.delta_eps)
         self.topo = final.topo
         self.states = list(final.layers)
         self.sink = final.sink
@@ -731,7 +751,7 @@ def _sink_update_body(sink, seen, fb: ev.FeatBatch, part0=0):
 
 def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
                   inbox, eb, rb, vb, qb, now, wconf, outbox_cap, router,
-                  delivery):
+                  delivery, delta_eps=0.0):
     """ONE full micro-tick over the local part block: topology application,
     the query plane's admit/head-hop stage (start-of-tick), L staged layer
     ticks — with the query wire lane FUSED into layer 0's round-B exchange
@@ -759,7 +779,8 @@ def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
                  if li == 0 and wire is not None else None)
         ls, outbox, stats, extra_out = layer_tick_body(
             layer, params[f"l{li}"], topo, states[li], inbox, eb, rb,
-            now, wconf, outbox_cap, router, delivery, extra_lane=extra)
+            now, wconf, outbox_cap, router, delivery, extra_lane=extra,
+            delta_eps=delta_eps)
         if extra is not None:
             wire_d, (wdb, wdo) = extra_out
             queries = replace(queries, wire_defer=wdb, wire_defer_ok=wdo)
@@ -777,16 +798,18 @@ def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
-                                   "router", "delivery", "mesh"))
+                                   "router", "delivery", "mesh",
+                                   "delta_eps"))
 def _tick_jit(layers, params, topo, states, sink, sink_seen, queries,
               inbox, eb, rb, vb, qb, now, wconf, outbox_cap, router,
-              delivery, mesh):
+              delivery, mesh, delta_eps=0.0):
     """The per-tick driver's device program (reference path)."""
     def prog(params, topo, states, sink, sink_seen, queries, inbox, eb,
              rb, vb, qb, now):
         return _tick_program(
             layers, params, topo, states, sink, sink_seen, queries, inbox,
-            eb, rb, vb, qb, now, wconf, outbox_cap, router, delivery)
+            eb, rb, vb, qb, now, wconf, outbox_cap, router, delivery,
+            delta_eps)
 
     if mesh is None:
         return prog(params, topo, states, sink, sink_seen, queries, inbox,
@@ -804,11 +827,12 @@ def _tick_jit(layers, params, topo, states, sink, sink_seen, queries,
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
-                                   "router", "delivery", "mesh"),
+                                   "router", "delivery", "mesh",
+                                   "delta_eps"),
          donate_argnums=(2,))
 def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
                      wconf: win.WindowConfig, outbox_cap: int, router,
-                     delivery=None, mesh=None):
+                     delivery=None, mesh=None, delta_eps=0.0):
     """T micro-ticks x L layers as one `lax.scan` — the super-tick body.
 
     carry (donated): PipelineCarry — topology, per-layer states, sink,
@@ -830,7 +854,7 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
              qstats_t) = _tick_program(
                 layers, params, c.topo, c.layers, c.sink, c.sink_seen,
                 c.queries, fb, eb, rb, vb, qb, c.now, wconf, outbox_cap,
-                router, delivery)
+                router, delivery, delta_eps)
             quiet = quiet_update(c.quiet, new_layers, stats_t, router,
                                  queries=queries)
             new_c = st.PipelineCarry(

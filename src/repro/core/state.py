@@ -70,6 +70,11 @@ class LayerState:
     """Per-GNN-layer feature/aggregator state (one per GraphStorage op)."""
     feat: jnp.ndarray             # [P, N, d_in] layer-input features (replicas too)
     has_feat: jnp.ndarray        # [P, N] bool
+    # x_sent is the value whose phi the downstream aggregators actually
+    # hold. Under delta gating (ISSUE 6, cfg.delta_eps > 0) a suppressed
+    # re-emission leaves x_sent at the last EMITTED value while feat moves
+    # on, so ||phi(feat) - phi(x_sent)|| is the vertex's cumulative un-sent
+    # residual (<= eps whenever red_pending is clear).
     x_sent: jnp.ndarray           # [P, N, d_in] feature value last pushed into aggs
     has_sent: jnp.ndarray         # [P, N] bool
     agg: jnp.ndarray              # [P, N, d_agg] synopsis value (masters only)

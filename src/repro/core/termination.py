@@ -20,6 +20,23 @@ import jax.numpy as jnp
 from repro.core.tick import has_work
 
 
+def moved_msgs(tick_stats):
+    """Total MOVEMENT of one layer's TickStats: emissions + reduces +
+    broadcasts. This is THE movement vote both observation paths share
+    (`quiet_update` on device, `TerminationCoordinator.observe` on host).
+
+    TickStats.n_suppressed is deliberately EXCLUDED: a delta-gated
+    (suppressed-but-pending) vertex counts as QUIET. Suppression clears
+    red_pending without emitting (core/tick.py:round_b_emit), so its
+    residual is not in-flight work — it only re-enters on a future touch.
+    Counting suppressions as movement would let a stream of sub-eps
+    updates hold quiescence off forever and flush() would never
+    terminate.
+    """
+    return tick_stats.emitted + tick_stats.reduce_msgs \
+        + tick_stats.broadcast_msgs
+
+
 def pending_work(layer_states, queries=None) -> jnp.ndarray:
     """LOCAL in-flight-work count (int32): window timers + the routing
     plane's per-lane defer rings (both via `has_work`) + the query
@@ -53,7 +70,7 @@ def quiet_update(quiet: jnp.ndarray, layer_states, tick_stats,
     """
     moved = jnp.zeros((), bool)
     for s in tick_stats:
-        moved = moved | ((s.emitted + s.reduce_msgs + s.broadcast_msgs) > 0)
+        moved = moved | (moved_msgs(s) > 0)
     timers = pending_work(layer_states, queries)
     if router is not None:
         timers = router.psum(timers)
@@ -82,8 +99,7 @@ class TerminationCoordinator:
         queries: optional QueryState — votes the wire-lane backlog as
         pending work (same `pending_work` aggregation as the device
         paths)."""
-        moved = any(int(s.emitted) + int(s.reduce_msgs) + int(s.broadcast_msgs)
-                    for s in tick_stats)
+        moved = any(int(moved_msgs(s)) for s in tick_stats)
         if moved or bool(pending_work(layer_states, queries)):
             self._quiet = 0
         else:

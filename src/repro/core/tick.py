@@ -61,10 +61,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggregators
 from repro.core import windowing as win
 from repro.core.delivery import XlaDelivery
 from repro.core.events import (EdgeBatch, FeatBatch, MsgBatch, ReplBatch,
-                               concat_msg_batches)
+                               coalesce_msg_batch, concat_msg_batches)
 from repro.core.state import LayerState, TopoState, local_index
 from repro.dist.router import LocalRouter, add_receipts
 
@@ -85,6 +86,13 @@ class TickStats:
     wire_rows: jnp.ndarray           # live records shipped on all_to_all
     route_deferred: jnp.ndarray      # records pushed to defer rings
     route_dropped: jnp.ndarray       # records lost to a FULL defer ring
+    # delta gating (ISSUE 6): out-edge RMIs NOT emitted because the
+    # source's cumulative un-sent delta stayed under delta_eps — the
+    # message volume the gate saved this tick. Counted at emission time
+    # like reduce_msgs (reduce_msgs + n_suppressed is invariant across
+    # eps for a fixed send schedule); psum'd over the mesh; always 0 in
+    # exact mode (delta_eps=0 compiles the gate away).
+    n_suppressed: jnp.ndarray
     busy: jnp.ndarray                # [P] per-part processed-event proxy
 
 
@@ -92,7 +100,7 @@ jax.tree_util.register_dataclass(
     TickStats, data_fields=["broadcast_msgs", "reduce_msgs",
                             "cross_part_msgs", "emitted", "dropped",
                             "wire_rows", "route_deferred",
-                            "route_dropped", "busy"],
+                            "route_dropped", "n_suppressed", "busy"],
     meta_fields=[])
 
 
@@ -104,7 +112,7 @@ def zero_stats(n_parts: int) -> TickStats:
     z = jnp.zeros((), jnp.int32)
     return TickStats(broadcast_msgs=z, reduce_msgs=z, cross_part_msgs=z,
                      emitted=z, dropped=z, wire_rows=z,
-                     route_deferred=z, route_dropped=z,
+                     route_deferred=z, route_dropped=z, n_suppressed=z,
                      busy=jnp.zeros((n_parts,), jnp.int32))
 
 
@@ -167,13 +175,26 @@ def round_a_apply(topo: TopoState, ls: LayerState, inbox: FeatBatch,
 
 def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
                  changed, has_feat, bcast_d: MsgBatch, new_edges: EdgeBatch,
-                 now, wconf: win.WindowConfig, part0, busy, freq, delivery):
+                 now, wconf: win.WindowConfig, part0, busy, freq, delivery,
+                 delta_eps: float = 0.0):
     """Round B, emit half: apply DELIVERED broadcasts at local replicas,
     decide which touched vertices send this tick (inter-layer window), and
     emit the tick's aggregator RMI records.
 
+    delta_eps (static, ISSUE 6): delta-gated incremental propagation. A
+    deadline-due vertex that has already sent only re-emits when its
+    CUMULATIVE un-sent delta ||phi(x) - phi(x_sent)|| exceeds eps (per
+    the layer's aggregator gate, core/aggregators.GATES — MAX/MIN use the
+    grow-only monotonic short-circuit instead of the L2 norm). Suppressed
+    vertices clear red_pending (they count as QUIET for termination) but
+    keep their x_sent, so the residual accumulates and re-gates on the
+    next touch: the un-sent delta per vertex is <= eps at every quiescent
+    point, which bounds the synopsis error by eps. First sends and
+    new-edge RMIs are never gated. delta_eps=0.0 (default) compiles the
+    gate away — bit-for-bit the ungated program.
+
     Returns (feat_flat, changed, has_feat, x_sent_flat, has_sent,
-    red_pending, red_deadline, rmis, busy, n_reduce, n_cross).
+    red_pending, red_deadline, rmis, busy, n_reduce, n_cross, n_supp).
     """
     P_loc, N, d_in = ls.feat.shape
 
@@ -208,11 +229,18 @@ def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
     red_deadline = jnp.where(changed, touched_deadline, red_deadline)
     # STREAMING evicts everything pending (incl. deadlines scheduled by a
     # previous windowed policy — the drain path of flush())
-    send = red_pending if wconf.kind == win.STREAMING else \
+    cand = red_pending if wconf.kind == win.STREAMING else \
         red_pending & (red_deadline <= now)
     # sources: delta = phi(x) - phi(x_sent) if has_sent else (phi(x), +1)
     msg_new = layer.message(params, feat_flat)
     msg_old = layer.message(params, x_sent_flat)
+    if delta_eps > 0.0:
+        gate = aggregators.GATES[getattr(layer, "agg_kind", "mean")]
+        suppress = cand & has_sent & gate(msg_new, msg_old, delta_eps)
+        send = cand & ~suppress
+    else:                       # exact mode: the gate is compiled away
+        suppress = None
+        send = cand
     delta_vec = jnp.where(send[:, None],
                           msg_new - jnp.where(has_sent[:, None], msg_old, 0.0),
                           0.0)
@@ -240,12 +268,22 @@ def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
                        & (new_edges.dst_master_part != new_edges.part))
                + jnp.sum(o_live & (topo.e_dst_mpart != part0 + pp)))
 
-    # commit send bookkeeping
+    # commit send bookkeeping; suppressed vertices leave the pending set
+    # WITHOUT advancing x_sent — the residual delta stays accumulated
+    # against the last value actually emitted, so a later touch re-gates
+    # the cumulative delta (and quiescence sees a quiet vertex meanwhile)
     x_sent_flat = jnp.where(send[:, None], feat_flat, x_sent_flat)
     has_sent = has_sent | send
-    red_pending = red_pending & ~send
+    if suppress is None:
+        red_pending = red_pending & ~send
+        n_supp = jnp.zeros((), jnp.int32)
+    else:
+        red_pending = red_pending & ~send & ~suppress
+        # saved message volume = the out-edge RMIs the gate skipped
+        n_supp = jnp.sum(topo.e_valid & suppress[o_sidx])
     return (feat_flat, changed, has_feat, x_sent_flat, has_sent,
-            red_pending, red_deadline, rmis, busy, n_reduce, n_cross)
+            red_pending, red_deadline, rmis, busy, n_reduce, n_cross,
+            n_supp)
 
 
 def apply_rmis(ls: LayerState, rmis_d: MsgBatch, part0, busy, delivery):
@@ -320,7 +358,7 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
                     inbox: FeatBatch, new_edges: EdgeBatch,
                     new_repl: ReplBatch, now: jnp.ndarray,
                     wconf: win.WindowConfig, outbox_cap: int, router=None,
-                    delivery=None, extra_lane=None):
+                    delivery=None, extra_lane=None, delta_eps: float = 0.0):
     """Advance one GNN layer by one tick (pure, trace-friendly).
 
     `layer` supplies message/update (phi/psi): layer.message(params, x) and
@@ -335,6 +373,14 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
     part-addressed lane FUSED into this layer's round-B exchange (same
     all_to_all launch; ISSUE 5 lane fusion). The pipeline rides the query
     plane's link-score wire on layer 0 this way.
+
+    delta_eps (static): delta-gated propagation (ISSUE 6, see
+    round_b_emit). In approximate mode (> 0) the tick additionally
+    COALESCES same-destination RMI records before the routing plane, so
+    a hub master that many gated sources touch in one tick receives one
+    pre-summed record — fewer live rows through the capped all_to_all
+    and the defer rings (coalescing reorders f32 sums, which is why the
+    exact eps=0 program skips it and stays bit-identical to PR 5).
 
     Returns (new LayerState, outbox FeatBatch, TickStats, extra_out) —
     stats scalars are router.psum'd (global), `busy` stays local [P_loc];
@@ -367,9 +413,14 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
     # ---- Round B: apply broadcast at replicas, emit + route the RMIs
     # (the optional extra lane shares this exchange's single all_to_all)
     (feat_flat, changed, has_feat, x_sent_flat, has_sent, red_pending,
-     red_deadline, rmis, busy, n_reduce, red_cross) = round_b_emit(
+     red_deadline, rmis, busy, n_reduce, red_cross, n_supp) = round_b_emit(
         layer, params, topo, ls, feat_flat, changed, has_feat, bcast_d,
-        new_edges, now, wconf, part0, busy, freq, delivery)
+        new_edges, now, wconf, part0, busy, freq, delivery,
+        delta_eps=delta_eps)
+    if delta_eps > 0.0:
+        # approximate mode only: coalesce same-destination additive RMIs
+        # before the outbox/routing plane (stats above counted pre-coalesce)
+        rmis = coalesce_msg_batch(rmis, N)
     rmi_defer_in = (ls.rmi_defer, ls.rmi_defer_ok)
     if extra_lane is None:
         (rmis_d,), (rmi_defer,), rcpt_b = router.route_lanes(
@@ -426,12 +477,14 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
                       emitted=psum(n_emit), dropped=psum(n_drop),
                       wire_rows=psum(rcpt.rows),
                       route_deferred=psum(rcpt.deferred),
-                      route_dropped=psum(rcpt.dropped), busy=busy)
+                      route_dropped=psum(rcpt.dropped),
+                      n_suppressed=psum(n_supp), busy=busy)
     return new_ls, outbox, stats, extra_out
 
 
 layer_tick = partial(jax.jit, static_argnames=("layer", "wconf", "outbox_cap",
-                                               "router", "delivery")
+                                               "router", "delivery",
+                                               "delta_eps")
                      )(layer_tick_body)
 
 

@@ -55,8 +55,13 @@ def next_deadline(cfg: WindowConfig, now, cur_deadline, pending, freq):
         # every touch pushes eviction back
         return jnp.full_like(cur_deadline, now + cfg.interval)
     if cfg.kind == ADAPTIVE:
+        # ceil, not truncate-toward-zero: a hot vertex with alpha/freq in
+        # (0, 1) must round UP to a 1-tick interval by policy, not collapse
+        # to interval 0 before the clip; fractional intervals generally
+        # round to the next whole tick (a deadline is tick-granular)
         interval = jnp.clip(
-            (cfg.adaptive_alpha / jnp.maximum(freq, 1e-3)).astype(jnp.int32),
+            jnp.ceil(cfg.adaptive_alpha
+                     / jnp.maximum(freq, 1e-3)).astype(jnp.int32),
             cfg.adaptive_min, cfg.adaptive_max)
         return (now + interval).astype(cur_deadline.dtype)
     raise ValueError(cfg.kind)

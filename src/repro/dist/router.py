@@ -43,6 +43,15 @@ ITSELF full drops rows, and loudly: the per-tick `RouteReceipt.dropped`
 count surfaces in TickStats/StreamMetrics — size `route_defer_cap`
 accordingly (default: one full emission capacity per lane).
 
+Delta-gated traffic (ISSUE 6): in approximate mode (cfg.delta_eps > 0)
+the compute plane suppresses sub-eps re-emissions AND pre-coalesces
+same-destination RMI records before handing the lane to `route_lanes`
+(`core/events.py:coalesce_msg_batch`), so the capped buckets see one
+live row per distinct destination master instead of one per out-edge.
+TickStats.reduce_msgs/n_suppressed count at EMISSION time (pre-
+coalesce); RouteReceipt.rows counts the wire — their gap is the
+coalescing win, visible in `benchmarks/bench_delta_gating.py`.
+
 Compaction uses `kernels/route_pack`: one stable sort by destination +
 rank-from-run-start (replacing the O(C * D) one-hot membership cumsum),
 with the placement scatter runnable as a Pallas one-hot-MXU pass

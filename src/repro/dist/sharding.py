@@ -140,5 +140,6 @@ def stats_pspecs(n_layers: int, axis: str = "data"):
     from repro.core.tick import TickStats
     one = TickStats(broadcast_msgs=P(), reduce_msgs=P(), cross_part_msgs=P(),
                     emitted=P(), dropped=P(), wire_rows=P(),
-                    route_deferred=P(), route_dropped=P(), busy=P(axis))
+                    route_deferred=P(), route_dropped=P(),
+                    n_suppressed=P(), busy=P(axis))
     return tuple(one for _ in range(n_layers))

@@ -26,6 +26,11 @@ class SAGELayer(Module):
     in_dim: int
     out_dim: int
     act: bool = True
+    # aggregator synopsis kind — selects the delta-gate for incremental
+    # propagation (core/aggregators.GATES; core/tick.py reads it via
+    # getattr(layer, "agg_kind", "mean")). Class attribute, not a
+    # dataclass field: it is a property of the layer TYPE.
+    agg_kind = "mean"
 
     def __post_init__(self):
         object.__setattr__(self, "w_self", Linear(self.in_dim, self.out_dim))
@@ -55,6 +60,7 @@ class GCNLayer(Module):
     in_dim: int
     out_dim: int
     act: bool = True
+    agg_kind = "sum"     # deg-normalized sum synopsis (see SAGELayer note)
 
     def __post_init__(self):
         object.__setattr__(self, "w", Linear(self.in_dim, self.out_dim))

@@ -83,7 +83,12 @@ def segment_sum_kernel(msgs, seg_local, eblk_to_vblk, first_visit,
 
 
 def _mean_rows_kernel(sum_ref, cnt_ref, out_ref):
-    out_ref[...] = sum_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+    # counts <= 0 (neighborhood emptied by remove/replace RMIs) read zero,
+    # not the stale sigma/1 residual — same contract as
+    # core/aggregators.mean_read and ref.rmi_apply_read_ref
+    cnt = cnt_ref[...]
+    out_ref[...] = jnp.where(cnt > 0,
+                             sum_ref[...] / jnp.maximum(cnt, 1.0), 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))

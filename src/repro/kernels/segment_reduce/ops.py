@@ -163,7 +163,9 @@ def segment_deliver(idx, vec, cnt, n_rows: int, mode: str = "add",
 @partial(jax.jit, static_argnames=("block_r", "interpret"))
 def mean_rows(sums, cnts, block_r: int = DEFAULT_BLOCK_R,
               interpret: bool | None = None):
-    """Aggregator read at selected rows: sums [K, d] / max(cnts [K], 1).
+    """Aggregator read at selected rows: sums/cnts with cnt <= 0 rows
+    reading ZERO (empty-neighborhood contract of aggregators.mean_read —
+    a remove-emptied row must not read its stale sigma residual).
 
     Pads K up to a block_r multiple (padding counts are 1 so the padded
     rows divide cleanly) and runs the VPU `mean_rows_kernel`."""

@@ -46,5 +46,7 @@ def rmi_apply_read_ref(agg, cnt, idx, vec, dcnt, read_idx):
     d_vec, d_cnt, dirty = segment_deliver_ref(idx, vec, dcnt, agg.shape[0],
                                               mode="add")
     agg2, cnt2 = agg + d_vec, cnt + d_cnt
-    mean = agg2 / jnp.maximum(cnt2, 1.0)[:, None]
+    # empty (cnt <= 0) neighborhoods read zeros, not the stale residual
+    mean = jnp.where(cnt2[:, None] > 0,
+                     agg2 / jnp.maximum(cnt2, 1.0)[:, None], 0.0)
     return agg2, cnt2, dirty, mean[read_idx]

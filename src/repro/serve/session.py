@@ -66,6 +66,16 @@ class ServeSession:
                                                    # _next_qid when restoring
                                                    # a checkpoint that holds
                                                    # its pending queries
+    max_retained: int = 65536                      # retention bound on
+                                                   # `answers`: a long-lived
+                                                   # serving loop would grow
+                                                   # the dict per answer
+                                                   # forever; beyond the
+                                                   # bound the OLDEST
+                                                   # harvested answers are
+                                                   # evicted (dict insertion
+                                                   # order). Read results
+                                                   # promptly or raise it.
     answers: dict = field(default_factory=dict)    # qid -> Answer
     _queue: list = field(default_factory=list)     # un-admitted submissions
     _meta: dict = field(default_factory=dict)      # qid -> _PendingMeta
@@ -79,6 +89,10 @@ class ServeSession:
                 "compiled away at query_cap=0)")
         if self.driver not in ("super", "tick"):
             raise ValueError(f"driver={self.driver!r}: 'super' or 'tick'")
+        if self.max_retained <= 0:
+            raise ValueError(
+                f"max_retained={self.max_retained} must be > 0 (it bounds "
+                "the retained-answer dict, not whether answers arrive)")
         self._next_qid = max(self._next_qid, int(self.qid_base))
 
     # ------------------------------------------------------------- submit
@@ -170,6 +184,12 @@ class ServeSession:
                 # adopted answers (restored pending queries another session
                 # issued) have no enqueue time — excluded from percentiles
                 latency_s=(t_now - meta.enqueued_at) if meta else None)
+        # retention bound: evict the oldest harvested answers (dict
+        # preserves insertion order) so an always-on loop stays bounded
+        overflow = len(self.answers) - self.max_retained
+        if overflow > 0:
+            for qid in list(self.answers)[:overflow]:
+                del self.answers[qid]
 
     @property
     def outstanding(self) -> int:
@@ -177,16 +197,26 @@ class ServeSession:
         return len(self._meta) + len(self._queue)
 
     def latency_stats(self) -> dict:
-        """p50/p95/p99 end-to-end latency (ms) + staleness + counts."""
-        lats = np.asarray([a.latency_s for a in self.answers.values()
-                           if a.latency_s is not None])
-        if lats.size == 0:
+        """p50/p95/p99 end-to-end latency (ms) + staleness + counts.
+
+        Latency AND staleness percentiles are computed over the SAME
+        population: answers this session issued itself (latency_s set).
+        Adopted answers (queries restored from another session's
+        checkpoint, latency_s=None) have no enqueue time here, so mixing
+        them into only one of the two distributions would silently skew
+        the comparison — they are excluded from both and reported in the
+        separate `adopted` count."""
+        timed = [a for a in self.answers.values()
+                 if a.latency_s is not None]
+        if not timed:
             return {"answered": len(self.answers),
+                    "adopted": len(self.answers),
                     "outstanding": self.outstanding}
-        stale = np.asarray([a.staleness_ticks
-                            for a in self.answers.values()])
+        lats = np.asarray([a.latency_s for a in timed])
+        stale = np.asarray([a.staleness_ticks for a in timed])
         return {
             "answered": len(self.answers),
+            "adopted": len(self.answers) - len(timed),
             "outstanding": self.outstanding,
             "p50_ms": float(np.percentile(lats, 50) * 1e3),
             "p95_ms": float(np.percentile(lats, 95) * 1e3),

@@ -174,6 +174,46 @@ def test_mean_rows_empty_count_reads_zero():
 
 
 @pytest.mark.pallas
+def test_mean_rows_stale_residual_on_emptied_neighborhood():
+    """Remove-to-empty regression (ISSUE 6): a neighborhood whose count
+    was driven to 0 (or negative) by remove/replace RMIs can keep a
+    NONZERO f32 residual in sigma — the old clamp-to-1 divide read that
+    stale `sigma/1` back. The contract is: cnt <= 0 reads ZEROS, on the
+    kernel path, the XLA reader, and the fused-apply oracle alike."""
+    from repro.core.aggregators import mean_read
+    sums = jnp.asarray([[4.0, 8.0], [2.5, -1.0], [3.0, 3.0], [7.0, 7.0]])
+    cnts = jnp.asarray([2.0, 0.0, 1.0, -1.0])     # stale rows 1 and 3
+    want = [[2.0, 4.0], [0.0, 0.0], [3.0, 3.0], [0.0, 0.0]]
+    np.testing.assert_allclose(
+        np.asarray(mean_rows(sums, cnts, block_r=64)), want)
+    np.testing.assert_allclose(np.asarray(mean_read(sums, cnts)), want)
+
+
+@pytest.mark.pallas
+def test_rmi_remove_to_empty_reads_zero():
+    """End-to-end remove: reduce a message in, remove it back out — the
+    fused apply+read must return zeros for the emptied row even though
+    f32 cancellation leaves sigma only approximately zero; and a pure
+    REMOVE record (negative count) onto an already-empty row must not
+    resurrect the subtracted payload as a read value."""
+    d = 4
+    agg = jnp.zeros((3, d), jnp.float32)
+    cnt = jnp.zeros((3,), jnp.float32)
+    msg = jnp.asarray([[0.3, -1.7, 2.2, 0.9]], jnp.float32)
+    # reduce(msg) then remove(msg) on row 1; plain remove on row 2
+    idx = jnp.asarray([1, 1, 2], jnp.int32)
+    vec = jnp.concatenate([msg, -msg, -msg])
+    dcnt = jnp.asarray([1.0, -1.0, -1.0], jnp.float32)
+    ridx = jnp.asarray([0, 1, 2], jnp.int32)
+    for impl in (rmi_apply_read,
+                 rmi_apply_read_ref):
+        agg2, cnt2, _, reads = impl(agg, cnt, idx, vec, dcnt, ridx)
+        assert float(cnt2[1]) == 0.0 and float(cnt2[2]) == -1.0
+        np.testing.assert_array_equal(np.asarray(reads[1]), np.zeros(d))
+        np.testing.assert_array_equal(np.asarray(reads[2]), np.zeros(d))
+
+
+@pytest.mark.pallas
 def test_segment_sum_sorted_trims_off_by_block_tail():
     """Regression: segment_sum_sorted used to return the block-padded
     [n_segments_pad, d] array and rely on every caller to slice."""

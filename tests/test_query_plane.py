@@ -374,3 +374,60 @@ def test_serve_session_both_drivers():
         assert (a.kind, a.ok) == (b.kind, b.ok)
         np.testing.assert_allclose(a.vec, b.vec, rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(a.score, b.score, rtol=1e-4, atol=1e-5)
+
+
+def test_serve_session_latency_stats_single_population():
+    """latency_stats bugfix (ISSUE 6): staleness percentiles used to run
+    over ALL answers while latency percentiles skipped adopted ones
+    (latency_s=None) — two silently different populations. Both must
+    filter identically, with adopted answers counted separately."""
+    from repro.serve.session import Answer
+    _, _, pipe = build_pipe()
+    s = ServeSession(pipe, driver="tick")
+    # two timed answers (staleness 1, 3) + one ADOPTED answer with a huge
+    # staleness that must NOT leak into the percentile population
+    s.answers[0] = Answer(qid=0, kind=KIND_EMBED, ok=True,
+                          vec=np.zeros(12, np.float32), score=0.0,
+                          issue_tick=0, answer_tick=1, latency_s=0.010)
+    s.answers[1] = Answer(qid=1, kind=KIND_EMBED, ok=True,
+                          vec=np.zeros(12, np.float32), score=0.0,
+                          issue_tick=0, answer_tick=3, latency_s=0.030)
+    s.answers[2] = Answer(qid=2, kind=KIND_EMBED, ok=True,
+                          vec=np.zeros(12, np.float32), score=0.0,
+                          issue_tick=0, answer_tick=500, latency_s=None)
+    stats = s.latency_stats()
+    assert stats["answered"] == 3 and stats["adopted"] == 1
+    assert stats["staleness_ticks_max"] == 3          # not the adopted 500
+    assert stats["p50_ms"] == pytest.approx(20.0)
+    # all-adopted sessions report counts only (no percentile keys)
+    s2 = ServeSession(pipe, driver="tick")
+    s2.answers[9] = Answer(qid=9, kind=KIND_EMBED, ok=True,
+                           vec=np.zeros(12, np.float32), score=0.0,
+                           issue_tick=0, answer_tick=2, latency_s=None)
+    st2 = s2.latency_stats()
+    assert st2["answered"] == st2["adopted"] == 1 and "p50_ms" not in st2
+
+
+def test_serve_session_answer_retention_bound():
+    """`answers` is bounded by max_retained: the OLDEST harvested answers
+    evict first, and the bound never blocks new answers from landing."""
+    edges, feats = make_stream()
+    e_chunks, f_chunks = chunked(edges, feats)
+    _, _, pipe = build_pipe()
+    s = ServeSession(pipe, driver="tick", max_retained=4)
+    early = s.submit_embed([0, 1, 2])
+    for ch, fe in zip(e_chunks, f_chunks):
+        s.advance(ch, fe)
+    s.flush()
+    assert s.outstanding == 0 and set(s.answers) == set(early)
+    late = s.submit_embed([3, 4, 5])
+    s.advance()                            # admit the queued wave
+    s.flush()
+    assert s.outstanding == 0
+    # 6 answers harvested, bound 4: the two OLDEST-harvested rows (both
+    # from the first wave) evicted; the fresh wave is fully retained
+    assert len(s.answers) == 4
+    assert set(late) <= set(s.answers)
+    assert len(set(early) & set(s.answers)) == 1
+    with pytest.raises(ValueError, match="max_retained"):
+        ServeSession(pipe, driver="tick", max_retained=0)

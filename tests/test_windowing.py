@@ -56,6 +56,28 @@ def test_adaptive_clip_bounds():
     assert _dl(cfg, 10, freq=2.0) == 14  # 8/2 = 4
 
 
+def test_adaptive_fractional_interval_rounds_up():
+    """Truncation regression (ISSUE 6): alpha/freq in (0, 1) used to cast
+    to int32 as 0 BEFORE the clip, silently collapsing every hot vertex
+    onto adaptive_min by accident. With explicit ceil the boundary is a
+    policy decision: fractional intervals round UP to the next tick."""
+    cfg = win.WindowConfig(kind=win.ADAPTIVE, adaptive_min=1,
+                           adaptive_max=16, adaptive_alpha=8.0)
+    # 8/16 = 0.5 -> ceil 1 (the old trunc gave 0 -> clip 1: same value,
+    # but only by the min=1 accident — pin it anyway)
+    assert _dl(cfg, 10, freq=16.0) == 11
+    # 8/3 = 2.67 -> ceil 3, NOT trunc 2: the mid-range boundary the old
+    # cast got wrong without any clip to hide it
+    assert _dl(cfg, 10, freq=3.0) == 13
+    # exact integers are untouched by ceil
+    assert _dl(cfg, 10, freq=2.0) == 14
+    # with min=2, 8/5=1.6 ceils to 2 directly — the deadline no longer
+    # depends on the clip floor catching a truncated-to-1 interval
+    cfg2 = win.WindowConfig(kind=win.ADAPTIVE, adaptive_min=2,
+                            adaptive_max=16, adaptive_alpha=8.0)
+    assert _dl(cfg2, 10, freq=5.0) == 12
+
+
 def test_adaptive_hot_vertices_evict_sooner_than_cold():
     cfg = win.WindowConfig(kind=win.ADAPTIVE)
     hot = _dl(cfg, 0, freq=100.0)
