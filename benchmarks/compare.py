@@ -1,0 +1,49 @@
+"""Perf-regression gate over BENCH.json snapshots (ISSUE 7).
+
+CI's bench lane best-effort-downloads the previous commit's
+``bench-<sha>`` artifact and runs ``run.py --compare BASELINE.json``:
+any row present in BOTH snapshots whose measured ``events_per_s`` fell
+more than ``REGRESSION_FRAC`` below the baseline fails the lane. Rows
+that appear or disappear between commits never fail (benchmarks
+evolve), rows without an ``events_per_s`` derived column are ignored
+(latency/volume rows have their own validator gates), and a missing
+baseline file is a no-op — the first run after this lands, expired
+artifacts, or a fork without artifact access must not turn red.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+REGRESSION_FRAC = 0.2
+
+
+def compare_rows(rows: list, baseline_rows: list,
+                 threshold: float = REGRESSION_FRAC) -> list:
+    """Regression messages for every row name present in both snapshots
+    whose events_per_s dropped by more than `threshold` (fraction)."""
+    base = {r["name"]: r.get("derived", {}).get("events_per_s")
+            for r in baseline_rows}
+    msgs = []
+    for r in rows:
+        cur = r.get("derived", {}).get("events_per_s")
+        ref = base.get(r["name"])
+        if not cur or not ref:
+            continue
+        if cur < ref * (1.0 - threshold):
+            msgs.append(
+                f"{r['name']}: events_per_s {cur:.0f} is "
+                f"{1.0 - cur / ref:.0%} below baseline {ref:.0f} "
+                f"(allowed {threshold:.0%})")
+    return msgs
+
+
+def compare_to_baseline(rows: list, baseline_path: str,
+                        threshold: float = REGRESSION_FRAC):
+    """None if the baseline file is absent (best-effort lane), else the
+    list of regression messages (empty = clean)."""
+    if not os.path.exists(baseline_path):
+        return None
+    with open(baseline_path) as f:
+        snap = json.load(f)
+    return compare_rows(rows, snap.get("rows", []), threshold)

@@ -74,6 +74,11 @@ def main() -> None:
     ap.add_argument("--scale", default="small", choices=["small", "full"])
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as structured JSON")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="fail when any shared row's events_per_s drops "
+                         ">20%% below this BENCH.json snapshot (a missing "
+                         "file skips the gate — the CI download is "
+                         "best-effort)")
     args = ap.parse_args()
 
     if args.profile:
@@ -109,6 +114,19 @@ def main() -> None:
         for name, err in failed:
             print(f"{name},FAILED,{err}")
         raise SystemExit(1)
+    if args.compare:
+        from benchmarks.compare import compare_to_baseline
+        regressions = compare_to_baseline(rows, args.compare)
+        if regressions is None:
+            print(f"no baseline at {args.compare}; skipping perf compare",
+                  file=sys.stderr)
+        elif regressions:
+            for msg in regressions:
+                print(f"REGRESSION: {msg}")
+            raise SystemExit(1)
+        else:
+            print(f"perf compare vs {args.compare}: no events_per_s "
+                  "regressions", file=sys.stderr)
 
 
 if __name__ == "__main__":

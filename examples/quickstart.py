@@ -1,11 +1,19 @@
 """Quickstart: stream a graph through D3-GNN, verify exactness, train.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--stage S]
 
 Builds a 2-layer GraphSAGE (the paper's model), streams a synthetic
-power-law edge stream through the windowed pipeline, checks the sink
-against the static oracle, then runs one stale-free training cycle.
+power-law edge stream through the windowed pipeline on a
+`make_stream_mesh(stage=S)` device mesh, checks the sink against the
+static oracle, then runs one stale-free training cycle.  stage=1 (the
+default) is the classic 1-D data-parallel engine; --stage 2 runs the
+hybrid layer-pipelined path and needs >= 2 devices, e.g.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+        PYTHONPATH=src python examples/quickstart.py --stage 2
 """
+import argparse
+
 import numpy as np
 import jax
 
@@ -15,13 +23,22 @@ from repro.core.pipeline import D3Pipeline, PipelineConfig
 from repro.core.training import TrainingCoordinator
 from repro.graph.graphs import powerlaw_edges
 from repro.graph.sage import GraphSAGE
+from repro.launch.mesh import make_stream_mesh
 from repro.nn.layers import Linear
 from repro.optim import sgd
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stage", type=int, default=1,
+                    help="pipeline stages on the ('stage', 'data') mesh")
+    args = ap.parse_args()
+
     rng = np.random.default_rng(0)
-    n_nodes, d_in = 200, 16
+    # stage > 1 pipelines the layers round-robin over stages, which needs a
+    # stage-uniform stack (in_dim == out_dim on every layer).
+    n_nodes = 200
+    d_in = 16 if args.stage == 1 else 32
     edges = powerlaw_edges(rng, n_nodes, 1000)
     feats = {v: rng.normal(size=d_in).astype(np.float32)
              for v in range(n_nodes)}
@@ -30,9 +47,11 @@ def main():
     params = model.init(jax.random.key(0))
     cfg = PipelineConfig(n_parts=8, node_cap=256, edge_cap=1024,
                          repl_cap=512, feat_cap=1024, edge_tick_cap=256,
-                         max_nodes=n_nodes,
+                         max_nodes=n_nodes, n_stages=args.stage,
                          window=win.WindowConfig(kind=win.SESSION, interval=4))
-    pipe = D3Pipeline(model, params, cfg)
+    mesh = make_stream_mesh(stage=args.stage)
+    pipe = D3Pipeline(model, params, cfg, mesh=mesh)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     print("== streaming 1000 edges through the windowed pipeline ==")
     pipe.run_stream(edges, feats, tick_edges=128)
@@ -41,6 +60,9 @@ def main():
     print(f"ticks={m.ticks} emitted={m.emitted_total} "
           f"reduce_msgs={m.reduce_msgs} cross_part={m.cross_part_msgs} "
           f"replication={pipe.part.replication_factor():.2f}")
+    if args.stage > 1:
+        print(f"pipeline bubble fraction: {pipe.bubble_fraction():.3f} "
+              f"(stage_idle={m.stage_idle})")
 
     print("== exactness vs static oracle ==")
     emb = pipe.embeddings()

@@ -9,6 +9,11 @@ checkpoints mid-run, and demonstrates crash recovery with an elastic
 re-scale — the online-query deployment loop of DESIGN §2.
 
     PYTHONPATH=src python examples/streaming_serve.py [--edges 4000]
+
+--stage S serves from the hybrid layer-pipelined engine on a
+('stage', 'data') mesh (needs >= S devices, e.g.
+XLA_FLAGS=--xla_force_host_platform_device_count=2 with --stage 2);
+the default --stage 1 is the classic 1-D engine.
 """
 import argparse
 import time
@@ -22,10 +27,11 @@ from repro.ft.checkpoint import CheckpointManager
 from repro.ft.elastic import simulate_failure_and_recover
 from repro.graph.graphs import powerlaw_edges
 from repro.graph.sage import GraphSAGE
+from repro.launch.mesh import make_stream_mesh
 from repro.serve.session import ServeSession
 
 
-def build(n_nodes, d_in, seed=0):
+def build(n_nodes, d_in, seed=0, stage=1):
     model = GraphSAGE((d_in, 32, 32))
     params = model.init(jax.random.key(0))
     cfg = PipelineConfig(n_parts=8, node_cap=4 * n_nodes // 8,
@@ -33,9 +39,11 @@ def build(n_nodes, d_in, seed=0):
                          feat_cap=2048, edge_tick_cap=512,
                          query_cap=16, query_tick_cap=64,
                          max_nodes=n_nodes, base_parallelism=4,
+                         n_stages=stage,
                          window=win.WindowConfig(kind=win.ADAPTIVE),
                          seed=seed)
-    return model, params, D3Pipeline(model, params, cfg)
+    mesh = make_stream_mesh(stage=stage)
+    return model, params, D3Pipeline(model, params, cfg, mesh=mesh)
 
 
 def submit_mix(session, rng, known, queries_per_launch):
@@ -73,13 +81,17 @@ def main():
     ap.add_argument("--nodes", type=int, default=500)
     ap.add_argument("--tick-edges", type=int, default=128)
     ap.add_argument("--queries-per-launch", type=int, default=32)
+    ap.add_argument("--stage", type=int, default=1,
+                    help="pipeline stages on the ('stage', 'data') mesh")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
+    # the layer-pipelined engine needs a stage-uniform stack (d_in == d_out)
+    d_in = 16 if args.stage == 1 else 32
     edges = powerlaw_edges(rng, args.nodes, args.edges)
-    feats = {v: rng.normal(size=16).astype(np.float32)
+    feats = {v: rng.normal(size=d_in).astype(np.float32)
              for v in range(args.nodes)}
-    model, params, pipe = build(args.nodes, 16)
+    model, params, pipe = build(args.nodes, d_in, stage=args.stage)
     session = ServeSession(pipe, driver="super", super_ticks=8)
     mgr = CheckpointManager("results/serve_ckpt", keep=2, async_write=True)
 
@@ -94,7 +106,7 @@ def main():
           f"queries answered: {pipe.metrics.queries_answered})")
 
     # ---- crash + recover onto fewer shards, keep serving -------------
-    _, _, pipe2 = build(args.nodes, 16)
+    _, _, pipe2 = build(args.nodes, d_in, stage=args.stage)
     step, plan = simulate_failure_and_recover(pipe2, mgr, None,
                                               new_parallelism=2)
     print(f"recovered checkpoint step={step}; re-scale 4->2 moved "
@@ -117,6 +129,9 @@ def main():
     stale = np.asarray([a.staleness_ticks for a in answered])
     print(f"stream done: {args.edges} edges in {wall:.1f}s "
           f"({args.edges / wall:.0f} edges/s ingested)")
+    if args.stage > 1:
+        print(f"pipeline bubble fraction: {pipe2.bubble_fraction():.3f} "
+              f"(stage_idle={m.stage_idle})")
     print(f"emitted={m.emitted_total + pipe.metrics.emitted_total} "
           f"reduce_msgs={m.reduce_msgs} cross_part={m.cross_part_msgs}")
     n_ok = sum(a.ok for a in answered)

@@ -35,6 +35,20 @@ the LocalRouter's flat scatter (`repro/dist/router.py`); the carry's
 NamedShardings live in `repro/dist/sharding.py`. Both routers are
 golden-equivalent by test.
 
+Hybrid parallelism (ISSUE 7): a 2-D ("stage", "data") mesh
+(`make_stream_mesh(stage=S)` + `PipelineConfig.n_stages=S`) additionally
+pipelines the LAYER axis: layer l lives on stage l % S, each tick every
+stage runs its R = L // S layers on data that is s ticks behind the
+stream head, and inter-stage hops ride a packed ring in the carry
+(`PipelineCarry.stage_ring`), posted with one circular `ppermute` right
+after each round's compute so the hop overlaps the next round's work
+(`_tick_program_2d`). Per-tick behaviour is schedule-skewed relative to
+the 1-D program, but the quiescent state after `flush` is the same
+fixed point (aggregator updates telescope; edge counts are
+arrival-order-independent — golden-tested against the LocalRouter
+reference and the static oracle). At `n_stages=1` NONE of this code is
+reached: the 1-D program above runs byte-for-byte unchanged.
+
 Delivery backend: `PipelineConfig.delivery_backend` picks how routed
 records land in state — "xla" (reference scatters) or "pallas" (sorted
 segment-reduce kernels, `core/delivery.py`). Both backends run the same
@@ -84,7 +98,10 @@ from repro.core.partitioner import StreamingPartitioner
 from repro.core.tick import add_stats, layer_tick_body, zero_stats
 from repro.core.termination import TerminationCoordinator, quiet_update
 from repro.dist.router import LocalRouter, MeshRouter
-from repro.dist.sharding import carry_pspecs, carry_shardings, stats_pspecs
+from repro.dist.sharding import (carry_pspecs, carry_shardings,
+                                 stage_carry_pspecs, stage_carry_shardings,
+                                 stage_stats_pspecs, stats_pspecs)
+from repro.dist.wire import field_col, pack_lane, pad_lane, unpack_lane
 from repro.serve.query import (KIND_EMBED, KIND_LINK, add_query_stats,
                                empty_query_batch, init_query_state,
                                query_admit_stage, query_answer_stage,
@@ -130,6 +147,14 @@ class PipelineConfig:
                                       # same-destination RMIs pre-routing
     delivery_backend: str = "xla"     # how routed records land in state
                                       # ("xla" scatters | "pallas" kernels)
+    n_stages: int = 1                 # hybrid parallelism (ISSUE 7): number
+                                      # of pipeline stages on a 2-D
+                                      # ("stage","data") mesh — layer l runs
+                                      # on stage l % n_stages and micro-ticks
+                                      # flow as a circular pipeline. Must
+                                      # match make_stream_mesh(stage=...);
+                                      # 1 (default) = the layer-sequential
+                                      # 1-D program, bit-for-bit
     partitioner: str = "hdrf"
     base_parallelism: int = 2         # p  (physical, for stats/sharding)
     explosion: float = 1.0            # lambda
@@ -161,9 +186,41 @@ class PipelineConfig:
                    else self.route_defer_cap)
         return n_devices * per_dev
 
-    def validate(self, n_devices: int = 1) -> None:
+    def validate(self, n_devices: int = 1, n_layers: Optional[int] = None,
+                 local: bool = False) -> None:
         """Fail fast with a clear message instead of a shard_map shape
-        error deep inside the tick program."""
+        error deep inside the tick program.
+
+        n_devices counts the WHOLE mesh (stage * data on a 2-D mesh);
+        n_layers enables the layer-placement divisibility check; local
+        flags a LocalRouter pipeline (no mesh), which cannot host
+        pipeline stages."""
+        if self.n_stages < 1:
+            raise ValueError(
+                f"PipelineConfig.n_stages={self.n_stages} must be >= 1 "
+                "(1 = the layer-sequential 1-D program)")
+        if self.n_stages > 1:
+            if local:
+                raise ValueError(
+                    f"PipelineConfig.n_stages={self.n_stages} needs a 2-D "
+                    "('stage','data') mesh (make_stream_mesh(stage=...)): "
+                    "the LocalRouter has no stage axis to place layers on "
+                    "and would silently run them layer-sequentially — "
+                    "pass mesh= or set n_stages=1")
+            if n_devices % self.n_stages:
+                raise ValueError(
+                    f"n_devices={n_devices} is not divisible by "
+                    f"n_stages={self.n_stages}: the mesh factors as "
+                    "(stage, data) = (n_stages, n_devices // n_stages), "
+                    "so pick a device count that is a multiple of the "
+                    "stage count")
+            if n_layers is not None and n_layers % self.n_stages:
+                raise ValueError(
+                    f"n_layers={n_layers} is not divisible by "
+                    f"n_stages={self.n_stages}: layers are placed "
+                    "round-robin on stages (layer l on stage l % S) and "
+                    "every stage must carry the same number of rounds — "
+                    "use a stage count that divides the layer count")
         caps = {"n_parts": self.n_parts, "node_cap": self.node_cap,
                 "edge_cap": self.edge_cap, "repl_cap": self.repl_cap,
                 "feat_cap": self.feat_cap, "outbox_cap": self.outbox(),
@@ -195,9 +252,14 @@ class PipelineConfig:
                 f"PipelineConfig.route_defer_cap={self.route_defer_cap} "
                 "must be >= 0 (0 disables deferral: bucket overflow then "
                 "drops, counted in TickStats.route_dropped)")
+        # parts shard over the DATA axis only — on a 2-D mesh each stage
+        # row replicates the same part blocks over n_devices // n_stages
+        # data shards
+        data_devs = n_devices // self.n_stages if self.n_stages > 1 \
+            else n_devices
         if (self.route_defer_cap == 0 and self.query_cap > 0
-                and self.route_cap is not None and n_devices > 1
-                and self.route_cap < (self.n_parts // n_devices)
+                and self.route_cap is not None and data_devs > 1
+                and self.route_cap < (self.n_parts // data_devs)
                 * self.query_cap):
             raise ValueError(
                 "route_defer_cap=0 with a capped query wire lane "
@@ -218,10 +280,10 @@ class PipelineConfig:
                 f"{self.outbox()} must be a multiple of "
                 f"n_parts={self.n_parts}: it is split into outbox() // "
                 "n_parts emission slots per part")
-        if n_devices > 1 and self.n_parts % n_devices:
+        if data_devs > 1 and self.n_parts % data_devs:
             raise ValueError(
                 f"n_parts={self.n_parts} is not divisible by the mesh's "
-                f"{n_devices} devices: the part axis is block-sharded over "
+                f"{data_devs} devices: the part axis is block-sharded over "
                 "('data',), so pick n_parts as a multiple of the device "
                 "count (each device owns n_parts // n_devices parts)")
 
@@ -250,6 +312,11 @@ class StreamMetrics:
                                        # the saved message volume:
                                        # reduce_msgs + suppressed tracks
                                        # the ungated reduce_msgs
+    stage_idle: int = 0                # hybrid pipeline bubbles (ISSUE 7):
+                                       # device-rounds that saw an EMPTY
+                                       # inbox, summed over ticks — 0 on a
+                                       # 1-D mesh; D3Pipeline.
+                                       # bubble_fraction() normalizes it
     wall_seconds: float = 0.0
     busy_logical: Optional[np.ndarray] = None
 
@@ -258,22 +325,73 @@ class StreamMetrics:
         return self.emitted_total / self.wall_seconds if self.wall_seconds else 0.0
 
 
+@dataclass(frozen=True)
+class StagedActLayer:
+    """SPMD-uniform stand-in for one pipeline ROUND of layers.
+
+    Under stage parallelism one compiled `layer_tick_body` runs for every
+    stage of a round, but GraphSAGE stacks put `act=False` on the final
+    layer only — the one per-layer difference that is CODE, not data. The
+    wrapper moves it into data: `base` is the round's layer with act
+    forced off, and the staged params carry {"p": the layer's params,
+    "act": 0/1 float} stacked over the stage axis, so the relu rides a
+    `jnp.where` on a per-stage leaf instead of a per-layer Python branch.
+    Valid for any layer whose activation is exactly a final relu
+    (SAGELayer / GCNLayer); D3Pipeline enforces the rest of the
+    uniformity contract (same class / dims / aggregator across layers).
+    """
+    base: object
+
+    @property
+    def agg_kind(self):
+        return getattr(self.base, "agg_kind", "mean")
+
+    @property
+    def in_dim(self):
+        return self.base.in_dim
+
+    @property
+    def out_dim(self):
+        return self.base.out_dim
+
+    def message(self, params, x):
+        return self.base.message(params["p"], x)
+
+    def update(self, params, x, agg):
+        h = self.base.update(params["p"], x, agg)
+        return jnp.where(params["act"] > 0, jax.nn.relu(h), h)
+
+
 class D3Pipeline:
     """L chained GraphStorage operators + the host driver."""
 
     def __init__(self, model, params, cfg: PipelineConfig, mesh=None):
         """model: graph/sage.GraphSAGE (or compatible stack of layers with
         .message/.update); params: its param pytree.
-        mesh: optional 1-D ("data",) jax mesh — shards the part axis of
-        the tick program across its devices (MeshRouter)."""
+        mesh: optional jax mesh — 1-D ("data",) shards the part axis of
+        the tick program across its devices (MeshRouter); 2-D ("stage",
+        "data") with cfg.n_stages > 1 additionally pipelines the layer
+        axis (`make_stream_mesh(stage=...)`)."""
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
-        n_dev = int(mesh.shape["data"]) if mesh is not None else 1
-        cfg.validate(n_devices=n_dev)
+        mesh_shape = dict(mesh.shape) if mesh is not None else {}
+        S = int(mesh_shape.get("stage", 1))
+        n_dev = int(mesh_shape.get("data", 1))
+        if mesh is not None and S != cfg.n_stages:
+            raise ValueError(
+                f"mesh has stage={S} but PipelineConfig.n_stages="
+                f"{cfg.n_stages}: the stage counts must agree — build the "
+                "mesh with make_stream_mesh(stage=n_stages)")
+        cfg.validate(n_devices=S * n_dev, n_layers=len(model.layers),
+                     local=mesh is None)
+        self.n_stages = S
+        self._n_data = n_dev
         self.router = (MeshRouter(cfg.n_parts, n_dev,
                                   route_cap=cfg.route_cap,
-                                  pack_backend=cfg.delivery_backend)
+                                  pack_backend=cfg.delivery_backend,
+                                  stage_axis="stage" if S > 1 else None,
+                                  n_stages=S)
                        if mesh is not None else LocalRouter(cfg.n_parts))
         self.delivery = make_delivery(cfg.delivery_backend)
         self.layers = list(model.layers)
@@ -289,18 +407,51 @@ class D3Pipeline:
         bc_rows = cfg.defer_rows(p_loc * cfg.repl_cap, n_dev)
         rmi_rows = cfg.defer_rows(cfg.edge_tick_cap + p_loc * cfg.edge_cap,
                                   n_dev)
-        self.states = [st.init_layer(cfg.n_parts, cfg.node_cap, dims[i],
-                                     dims[i], bc_defer_rows=bc_rows,
-                                     rmi_defer_rows=rmi_rows)
-                       for i in range(len(self.layers))]
+        if S > 1:
+            self._check_uniform_layers(dims)
+            self._n_rounds = len(self.layers) // S
+            self.rounds = (StagedActLayer(
+                base=replace(self.layers[0], act=False)),) * self._n_rounds
+            d = dims[0]
+            proto = st.init_layer(cfg.n_parts, cfg.node_cap, d, d,
+                                  bc_defer_rows=bc_rows,
+                                  rmi_defer_rows=rmi_rows)
+            # round r's state stacks layers r*S+0 .. r*S+S-1 over a
+            # leading stage axis (all layers initialize identically)
+            self.states = [jax.tree.map(lambda a: jnp.stack([a] * S), proto)
+                           for _ in range(self._n_rounds)]
+        else:
+            self._n_rounds = len(self.layers)
+            self.rounds = None
+            self.states = [st.init_layer(cfg.n_parts, cfg.node_cap, dims[i],
+                                         dims[i], bc_defer_rows=bc_rows,
+                                         rmi_defer_rows=rmi_rows)
+                           for i in range(len(self.layers))]
         self.d_out = dims[-1]
         self.sink = jnp.zeros((cfg.n_parts, cfg.node_cap, self.d_out))
         self.sink_seen = jnp.zeros((cfg.n_parts, cfg.node_cap), bool)
         self.queries = init_query_state(
             cfg.n_parts, cfg.query_cap, self.d_out,
             wire_defer_rows=cfg.defer_rows(p_loc * cfg.query_cap, n_dev))
-        self._wire_bytes_per_tick = self._static_wire_bytes(dims, n_dev)
-        if mesh is not None:
+        # inter-stage ring: one fixed packed-FeatBatch slot shape carries
+        # both the host inbox (feat_cap rows) and any round's outbox
+        # (p_loc * cap_pp rows) between stages
+        cap_pp = max(1, cfg.outbox() // cfg.n_parts)
+        self._ring_caps = (max(cfg.feat_cap, p_loc * cap_pp), dims[0] + 3)
+        self.stage_ring = (jnp.zeros(
+            (S, self._n_rounds, n_dev * self._ring_caps[0],
+             self._ring_caps[1]), jnp.float32) if S > 1 else None)
+        self._wire_bytes_per_tick = self._static_wire_bytes(dims, n_dev, S)
+        if mesh is not None and S > 1:
+            sh = stage_carry_shardings(mesh, self._n_rounds)
+            self.topo = jax.device_put(self.topo, sh.topo)
+            self.states = [jax.device_put(s, sh.layers[i])
+                           for i, s in enumerate(self.states)]
+            self.sink = jax.device_put(self.sink, sh.sink)
+            self.sink_seen = jax.device_put(self.sink_seen, sh.sink_seen)
+            self.queries = jax.device_put(self.queries, sh.queries)
+            self.stage_ring = jax.device_put(self.stage_ring, sh.stage_ring)
+        elif mesh is not None:
             sh = carry_shardings(mesh, len(self.layers))
             self.topo = jax.device_put(self.topo, sh.topo)
             self.states = [jax.device_put(s, sh.layers[i])
@@ -326,8 +477,8 @@ class D3Pipeline:
                                                    self.d_out, device=False)
         self._answer_log: list = []    # host-side answered-row columns
 
-    def _static_wire_bytes(self, dims, n_dev: int) -> int:
-        """EXACT all_to_all bytes per tick across the whole mesh — a
+    def _static_wire_bytes(self, dims, n_dev: int, n_stages: int = 1) -> int:
+        """EXACT collective bytes per tick across the whole mesh — a
         compile-time constant of (config, mesh): every device ships a
         [D, cap * W] f32 send buffer per lane per route_lanes call, so
         per-tick bytes = D * sum_lanes D * cap * W * 4. Accounted here in
@@ -335,11 +486,37 @@ class D3Pipeline:
         device, where a float counter would round past 2**24 and an
         int32 one would overflow at production capacities. The lane
         capacities/widths are the same constants the defer-ring sizing
-        above uses (MsgBatch width d + 5, QueryBatch width d + 10)."""
-        if self.mesh is None or n_dev <= 1:
+        above uses (MsgBatch width d + 5, QueryBatch width d + 10).
+
+        On a 2-D mesh the data-axis exchange happens once per ROUND per
+        stage row (each stage runs R = L // S layers), the query wire
+        rides round 0 on EVERY stage (QueryState is stage-replicated),
+        and the stage axis adds its own wires: one [C_buf, W_fb] ppermute
+        per round per device plus the final-round all_gather feeding the
+        replicated sinks (S - 1 foreign slots per device)."""
+        if self.mesh is None:
             return 0
         cfg = self.cfg
         p_loc = cfg.n_parts // n_dev
+        if n_stages > 1:
+            lanes = []
+            for _ in range(self._n_rounds):
+                lanes.append((p_loc * cfg.repl_cap, dims[0] + 5))
+                lanes.append((cfg.edge_tick_cap + p_loc * cfg.edge_cap,
+                              dims[0] + 5))
+            if cfg.query_cap > 0:
+                lanes.append((p_loc * cfg.query_cap,
+                              wire_width(self.d_out)))
+            a2a = (n_stages * n_dev
+                   * sum(n_dev * self.router.lane_cap(c) * w * 4
+                         for c, w in lanes) if n_dev > 1 else 0)
+            C_buf, W_fb = self._ring_caps
+            slot = C_buf * W_fb * 4
+            ring = n_stages * n_dev * self._n_rounds * slot
+            gather = n_stages * n_dev * (n_stages - 1) * slot
+            return a2a + ring + gather
+        if n_dev <= 1:
+            return 0
         lanes = []
         for li in range(len(self.layers)):
             lanes.append((p_loc * cfg.repl_cap, dims[li] + 5))
@@ -349,6 +526,90 @@ class D3Pipeline:
             lanes.append((p_loc * cfg.query_cap, wire_width(self.d_out)))
         return n_dev * sum(n_dev * self.router.lane_cap(c) * w * 4
                            for c, w in lanes)
+
+    def _check_uniform_layers(self, dims) -> None:
+        """Stage parallelism runs ONE compiled round body for every layer
+        of a round, so the stack must be SPMD-uniform: same layer class,
+        same aggregator, and in_dim == out_dim == d for every layer (one
+        stacked state tree + one ring row width serve all rounds). The
+        activation flag is exempt — StagedActLayer turns it into data."""
+        base = self.layers[0]
+        uniform = (len(set(dims)) == 1 and all(
+            type(l) is type(base) and hasattr(l, "act")
+            and getattr(l, "agg_kind", "mean")
+            == getattr(base, "agg_kind", "mean")
+            for l in self.layers))
+        if not uniform:
+            raise ValueError(
+                f"PipelineConfig.n_stages={self.cfg.n_stages} needs an "
+                "SPMD-uniform layer stack (same class/aggregator, in_dim "
+                "== out_dim on every layer, differing at most in the "
+                f"activation flag), got dims={dims} over "
+                f"{[type(l).__name__ for l in self.layers]} — pipeline "
+                "stages run one shared round body per stage")
+
+    # ----------------------------------------------- hybrid-parallel host
+    def _staged_params(self):
+        """Per-round staged params for the pipelined program: round r's
+        entry stacks layers r*S+0 .. r*S+S-1's params over a leading
+        stage axis, plus the per-stage activation flag as a 0/1 float
+        leaf (StagedActLayer). Rebuilt per launch from `self.params` so
+        checkpoint restores of `params` need no extra bookkeeping."""
+        S = self.n_stages
+        out = {}
+        for r in range(self._n_rounds):
+            per = [self.params[f"l{r * S + s}"] for s in range(S)]
+            out[f"r{r}"] = {
+                "p": jax.tree.map(lambda *xs: jnp.stack(xs), *per),
+                "act": jnp.asarray(
+                    [1.0 if self.layers[r * S + s].act else 0.0
+                     for s in range(S)], jnp.float32)}
+        return out
+
+    def _unstack_stats(self, host_stats):
+        """Per-ROUND stacked stats ([S] scalars / [S, n_parts] busy) ->
+        the 1-D drivers' per-LAYER list: layer l = r*S + s sits at index
+        s of round r's stack."""
+        out = []
+        for l in range(len(self.layers)):
+            r, s = divmod(l, self.n_stages)
+            out.append(jax.tree.map(lambda a: a[s], host_stats[r]))
+        return out
+
+    def layer_state(self, l: int):
+        """Host view of layer l's LayerState regardless of mesh shape: the
+        1-D engine stores one state per layer; the hybrid engine stores one
+        stage-STACKED state per round, with layer l = r*S + s living at
+        stage index s of round r."""
+        if self.n_stages == 1:
+            return self.states[l]
+        r, s = divmod(l, self.n_stages)
+        return jax.tree.map(lambda a: a[s], self.states[r])
+
+    def set_layer_state(self, l: int, st) -> None:
+        """Write a per-layer LayerState back (inverse of layer_state) —
+        used by the training coordinator's phased rebuild."""
+        if self.n_stages == 1:
+            self.states[l] = st
+            return
+        r, s = divmod(l, self.n_stages)
+        self.states[r] = jax.tree.map(
+            lambda a, leaf: a.at[s].set(leaf), self.states[r], st)
+
+    def _ring_occupancy_host(self) -> int:
+        """Valid rows still in flight between stages (0 on a 1-D mesh) —
+        the host-driver flush must not terminate over them."""
+        if self.stage_ring is None:
+            return 0
+        return int(jnp.sum(self.stage_ring[..., -1] > 0.5))
+
+    def bubble_fraction(self) -> float:
+        """Measured pipeline-bubble fraction: device-rounds that saw an
+        empty inbox over total device-rounds (0.0 on a 1-D mesh)."""
+        total = self.metrics.ticks * len(self.layers) * self._n_data
+        if self.n_stages <= 1 or total == 0:
+            return 0.0
+        return self.metrics.stage_idle / total
 
     # ------------------------------------------------------------ host side
     def _resolve_queries(self, queries, issue_tick: int) -> dict:
@@ -467,6 +728,23 @@ class D3Pipeline:
         eb, rb, vb, fb, qb = self._build_batches(edges, feats,
                                                  queries=queries)
         now = jnp.asarray(self.now, jnp.int32)
+        if self.n_stages > 1:
+            (self.topo, new_states, self.sink, self.sink_seen,
+             self.queries, self.stage_ring, stats_all, idle, answers,
+             qstats) = _tick_jit_2d(
+                self.rounds, self._staged_params(), self.topo,
+                tuple(self.states), self.sink, self.sink_seen,
+                self.queries, self.stage_ring, fb, eb, rb, vb, qb, now,
+                wconf, cfg.outbox(), self.router, self.delivery,
+                self.mesh, cfg.delta_eps)
+            self.states = list(new_states)
+            self.now += 1
+            self._harvest_answers(answers)
+            per_layer = self._unstack_stats(jax.device_get(stats_all))
+            self.metrics.stage_idle += int(np.sum(jax.device_get(idle)))
+            self._accumulate(per_layer, time.perf_counter() - t0,
+                             qstats=qstats)
+            return per_layer
         (self.topo, new_states, self.sink, self.sink_seen, self.queries,
          stats_all, answers, qstats) = _tick_jit(
             tuple(self.layers), self.params, self.topo, tuple(self.states),
@@ -614,6 +892,35 @@ class D3Pipeline:
         batches = self._stage_super_batches(edge_chunks, feat_chunks,
                                             query_chunks)
 
+        if self.n_stages > 1:
+            carry = st.PipelineCarry(
+                topo=self.topo, layers=tuple(self.states), sink=self.sink,
+                sink_seen=self.sink_seen, queries=self.queries,
+                now=jnp.asarray(self.now, jnp.int32),
+                quiet=jnp.asarray(quiet0, jnp.int32),
+                stage_ring=self.stage_ring)
+            (final, stats_sum, idle_sum, qstats_sum,
+             answers) = _super_tick_scan_2d(
+                self.rounds, self._staged_params(), carry, batches,
+                window or cfg.window, cfg.outbox(), self.router,
+                self.delivery, self.mesh, cfg.delta_eps)
+            self.topo = final.topo
+            self.states = list(final.layers)
+            self.sink = final.sink
+            self.sink_seen = final.sink_seen
+            self.queries = final.queries
+            self.stage_ring = final.stage_ring
+            self.now += T
+            (host_stats, quiet, host_idle, host_qstats,
+             host_answers) = jax.device_get(
+                (stats_sum, final.quiet, idle_sum, qstats_sum, answers))
+            self._harvest_answers(host_answers)
+            per_layer = self._unstack_stats(host_stats)
+            self.metrics.stage_idle += int(np.sum(host_idle))
+            self._accumulate(per_layer, time.perf_counter() - t0,
+                             ticks=T, qstats=host_qstats)
+            return per_layer, int(quiet)
+
         carry = st.PipelineCarry(
             topo=self.topo, layers=tuple(self.states), sink=self.sink,
             sink_seen=self.sink_seen, queries=self.queries,
@@ -699,7 +1006,10 @@ class D3Pipeline:
         override = win.WindowConfig(kind=win.STREAMING) if drain else None
         for i in range(max_ticks):
             stats = self.tick(window=override)
-            if term.observe(self.states, stats, queries=self.queries):
+            # in-flight inter-stage rows are pending work the host cannot
+            # see in the layer states (0 on a 1-D mesh)
+            if term.observe(self.states, stats, queries=self.queries,
+                            extra_work=self._ring_occupancy_host()):
                 return i + 1
         raise RuntimeError("pipeline failed to terminate "
                            f"within {max_ticks} flush ticks")
@@ -876,5 +1186,187 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
                         in_specs=(P(), cp, P()),
                         out_specs=(cp, stats_pspecs(len(layers)), P(),
                                    P(None, "data")),
+                        check_rep=False)
+    return sharded(params, carry, batches)
+
+
+# --------------------------------------------- hybrid-parallel pipeline
+def _tick_program_2d(rounds, params, topo, states, sink, sink_seen,
+                     queries, ring, inbox, eb, rb, vb, qb, now, wconf,
+                     outbox_cap, router, delivery, delta_eps=0.0):
+    """ONE micro-tick of the LAYER-PIPELINED program (ISSUE 7) — the
+    shard_map body on a 2-D ("stage", "data") mesh.
+
+    Layer l = r*S + s lives on stage s and runs at round r; each tick
+    every stage runs its R = L // S rounds against inputs one hop
+    behind: round r's inbox is what the PREVIOUS stage shifted into ring
+    slot r last tick, except stage 0 — whose round 0 reads the host
+    feature inbox and whose round r > 0 reads slot r-1 (the wrap hop
+    from stage S-1's round r-1). Every round's outbox is ppermute'd to
+    the next stage IMMEDIATELY after its compute (`stage_shift`) so the
+    hop overlaps the remaining rounds' work (double buffering). The
+    final layer's rows reach the stage-replicated sink SAME-tick via
+    `stage_last`; the redundant wrap copy stage 0 receives in slot R-1
+    has its valid column zeroed — it is never a round input.
+
+    Topology batches are stage-replicated and applied identically on
+    every stage; the query plane runs identically per stage (its wire
+    lane rides round 0's exchange on EVERY stage, which keeps QueryState
+    stage-replicated — wire-row telemetry therefore counts the lane S
+    times, once per stage's round-0 layer). Per-layer stats stay
+    data-psum'd only: each stage's round-r scalars describe layer r*S+s,
+    left as [1]-shaped leaves that stack to [S] over the stage out-spec.
+    """
+    R = len(rounds)
+    part0 = router.part0()
+    topo = st.apply_vertex_batch(topo, vb, part0)
+    topo = st.apply_repl_batch(topo, rb, part0)
+    topo = st.apply_edge_batch(topo, eb, part0)
+    batch_work = (jnp.any(inbox.valid) | jnp.any(eb.valid)
+                  | jnp.any(rb.valid))
+    ring = ring[0]                            # local [R, C_buf, W_fb]
+    d = states[0].feat.shape[-1]
+    proto = ev.empty_feat_batch(ring.shape[1], d)
+    vcol = field_col(proto, "valid")
+    occ0 = jnp.sum((ring[..., vcol] > 0.5).astype(jnp.int32))
+    sq = lambda t: jax.tree.map(lambda a: a[0], t)
+    ex = lambda t: jax.tree.map(lambda a: a[None], t)
+    sq_states = [sq(s) for s in states]
+    queries, wire, adm_drop, n_adm = query_admit_stage(
+        queries, qb, sq_states, sink, sink_seen, router, batch_work,
+        extra_work=occ0)
+    host_rows = pad_lane(pack_lane(inbox), ring.shape[1])
+    is0 = router.stage_index() == 0
+    wire_d = None
+    new_states, stats_all, new_slots, idle = [], [], [], []
+    out_rows = None
+    for r in range(R):
+        if r == 0:
+            rows_in = jnp.where(is0, host_rows, ring[0])
+        else:
+            rows_in = jnp.where(is0, ring[r - 1], ring[r])
+        round_inbox = unpack_lane(rows_in, proto)
+        idle.append((~jnp.any(round_inbox.valid)).astype(jnp.int32))
+        extra = ((wire, (queries.wire_defer, queries.wire_defer_ok))
+                 if r == 0 and wire is not None else None)
+        ls, outbox, stats, extra_out = layer_tick_body(
+            rounds[r], sq(params[f"r{r}"]), topo, sq_states[r],
+            round_inbox, eb, rb, now, wconf, outbox_cap, router,
+            delivery, extra_lane=extra, delta_eps=delta_eps)
+        if extra is not None:
+            wire_d, (wdb, wdo) = extra_out
+            queries = replace(queries, wire_defer=wdb, wire_defer_ok=wdo)
+        new_states.append(ls)
+        stats_all.append(stats)
+        out_rows = pad_lane(pack_lane(outbox), ring.shape[1])
+        # DOUBLE BUFFER: post the hop now — the remaining rounds' compute
+        # overlaps the transfer
+        new_slots.append(router.stage_shift(out_rows))
+    # same-tick sink feed: the LAST stage's final-round outbox, delivered
+    # to every stage's replica of the sink
+    final_fb = unpack_lane(router.stage_last(out_rows), proto)
+    sink, sink_seen = _sink_update_body(sink, sink_seen, final_fb, part0)
+    # the wrap copy stage 0 received in slot R-1 is the final layer's
+    # outbox again (already materialized above) — never a round input
+    last = new_slots[R - 1]
+    last = last.at[:, vcol].set(jnp.where(is0, 0.0, last[:, vcol]))
+    new_slots[R - 1] = last
+    new_ring = jnp.stack(new_slots)[None]     # back to [1, R, C_buf, W]
+    occ1 = jnp.sum((new_ring[0, ..., vcol] > 0.5).astype(jnp.int32))
+    queries, ans, qstats = query_answer_stage(
+        queries, wire_d, qb, adm_drop, n_adm, tuple(new_states), sink,
+        sink_seen, now, stats_all, router, extra_work=occ1)
+    idle_v = router.psum(jnp.stack(idle))[None]   # [1, R] -> [S, R]
+    return (topo, tuple(ex(s) for s in new_states), sink, sink_seen,
+            queries, new_ring, tuple(ex(s) for s in stats_all), idle_v,
+            ans, qstats)
+
+
+@partial(jax.jit, static_argnames=("rounds", "wconf", "outbox_cap",
+                                   "router", "delivery", "mesh",
+                                   "delta_eps"))
+def _tick_jit_2d(rounds, params, topo, states, sink, sink_seen, queries,
+                 ring, inbox, eb, rb, vb, qb, now, wconf, outbox_cap,
+                 router, delivery, mesh, delta_eps=0.0):
+    """The per-tick driver's device program on the 2-D mesh."""
+    def prog(params, topo, states, sink, sink_seen, queries, ring, inbox,
+             eb, rb, vb, qb, now):
+        return _tick_program_2d(
+            rounds, params, topo, states, sink, sink_seen, queries, ring,
+            inbox, eb, rb, vb, qb, now, wconf, outbox_cap, router,
+            delivery, delta_eps)
+
+    cp = stage_carry_pspecs(len(rounds))
+    pspec = jax.tree.map(lambda _: P("stage"), params)
+    sharded = shard_map(
+        prog, mesh=mesh,
+        in_specs=(pspec, cp.topo, cp.layers, cp.sink, cp.sink_seen,
+                  cp.queries, cp.stage_ring, P(), P(), P(), P(), P(),
+                  P()),
+        out_specs=(cp.topo, cp.layers, cp.sink, cp.sink_seen, cp.queries,
+                   cp.stage_ring, stage_stats_pspecs(len(rounds)),
+                   P("stage"), P("data"), P()),
+        check_rep=False)
+    return sharded(params, topo, states, sink, sink_seen, queries, ring,
+                   inbox, eb, rb, vb, qb, now)
+
+
+@partial(jax.jit, static_argnames=("rounds", "wconf", "outbox_cap",
+                                   "router", "delivery", "mesh",
+                                   "delta_eps"),
+         donate_argnums=(2,))
+def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
+                        wconf: win.WindowConfig, outbox_cap: int, router,
+                        delivery=None, mesh=None, delta_eps=0.0):
+    """T micro-ticks of the PIPELINED program as one `lax.scan`.
+
+    Same contract as `_super_tick_scan` plus: the donated carry includes
+    the inter-stage ring (in-flight rows stay device-resident between
+    ticks AND between super-ticks), quiescence counts ring occupancy as
+    pending work (a flush super-tick keeps draining until the skewed
+    tail has telescoped through every stage), and a third summed output
+    carries the [S, R] idle-device-round bubble counters."""
+    R = len(rounds)
+
+    def scan_prog(params, carry, batches):
+        n_parts_loc = carry.topo.n_parts      # LOCAL block under mesh
+        sq = lambda t: jax.tree.map(lambda a: a[0], t)
+
+        def body(state, batch_t):
+            c, ssum, isum, qsum = state
+            fb, eb, rb, vb, qb = batch_t
+            (topo, new_layers, sink, sink_seen, queries, ring, stats_t,
+             idle_t, ans, qstats_t) = _tick_program_2d(
+                rounds, params, c.topo, c.layers, c.sink, c.sink_seen,
+                c.queries, c.stage_ring, fb, eb, rb, vb, qb, c.now,
+                wconf, outbox_cap, router, delivery, delta_eps)
+            # rows still in flight between stages are pending work; the
+            # valid flag packs LAST in a FeatBatch wire row
+            occ = jnp.sum((ring[0, ..., -1] > 0.5).astype(jnp.int32))
+            quiet = quiet_update(c.quiet, [sq(s) for s in new_layers],
+                                 [sq(s) for s in stats_t], router,
+                                 queries=queries, extra_work=occ)
+            new_c = st.PipelineCarry(
+                topo=topo, layers=new_layers, sink=sink,
+                sink_seen=sink_seen, queries=queries,
+                now=c.now + jnp.int32(1), quiet=quiet, stage_ring=ring)
+            ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
+            return (new_c, ssum, isum + idle_t,
+                    add_query_stats(qsum, qstats_t)), ans
+
+        zeros = tuple(jax.tree.map(lambda a: a[None],
+                                   zero_stats(n_parts_loc))
+                      for _ in range(R))
+        izero = jnp.zeros((1, R), jnp.int32)
+        (final, ssum, isum, qsum), answers = jax.lax.scan(
+            body, (carry, zeros, izero, zero_query_stats()), batches)
+        return final, ssum, isum, qsum, answers
+
+    cp = stage_carry_pspecs(R)
+    pspec = jax.tree.map(lambda _: P("stage"), params)
+    sharded = shard_map(scan_prog, mesh=mesh,
+                        in_specs=(pspec, cp, P()),
+                        out_specs=(cp, stage_stats_pspecs(R), P("stage"),
+                                   P(), P(None, "data")),
                         check_rep=False)
     return sharded(params, carry, batches)

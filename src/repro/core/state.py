@@ -121,6 +121,11 @@ class PipelineCarry:
                                   # compiles the query plane away)
     now: jnp.ndarray              # int32 scalar — the tick clock
     quiet: jnp.ndarray            # int32 scalar — consecutive quiescent ticks
+    stage_ring: object = None     # hybrid-parallel in-flight inter-stage
+                                  # outboxes, packed f32 [S, R, D*C, W_fb]
+                                  # (None on 1-D meshes: the field flattens
+                                  # to zero leaves and the carry pytree is
+                                  # unchanged from the stage-free program)
 
 
 for _cls, _df in (
@@ -132,7 +137,7 @@ for _cls, _df in (
                   "cms", "last_touch", "bc_defer", "bc_defer_ok",
                   "rmi_defer", "rmi_defer_ok"]),
     (PipelineCarry, ["topo", "layers", "sink", "sink_seen", "queries",
-                     "now", "quiet"]),
+                     "now", "quiet", "stage_ring"]),
 ):
     jax.tree_util.register_dataclass(_cls, data_fields=_df, meta_fields=[])
 

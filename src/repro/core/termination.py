@@ -37,10 +37,13 @@ def moved_msgs(tick_stats):
         + tick_stats.broadcast_msgs
 
 
-def pending_work(layer_states, queries=None) -> jnp.ndarray:
+def pending_work(layer_states, queries=None, extra_work=None) -> jnp.ndarray:
     """LOCAL in-flight-work count (int32): window timers + the routing
     plane's per-lane defer rings (both via `has_work`) + the query
-    plane's wire-lane backlog when a QueryState is given.
+    plane's wire-lane backlog when a QueryState is given + any
+    `extra_work` count the caller carries (the hybrid-parallel pipeline
+    passes its inter-stage ring occupancy here, so records in flight
+    between stages hold quiescence off exactly like deferred wire rows).
 
     This is THE single aggregation every quiescence / silence gate uses —
     `quiet_update` (super-tick scan), `TerminationCoordinator.observe`
@@ -53,27 +56,39 @@ def pending_work(layer_states, queries=None) -> jnp.ndarray:
         timers = timers + has_work(ls).astype(jnp.int32)
     if queries is not None:
         timers = timers + jnp.sum(queries.wire_defer_ok.astype(jnp.int32))
+    if extra_work is not None:
+        timers = timers + jnp.asarray(extra_work, jnp.int32)
     return timers
 
 
 def quiet_update(quiet: jnp.ndarray, layer_states, tick_stats,
-                 router=None, queries=None) -> jnp.ndarray:
+                 router=None, queries=None, extra_work=None) -> jnp.ndarray:
     """One in-graph step of quiescence tracking.
 
     quiet: int32 scalar — consecutive ticks with no movement and no
     in-flight work (`pending_work`: window timers, routing-plane defer
-    rings, the query plane's wire backlog when `queries` is given).
+    rings, the query plane's wire backlog when `queries` is given, plus
+    the caller's `extra_work` — e.g. inter-stage ring occupancy).
     Resets to 0 on any emission/reduce/broadcast or pending work.
     Under a sharded tick (`router=MeshRouter`) the pending-work vote is
-    psum'd so every device agrees on the same counter (the stats scalars
-    are already globally reduced by the tick body).
+    globally reduced (`psum_vote`: both mesh axes on a hybrid 2-D mesh)
+    so every device agrees on the same counter. On a 1-D mesh the stats
+    scalars are already globally reduced by the tick body; on a 2-D mesh
+    each stage's scalars cover only ITS layers, so the movement vote is
+    additionally psum'd over the stage axis.
     """
-    moved = jnp.zeros((), bool)
-    for s in tick_stats:
-        moved = moved | (moved_msgs(s) > 0)
-    timers = pending_work(layer_states, queries)
+    if router is not None and getattr(router, "n_stages", 1) > 1:
+        moved_n = jnp.zeros((), jnp.int32)
+        for s in tick_stats:
+            moved_n = moved_n + moved_msgs(s)
+        moved = router.psum_stage(moved_n) > 0
+    else:
+        moved = jnp.zeros((), bool)
+        for s in tick_stats:
+            moved = moved | (moved_msgs(s) > 0)
+    timers = pending_work(layer_states, queries, extra_work)
     if router is not None:
-        timers = router.psum(timers)
+        timers = router.psum_vote(timers)
     return jnp.where(moved | (timers > 0), jnp.int32(0),
                      quiet + jnp.int32(1))
 
@@ -94,13 +109,15 @@ class TerminationCoordinator:
         streaks must survive the host round-trip between launches."""
         return self._quiet
 
-    def observe(self, layer_states, tick_stats, queries=None) -> bool:
+    def observe(self, layer_states, tick_stats, queries=None,
+                extra_work=None) -> bool:
         """Feed one tick's observations; True once terminated.
         queries: optional QueryState — votes the wire-lane backlog as
         pending work (same `pending_work` aggregation as the device
-        paths)."""
+        paths). extra_work: host-side in-flight count (the per-tick
+        driver passes the hybrid pipeline's stage-ring occupancy)."""
         moved = any(int(moved_msgs(s)) for s in tick_stats)
-        if moved or bool(pending_work(layer_states, queries)):
+        if moved or bool(pending_work(layer_states, queries, extra_work)):
             self._quiet = 0
         else:
             self._quiet += 1

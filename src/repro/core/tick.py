@@ -42,6 +42,20 @@ ids offset by `part0`), so the identical body runs on one device
 Scalar TickStats are reduced through `router.psum`; the per-part `busy`
 vector stays local and is concatenated by the shard_map out-spec.
 
+Stage placement (hybrid parallelism, ISSUE 7): on a 2-D ("stage",
+"data") mesh this same body also runs unmodified per PIPELINE STAGE —
+the L layers are placed round-robin on the stage axis (layer l = round
+r * S + s lives on stage s) and `core/pipeline.py:_tick_program_2d`
+calls `layer_tick_body` once per ROUND with that stage's slice of the
+stacked layer state. The inbox then comes from the inter-stage ring (the
+previous stage's last-tick outbox, shipped by `MeshRouter.stage_shift`)
+instead of the same-tick output of the previous layer; `router.psum`
+still reduces over "data" only, so each stage's TickStats describe ITS
+layers and the host unstacks them back into per-layer stats. Quiescence
+and consistent-query silence use `router.psum_vote` (both axes) — a
+single stage's quiet never terminates the pipeline while another stage
+or the ring still holds work.
+
 Windowing replaces "emit now" with deadline tables:
   inter-layer window -> delays the reduce of a source vertex (red_*),
   intra-layer window -> delays the forward/psi-emission of a master (fwd_*).

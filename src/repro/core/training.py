@@ -211,11 +211,13 @@ class TrainingCoordinator:
         """Loss + per-part grads via the layered backward."""
         pipe = self.pipe
         topo = pipe.topo
-        # caches from the quiescent forward state
-        feats = [ls.feat for ls in pipe.states]
-        has = [ls.has_feat for ls in pipe.states]
-        aggs = [ls.agg for ls in pipe.states]
-        cnts = [ls.agg_cnt for ls in pipe.states]
+        # caches from the quiescent forward state (layer_state unstacks the
+        # hybrid engine's per-round stage stacks; identity on a 1-D mesh)
+        states = [pipe.layer_state(l) for l in range(len(pipe.layers))]
+        feats = [ls.feat for ls in states]
+        has = [ls.has_feat for ls in states]
+        aggs = [ls.agg for ls in states]
+        cnts = [ls.agg_cnt for ls in states]
         x_L = pipe.sink
         seen = pipe.sink_seen
 
@@ -274,13 +276,13 @@ class TrainingCoordinator:
         """Phases 2+3: layer-by-layer re-aggregation and update with the
         refreshed model; refreshes the engine caches and the sink."""
         pipe = self.pipe
-        feat = pipe.states[0].feat
-        has = pipe.states[0].has_feat
+        feat = pipe.layer_state(0).feat
+        has = pipe.layer_state(0).has_feat
         for li, layer in enumerate(pipe.layers):
             nf, nh, agg, cnt = rebuild_layer(layer, pipe.params[f"l{li}"],
                                              pipe.topo, feat, has)
-            st = pipe.states[li]
-            pipe.states[li] = LayerState(
+            st = pipe.layer_state(li)
+            pipe.set_layer_state(li, LayerState(
                 feat=feat, has_feat=has, x_sent=feat, has_sent=has,
                 agg=agg, agg_cnt=cnt,
                 red_pending=jnp.zeros_like(st.red_pending),
@@ -289,7 +291,7 @@ class TrainingCoordinator:
                 fwd_deadline=st.fwd_deadline, cms=st.cms,
                 last_touch=st.last_touch,
                 bc_defer=st.bc_defer, bc_defer_ok=st.bc_defer_ok,
-                rmi_defer=st.rmi_defer, rmi_defer_ok=st.rmi_defer_ok)
+                rmi_defer=st.rmi_defer, rmi_defer_ok=st.rmi_defer_ok))
             feat, has = nf, nh
         # masters' final embeddings -> sink
         is_m = pipe.topo.is_master

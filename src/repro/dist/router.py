@@ -27,6 +27,19 @@ The streaming tick is split into four planes (ISSUE 2-5):
     state the other three maintain; its link-score wire hop rides
     `route_lanes` fused with layer 0's round-B exchange.
 
+Hybrid parallelism (ISSUE 7): on a 2-D ("stage", "data") mesh the L GNN
+layers are placed round-robin on the stage axis (layer l lives on stage
+l % S) and MeshRouter gains a second, inter-stage lane: `stage_shift`
+posts each round's outbox to the next stage with one circular
+`lax.ppermute` immediately after that round's compute (double-buffered —
+the hop for round r overlaps round r+1's intra-stage all_to_all), and
+`stage_last` rides the final stage's exchange back so every stage can
+apply the same sink update. All data-plane collectives (`route_lanes`,
+`psum`, `part0`) stay scoped to the "data" axis — inside a stage row
+they behave exactly as on the 1-D mesh — while quiescence/silence VOTES
+go through `psum_vote` (both axes) so no stage can declare the dataflow
+quiet while another still has records in flight.
+
 Traffic-adaptive capped exchange (ISSUE 5 tentpole): the per-destination
 send bucket holds `route_cap` rows (default None = the lane's full
 emission capacity C — the pre-ISSUE-5 worst-case sizing, under which no
@@ -145,6 +158,17 @@ class LocalRouter:
     def psum(self, x):
         return x
 
+    # stage-axis interface (trivial here: LocalRouter never runs with
+    # n_stages > 1 — PipelineConfig.validate rejects the combination —
+    # but shared code paths in serve/termination call these)
+    n_stages = 1
+
+    def psum_stage(self, x):
+        return x
+
+    def psum_vote(self, x):
+        return x
+
 
 @dataclass(frozen=True)
 class MeshRouter:
@@ -160,12 +184,17 @@ class MeshRouter:
     pack_backend: how route_pack places rows into the send buffer
                   ("xla" scatter | "pallas" one-hot MXU pass); follows
                   PipelineConfig.delivery_backend.
+    stage_axis  : name of the pipeline-stage mesh axis, or None on the
+                  1-D mesh. n_devices always counts the DATA axis only —
+                  parts shard within a stage row, never across stages.
     """
     n_parts: int
     n_devices: int
     axis: str = "data"
     route_cap: Optional[int] = None
     pack_backend: str = "xla"
+    stage_axis: Optional[str] = None
+    n_stages: int = 1
 
     @property
     def n_local_parts(self) -> int:
@@ -177,6 +206,42 @@ class MeshRouter:
 
     def psum(self, x):
         return lax.psum(x, self.axis)
+
+    # ---- stage-axis interface (hybrid parallelism, ISSUE 7) ----------
+    # Valid inside a shard_map that names `stage_axis`; on a 1-D router
+    # (stage_axis=None) every method degrades to its data-plane
+    # counterpart so shared call sites trace the exact pre-ISSUE-7 HLO.
+
+    def psum_stage(self, x):
+        """Reduce over the stage axis only (identity on a 1-D mesh)."""
+        if self.stage_axis is None:
+            return x
+        return lax.psum(x, self.stage_axis)
+
+    def psum_vote(self, x):
+        """Global reduction for quiescence/silence votes: both axes on a
+        2-D mesh, plain data psum on a 1-D mesh."""
+        if self.stage_axis is None:
+            return lax.psum(x, self.axis)
+        return lax.psum(x, (self.stage_axis, self.axis))
+
+    def stage_index(self):
+        return lax.axis_index(self.stage_axis).astype(jnp.int32)
+
+    def stage_shift(self, rows):
+        """Post packed rows to the next stage: one circular ppermute
+        (stage s -> s + 1 mod S) within each data column. Called right
+        after each round's compute so the hop is double-buffered behind
+        the next round's work."""
+        S = self.n_stages
+        return lax.ppermute(rows, self.stage_axis,
+                            [(i, (i + 1) % S) for i in range(S)])
+
+    def stage_last(self, rows):
+        """Every stage's copy of the LAST stage's rows (the final GNN
+        layer lives on stage S-1; its outbox must reach every stage's
+        replicated sink/serve plane in the same tick)."""
+        return lax.all_gather(rows, self.stage_axis)[self.n_stages - 1]
 
     def lane_cap(self, capacity: int) -> int:
         """Resolved per-destination bucket rows for a lane of the given

@@ -143,3 +143,72 @@ def stats_pspecs(n_layers: int, axis: str = "data"):
                     route_deferred=P(), route_dropped=P(),
                     n_suppressed=P(), busy=P(axis))
     return tuple(one for _ in range(n_layers))
+
+
+# -------------------------------------- hybrid 2-D ("stage","data") mesh
+# Placement of the layer-pipelined carry (ISSUE 7): layer tables are
+# STACKED per round with a leading stage axis (round r's leaf holds layer
+# r*S+s at stage index s) and sharded over BOTH axes; every other carry
+# field keeps its 1-D placement — part arrays shard over "data" and
+# replicate per stage (topo/sink/queries are maintained identically on
+# every stage), the per-layer CMS shards over "stage" only, and the
+# clock/quiet scalars replicate globally (their updates go through
+# psum_vote over both axes). The inter-stage ring is stage-sharded on its
+# leading axis and data-sharded on its row axis.
+
+def _stage_carry_tree(n_rounds: int, part, part2, stage, rep, ring):
+    """PipelineCarry-shaped tree for the pipelined program: `part2` at
+    stacked per-round layer leaves, `stage` at the stacked CMS, `part` at
+    stage-replicated part tables, `rep` at scalars, `ring` at stage_ring."""
+    from repro.core.state import LayerState, PipelineCarry, TopoState
+    from repro.serve.query import QueryState
+    topo = TopoState(
+        e_src_slot=part, e_dst_slot=part, e_dst_mpart=part, e_dst_mslot=part,
+        e_valid=part, r_master_slot=part, r_rep_part=part, r_rep_slot=part,
+        r_valid=part, v_exists=part, is_master=part)
+    layer = LayerState(
+        feat=part2, has_feat=part2, x_sent=part2, has_sent=part2, agg=part2,
+        agg_cnt=part2, red_pending=part2, red_deadline=part2,
+        fwd_pending=part2, fwd_deadline=part2, cms=stage, last_touch=part2,
+        bc_defer=part2, bc_defer_ok=part2, rmi_defer=part2,
+        rmi_defer_ok=part2)
+    queries = QueryState(
+        qid=part, kind=part, slot=part, part2=part, slot2=part,
+        consistent=part, ok=part, issue=part, vec=part, pending=part,
+        wire_defer=part, wire_defer_ok=part)
+    return PipelineCarry(topo=topo, layers=(layer,) * n_rounds, sink=part,
+                         sink_seen=part, queries=queries, now=rep, quiet=rep,
+                         stage_ring=ring)
+
+
+def stage_carry_pspecs(n_rounds: int, stage_axis: str = "stage",
+                       axis: str = "data"):
+    """PartitionSpec tree for the pipelined PipelineCarry (shard_map
+    in/out specs of `_tick_program_2d`)."""
+    return _stage_carry_tree(
+        n_rounds, P(axis), P(stage_axis, axis), P(stage_axis), P(),
+        P(stage_axis, None, axis))
+
+
+def stage_carry_shardings(mesh: Mesh, n_rounds: int,
+                          stage_axis: str = "stage", axis: str = "data"):
+    """NamedSharding tree for device_put-ing the pipelined carry."""
+    ns = lambda spec: NamedSharding(mesh, spec)
+    return _stage_carry_tree(
+        n_rounds, ns(P(axis)), ns(P(stage_axis, axis)), ns(P(stage_axis)),
+        ns(P()), ns(P(stage_axis, None, axis)))
+
+
+def stage_stats_pspecs(n_rounds: int, stage_axis: str = "stage",
+                       axis: str = "data"):
+    """Per-ROUND TickStats out-specs for the pipelined tick: each stage's
+    scalars cover its own layer of the round (data-psum'd only), so they
+    leave the shard_map as [1]-shaped leaves stacked to [S] over the
+    stage axis; busy leaves as [1, P_loc] stacked to [S, n_parts]. The
+    host unstacks layer l = r*S + s from (round r)[s]."""
+    from repro.core.tick import TickStats
+    s, b = P(stage_axis), P(stage_axis, axis)
+    one = TickStats(broadcast_msgs=s, reduce_msgs=s, cross_part_msgs=s,
+                    emitted=s, dropped=s, wire_rows=s, route_deferred=s,
+                    route_dropped=s, n_suppressed=s, busy=b)
+    return tuple(one for _ in range(n_rounds))

@@ -88,6 +88,23 @@ def unpack_lane(buf: jnp.ndarray, proto):
     return jax.tree.unflatten(treedef, out)
 
 
+def pad_lane(rows: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Zero-pad packed wire rows [C, W] up to [capacity, W].
+
+    Zero rows unpack as valid=False padding (every lane batch carries a
+    bool `valid` column; 0.0 > 0.5 is False), so padded rows are inert at
+    delivery. The inter-stage ring of the hybrid-parallel pipeline uses
+    this to give the host feature inbox (capacity feat_cap) and the layer
+    outboxes (capacity P_loc * cap_pp) ONE common slot shape, letting a
+    single `stage_shift` ppermute carry either."""
+    C, W = rows.shape
+    assert C <= capacity, f"pad_lane: rows {C} exceed slot capacity {capacity}"
+    if C == capacity:
+        return rows
+    return jnp.concatenate(
+        [rows, jnp.zeros((capacity - C, W), rows.dtype)])
+
+
 def init_defer(rows: int, width: int):
     """An empty defer ring: (packed rows [rows, width] f32, occupied [rows]).
 

@@ -197,13 +197,18 @@ class CheckpointManager:
         }
         tree = {"topo": pipe.topo, "layers": pipe.states, "sink": pipe.sink,
                 "sink_seen": pipe.sink_seen, "queries": pipe.queries,
-                "params": pipe.params}
+                "params": pipe.params,
+                # hybrid-parallel pipelines DO have a non-empty channel at
+                # the tick cut: the inter-stage ring's in-flight rows ride
+                # the snapshot (None on a 1-D mesh — zero leaves)
+                "stage_ring": getattr(pipe, "stage_ring", None)}
         self.save(step, tree, meta={"now": pipe.now}, aux=aux)
 
     def restore_pipeline(self, pipe, step: int | None = None) -> int:
         template = {"topo": pipe.topo, "layers": pipe.states,
                     "sink": pipe.sink, "sink_seen": pipe.sink_seen,
-                    "queries": pipe.queries, "params": pipe.params}
+                    "queries": pipe.queries, "params": pipe.params,
+                    "stage_ring": getattr(pipe, "stage_ring", None)}
         tree, got_step = self.restore(template, step)
         pipe.topo = tree["topo"]
         pipe.states = tree["layers"]
@@ -211,6 +216,8 @@ class CheckpointManager:
         pipe.sink_seen = tree["sink_seen"]
         pipe.queries = tree["queries"]
         pipe.params = tree["params"]
+        if tree.get("stage_ring") is not None:
+            pipe.stage_ring = tree["stage_ring"]
         h = self.restore_aux(got_step)
         t = pipe.part.t
         t.degree = np.asarray(h["degree"])

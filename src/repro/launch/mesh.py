@@ -18,14 +18,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_stream_mesh(n_devices: int | None = None):
-    """1-D ("data",) mesh for the streaming engine's part axis.
+def make_stream_mesh(n_devices: int | None = None, stage: int = 1):
+    """Mesh for the streaming engine: 1-D ("data",) or 2-D ("stage", "data").
 
     `D3Pipeline(mesh=make_stream_mesh())` shards the part axis of the
-    tick over it (MeshRouter). Defaults to all visible devices; to force a
-    multi-device CPU mesh for tests set
+    tick over the "data" axis (MeshRouter). Defaults to all visible
+    devices; to force a multi-device CPU mesh for tests set
     XLA_FLAGS=--xla_force_host_platform_device_count=N before first jax
     use (see the "Distributed execution" README section).
+
+    stage > 1 (hybrid parallelism, ISSUE 7) reshapes the same devices
+    into a ("stage", "data") grid of `stage` pipeline stages x
+    n_devices // stage data shards: the L GNN layers are placed
+    round-robin on the stage axis and micro-ticks flow through them as a
+    circular pipeline (set PipelineConfig.n_stages to match). stage=1
+    (default) returns the exact 1-D mesh of every prior release — the
+    pipelined code path is never entered.
     """
     import numpy as np
     from jax.sharding import Mesh
@@ -35,7 +43,16 @@ def make_stream_mesh(n_devices: int | None = None):
     if n > len(devs):
         raise ValueError(f"requested {n} devices, only {len(devs)} visible "
                          "(forgot --xla_force_host_platform_device_count?)")
-    return Mesh(np.asarray(devs[:n]), ("data",))
+    stage = int(stage)
+    if stage <= 1:
+        return Mesh(np.asarray(devs[:n]), ("data",))
+    if n % stage:
+        raise ValueError(
+            f"requested {n} devices over stage={stage} pipeline stages: "
+            "the device count must be a multiple of the stage count "
+            f"(each stage gets {n} / {stage} data shards)")
+    return Mesh(np.asarray(devs[:n]).reshape(stage, n // stage),
+                ("stage", "data"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

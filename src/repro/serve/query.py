@@ -337,22 +337,30 @@ def _empty_answers(d: int) -> AnswerBatch:
         score=jnp.zeros((0,), jnp.float32), valid=jnp.zeros((0,), bool))
 
 
-def _plane_work(qs: QueryState, layer_states):
+def _plane_work(qs: QueryState, layer_states, router=None, extra_work=None):
     """The shared inputs of BOTH silence gates (start and end of tick):
     per-row clean flags (no red/fwd pending at any layer for that target
     row) and the local pending-work count — the SAME
     `termination.pending_work` aggregation the quiescence gates use, so
     the consistent-snapshot guarantee and flush termination can never
-    disagree about what counts as in-flight."""
+    disagree about what counts as in-flight.
+
+    On a hybrid 2-D mesh each stage holds only ITS layers' states, so
+    the per-row dirty flags are OR'd across the stage axis (a row is
+    dirty if ANY layer anywhere still has it pending) and the caller's
+    `extra_work` carries the inter-stage ring occupancy."""
     P_loc, N = layer_states[0].red_pending.shape
     dirty = jnp.zeros((P_loc, N), bool)
     for ls in layer_states:
         dirty = dirty | ls.red_pending | ls.fwd_pending
-    return ~dirty.reshape(P_loc * N), pending_work(layer_states, qs)
+    if router is not None and getattr(router, "n_stages", 1) > 1:
+        dirty = router.psum_stage(dirty.astype(jnp.int32)) > 0
+    return (~dirty.reshape(P_loc * N),
+            pending_work(layer_states, qs, extra_work))
 
 
 def query_admit_stage(qs: QueryState, qb: QueryBatch, layer_states, sink,
-                      sink_seen, router, batch_work):
+                      sink_seen, router, batch_work, extra_work=None):
     """START-of-tick half of the query plane (before the layer ticks).
 
     1. admit the host's new queries (replicated batch, local filter);
@@ -379,8 +387,8 @@ def query_admit_stage(qs: QueryState, qb: QueryBatch, layer_states, sink,
     N = sink.shape[1]
     sink_flat = sink.reshape(P_loc * N, d)
     seen_flat = sink_seen.reshape(P_loc * N)
-    clean_flat, work = _plane_work(qs, layer_states)
-    silent_start = (router.psum(work) == 0) & ~batch_work
+    clean_flat, work = _plane_work(qs, layer_states, router, extra_work)
+    silent_start = (router.psum_vote(work) == 0) & ~batch_work
 
     qs, n_adm, drop = admit(qs, qb, part0)
 
@@ -417,7 +425,7 @@ def query_admit_stage(qs: QueryState, qb: QueryBatch, layer_states, sink,
 
 def query_answer_stage(qs: QueryState, wire_d, qb: QueryBatch, drop1,
                        n_adm, layer_states, sink, sink_seen, now,
-                       stats_all, router):
+                       stats_all, router, extra_work=None):
     """END-of-tick half: runs AFTER the sink update so answers read the
     freshest representations.
 
@@ -446,11 +454,14 @@ def query_answer_stage(qs: QueryState, wire_d, qb: QueryBatch, drop1,
     N = sink.shape[1]
     sink_flat = sink.reshape(P_loc * N, d)
     seen_flat = sink_seen.reshape(P_loc * N)
-    clean_flat, timers = _plane_work(qs, layer_states)
+    clean_flat, timers = _plane_work(qs, layer_states, router, extra_work)
     moved = jnp.zeros((), jnp.int32)
     for s in stats_all:
         moved = moved + s.emitted + s.reduce_msgs + s.broadcast_msgs
-    silent = (moved == 0) & (router.psum(timers) == 0)
+    if getattr(router, "n_stages", 1) > 1:
+        # 2-D mesh: stats cover this stage's layers only — globalize
+        moved = router.psum_stage(moved)
+    silent = (moved == 0) & (router.psum_vote(timers) == 0)
 
     qs, n_adm2, drop2 = admit(qs, wire_d, part0)
 

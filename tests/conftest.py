@@ -8,10 +8,44 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false "
                                    "--xla_backend_optimization_level=0")
 
+import subprocess
+import sys
+from pathlib import Path
 from types import SimpleNamespace
 
 import numpy as np
 import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def needs_devices(n: int):
+    """Skip marker: the test needs >= n jax devices. The suite's default
+    environment has ONE real CPU device; CI's forced-device lanes (and the
+    subprocess smokes below) set
+    XLA_FLAGS=--xla_force_host_platform_device_count=<n> so these tests run
+    there in-process. Usage: `needs4 = needs_devices(4)` at module scope."""
+    import jax
+    return pytest.mark.skipif(
+        len(jax.devices()) < n,
+        reason=f"needs >={n} devices (CI lane forces an {n}-device "
+               "CPU backend)")
+
+
+def run_forced_devices(n: int, test_file, pytest_args=(), timeout=540):
+    """Re-run `test_file` under pytest in a subprocess whose XLA backend is
+    forced to n CPU devices — the shared smoke harness for multi-device
+    suites on single-device machines (jax device count is fixed at backend
+    init, so a fresh process is the only way to widen it mid-suite)."""
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": os.environ.get("HOME", "/root"), "JAX_PLATFORMS": "cpu",
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={n} "
+                        "--xla_backend_optimization_level=0"}
+    return subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         str(test_file)] + list(pytest_args),
+        env=env, cwd=str(REPO), capture_output=True, text=True,
+        timeout=timeout)
 
 
 @pytest.fixture(scope="session")

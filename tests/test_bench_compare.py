@@ -1,0 +1,63 @@
+"""The bench perf-regression gate (`run.py --compare`, ISSUE 7): pure
+logic over BENCH.json row dicts — no jax, no subprocesses."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.compare import (REGRESSION_FRAC, compare_rows,
+                                compare_to_baseline)
+
+
+def row(name, evs=None, **derived):
+    if evs is not None:
+        derived["events_per_s"] = evs
+    return {"name": name, "us_per_call": 1.0, "derived": derived}
+
+
+def test_clean_when_within_threshold():
+    base = [row("scaling[mesh,D=4]", 1000.0)]
+    # exactly at the 20% edge is NOT a regression (strict inequality)
+    assert compare_rows([row("scaling[mesh,D=4]", 800.0)], base) == []
+    assert compare_rows([row("scaling[mesh,D=4]", 999.0)], base) == []
+    assert compare_rows([row("scaling[mesh,D=4]", 1500.0)], base) == []
+
+
+def test_regression_detected_and_described():
+    base = [row("scaling[pipeline,stage=2,data=4]", 1000.0)]
+    msgs = compare_rows(
+        [row("scaling[pipeline,stage=2,data=4]", 700.0)], base)
+    assert len(msgs) == 1
+    assert "scaling[pipeline,stage=2,data=4]" in msgs[0]
+    assert "700" in msgs[0] and "1000" in msgs[0]
+
+
+def test_unshared_and_metricless_rows_are_ignored():
+    base = [row("gone[old]", 500.0),
+            row("fig7[latency]", p50_ms=3.0),
+            row("shared", 100.0)]
+    cur = [row("new[row]", 1.0),              # not in baseline: never fails
+           row("fig7[latency]", p50_ms=99.0),  # no events_per_s: ignored
+           row("shared", 99.0)]               # within threshold
+    assert compare_rows(cur, base) == []
+
+
+def test_custom_threshold():
+    base = [row("r", 100.0)]
+    assert compare_rows([row("r", 94.0)], base, threshold=0.05) != []
+    assert compare_rows([row("r", 96.0)], base, threshold=0.05) == []
+    assert 0.0 < REGRESSION_FRAC < 1.0
+
+
+def test_missing_baseline_is_a_noop(tmp_path):
+    assert compare_to_baseline([row("r", 1.0)],
+                               str(tmp_path / "absent.json")) is None
+
+
+def test_baseline_file_roundtrip(tmp_path):
+    p = tmp_path / "BASELINE.json"
+    p.write_text(json.dumps({"schema": 1, "rows": [row("r", 1000.0)]}))
+    assert compare_to_baseline([row("r", 900.0)], str(p)) == []
+    bad = compare_to_baseline([row("r", 100.0)], str(p))
+    assert bad and "r:" in bad[0]

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from conftest import needs_devices
 from repro.core import aggregators
 from repro.core import windowing as win
 from repro.core.events import MsgBatch, coalesce_msg_batch
@@ -43,9 +44,7 @@ pytestmark = pytest.mark.pallas
 
 N_NODES, D_IN = 32, 8
 
-needs4 = pytest.mark.skipif(
-    len(jax.devices()) < 4,
-    reason="needs >=4 devices (CI pallas lane forces a 4-device backend)")
+needs4 = needs_devices(4)
 
 ALL_POLICIES = [win.WindowConfig(kind=win.STREAMING),
                 win.WindowConfig(kind=win.TUMBLING, interval=3),

@@ -16,8 +16,6 @@ Three execution tiers:
     CPU backend and checks the streaming golden triplet + backpressure;
     the slow lane re-runs the full @needs4 matrix the same way.
 """
-import subprocess
-import sys
 from pathlib import Path
 
 import numpy as np
@@ -25,18 +23,16 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from conftest import needs_devices, run_forced_devices
 from repro.core import windowing as win
 from repro.core.oracle import build_snapshot, oracle_embeddings
 from repro.core.pipeline import D3Pipeline, PipelineConfig
 from repro.graph.sage import GraphSAGE
 from repro.launch.mesh import make_stream_mesh
 
-REPO = Path(__file__).resolve().parents[1]
 N_NODES, D_IN = 32, 8
 
-needs4 = pytest.mark.skipif(
-    len(jax.devices()) < 4,
-    reason="needs >=4 devices (CI mesh lane forces a 4-device CPU backend)")
+needs4 = needs_devices(4)
 
 ALL_POLICIES = [win.WindowConfig(kind=win.STREAMING),
                 win.WindowConfig(kind=win.TUMBLING, interval=3),
@@ -242,15 +238,7 @@ def test_last_slot_emission_not_lost_by_topk_padding():
 # ------------------------------------------------- subprocess (forced 4)
 
 def _run_forced4(pytest_args, timeout=540):
-    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-           "HOME": "/root", "JAX_PLATFORMS": "cpu",
-           "XLA_FLAGS": "--xla_force_host_platform_device_count=4 "
-                        "--xla_backend_optimization_level=0"}
-    return subprocess.run(
-        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
-         str(Path(__file__))] + pytest_args,
-        env=env, cwd=str(REPO), capture_output=True, text=True,
-        timeout=timeout)
+    return run_forced_devices(4, Path(__file__), pytest_args, timeout)
 
 
 def test_mesh_golden_streaming_forced4_subprocess():

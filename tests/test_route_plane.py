@@ -33,8 +33,6 @@ Execution tiers mirror test_mesh_router: units anywhere, @needs4
 in-process (CI mesh/pallas lanes), a forced-4 subprocess smoke in the
 fast lane and the full matrix in the slow lane.
 """
-import subprocess
-import sys
 from pathlib import Path
 
 import numpy as np
@@ -42,18 +40,16 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from conftest import needs_devices, run_forced_devices
 from repro.core import windowing as win
 from repro.core.oracle import build_snapshot, oracle_embeddings
 from repro.core.pipeline import D3Pipeline, PipelineConfig
 from repro.graph.sage import GraphSAGE
 from repro.launch.mesh import make_stream_mesh
 
-REPO = Path(__file__).resolve().parents[1]
 N_NODES, D_IN = 32, 8
 
-needs4 = pytest.mark.skipif(
-    len(jax.devices()) < 4,
-    reason="needs >=4 devices (CI mesh lane forces a 4-device CPU backend)")
+needs4 = needs_devices(4)
 
 ALL_POLICIES = [win.WindowConfig(kind=win.STREAMING),
                 win.WindowConfig(kind=win.TUMBLING, interval=3),
@@ -375,15 +371,7 @@ def test_capped_wire_lane_answers_all_queries():
 # ------------------------------------------------- subprocess (forced 4)
 
 def _run_forced4(pytest_args, timeout=540):
-    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-           "HOME": "/root", "JAX_PLATFORMS": "cpu",
-           "XLA_FLAGS": "--xla_force_host_platform_device_count=4 "
-                        "--xla_backend_optimization_level=0"}
-    return subprocess.run(
-        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
-         str(Path(__file__))] + pytest_args,
-        env=env, cwd=str(REPO), capture_output=True, text=True,
-        timeout=timeout)
+    return run_forced_devices(4, Path(__file__), pytest_args, timeout)
 
 
 def test_capped_golden_forced4_subprocess():
