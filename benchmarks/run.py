@@ -28,7 +28,7 @@ ALL = {
     "fig4c_runtime": bench_runtime,
     "fig4d_imbalance": bench_imbalance,
     "fig5_vs_batch": bench_vs_batch,
-    "fig5d_training": bench_training,
+    "training": bench_training,
     "fig6_explosion": bench_explosion,
     "fig7_latency": bench_latency,
     "dist_scaling": bench_scaling,
@@ -46,7 +46,7 @@ ALL = {
 # seeded rng, so CI snapshots are comparable across commits
 PROFILES = {
     "ci": ["driver_comparison", "dist_scaling", "delivery_backend",
-           "serving", "fig4b_comm_volume", "delta_gating"],
+           "serving", "fig4b_comm_volume", "delta_gating", "training"],
 }
 
 

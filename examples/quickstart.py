@@ -20,6 +20,7 @@ import jax
 from repro.core import windowing as win
 from repro.core.oracle import build_snapshot, oracle_embeddings
 from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.core.train_plane import TrainConfig
 from repro.core.training import TrainingCoordinator
 from repro.graph.graphs import powerlaw_edges
 from repro.graph.sage import GraphSAGE
@@ -75,8 +76,9 @@ def main():
     print("== stale-free training cycle (halt -> flush -> train -> rebuild) ==")
     labels = {v: int(rng.integers(0, 4)) for v in range(n_nodes)}
     head = Linear(32, 4)
-    coord = TrainingCoordinator(pipe, head, head.init(jax.random.key(1)),
-                                sgd(), lr=0.1, batch_threshold=2)
+    coord = TrainingCoordinator(
+        pipe, head, head.init(jax.random.key(1)),
+        TrainConfig(optimizer=sgd(), lr=0.1, batch_threshold=2))
     coord.observe_labels(labels)
     print(f"StartTraining votes: {coord.votes()}/{cfg.n_parts}")
     res = coord.train(epochs=5)

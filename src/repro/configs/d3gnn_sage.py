@@ -54,7 +54,8 @@ def _topo_specs():
         e_valid=sds((P, E), b),
         r_master_slot=sds((P, R), i32), r_rep_part=sds((P, R), i32),
         r_rep_slot=sds((P, R), i32), r_valid=sds((P, R), b),
-        v_exists=sds((P, N), b), is_master=sds((P, N), b))
+        v_exists=sds((P, N), b), is_master=sds((P, N), b),
+        m_part=sds((P, N), i32), m_slot=sds((P, N), i32))
 
 
 def _layer_specs(d):

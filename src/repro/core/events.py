@@ -77,6 +77,21 @@ class FeatBatch:
 
 
 @dataclass(frozen=True)
+class LabelBatch:
+    """Label observations addressed to master (part, slot) — the training
+    plane's admission unit (capacity = PipelineConfig.train_cap; 0
+    compiles the plane away)."""
+    part: jnp.ndarray            # [C] int32
+    slot: jnp.ndarray            # [C] int32
+    label: jnp.ndarray           # [C] int32 gold class
+    valid: jnp.ndarray           # [C] bool
+
+    @property
+    def capacity(self):
+        return self.part.shape[0]
+
+
+@dataclass(frozen=True)
 class MsgBatch:
     """Fixed-capacity, part-addressed message records — the routing plane's
     unit of exchange (one tick's cross-part traffic for one round).
@@ -109,6 +124,7 @@ for _cls, _fields in ((EdgeBatch, ["part", "edge_slot", "src_slot", "dst_slot",
                                    "rep_part", "rep_slot", "valid"]),
                       (VertexBatch, ["part", "slot", "is_master", "valid"]),
                       (FeatBatch, ["part", "slot", "feat", "valid"]),
+                      (LabelBatch, ["part", "slot", "label", "valid"]),
                       (MsgBatch, ["part", "slot", "vec", "cnt", "src_part",
                                   "valid"])):
     jax.tree_util.register_dataclass(_cls, data_fields=_fields, meta_fields=[])
@@ -257,6 +273,29 @@ def stack_batches(batches):
     return jax.tree.map(
         lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])),
         *batches)
+
+
+def empty_label_batch(cap: int) -> LabelBatch:
+    z = jnp.zeros((cap,), jnp.int32)
+    return LabelBatch(part=z, slot=z, label=z,
+                      valid=jnp.zeros((cap,), bool))
+
+
+def label_batch_from_numpy(parts, slots, labels, cap: int,
+                           device: bool = True) -> LabelBatch:
+    n = len(parts)
+    assert n <= cap, f"label batch overflow: {n} > {cap}"
+    conv = jnp.asarray if device else (lambda a: a)
+    p = np.zeros((cap,), np.int32)
+    s = np.zeros((cap,), np.int32)
+    y = np.zeros((cap,), np.int32)
+    v = np.zeros((cap,), bool)
+    p[:n] = parts
+    s[:n] = slots
+    y[:n] = labels
+    v[:n] = True
+    return LabelBatch(part=conv(p), slot=conv(s), label=conv(y),
+                      valid=conv(v))
 
 
 def feat_batch_from_numpy(parts, slots, feats, cap: int, d: int,

@@ -65,6 +65,21 @@ Answered rows accumulate host-side; `drain_answers()` pops them
 (`repro/serve/session.py:ServeSession` wraps this with latency
 accounting). `query_cap=0` (default) statically compiles the plane away.
 
+Training plane (ISSUE 8): pass `train=TrainConfig(...)` with
+`PipelineConfig.train_cap > 0` and every tick ENDS with a windowed
+online training step through the live sharded state
+(`core/train_plane.py`): label events ride a per-tick `LabelBatch`,
+the sliding-window batch (recently-touched labeled masters) fires a
+fire-masked layered backprop + Algorithm 3 update whose two cross-part
+gradient hops ride the same packed wire as the routing plane, and
+`TrainState` (labels, live params, per-part optimizer state,
+error-feedback residuals) lives in the donated carry — still ONE host
+sync per super-tick; `train_stats()` reads progress on demand.
+`train_cap=0` (default) statically compiles the plane away:
+the program is bit-for-bit the four-plane tick.
+`serve/train_session.py:TrainSession` wraps the label queue/driver
+loop, mirroring ServeSession.
+
 Staging model / constraints:
   - batch capacities derive from PipelineConfig, so every tick's batches
     have identical shapes and stack cleanly along T;
@@ -78,6 +93,7 @@ Staging model / constraints:
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Optional
@@ -96,17 +112,43 @@ from repro.core.delivery import make_delivery
 from repro.core.explosion import layer_parallelisms, physical_busy
 from repro.core.partitioner import StreamingPartitioner
 from repro.core.tick import add_stats, layer_tick_body, zero_stats
-from repro.core.termination import TerminationCoordinator, quiet_update
+from repro.core.termination import (TerminationCoordinator, moved_msgs,
+                                    quiet_update)
 from repro.dist.router import LocalRouter, MeshRouter
 from repro.dist.sharding import (carry_pspecs, carry_shardings,
                                  stage_carry_pspecs, stage_carry_shardings,
                                  stage_stats_pspecs, stats_pspecs)
 from repro.dist.wire import field_col, pack_lane, pad_lane, unpack_lane
+from repro.core.train_plane import (TrainConfig, init_train_state,
+                                    train_pspecs, train_shardings,
+                                    train_stage)
 from repro.serve.query import (KIND_EMBED, KIND_LINK, add_query_stats,
                                empty_query_batch, init_query_state,
                                query_admit_stage, query_answer_stage,
                                query_batch_from_numpy, wire_width,
                                zero_query_stats)
+
+
+@dataclass(frozen=True)
+class Capacities:
+    """Every RESOLVED per-tick budget of a (config, mesh) pair — the one
+    documented view of the capacity arithmetic that used to be spread
+    over `outbox()` / `query_admissions()` / `defer_rows()` (now thin
+    deprecated shims).  Read it once per launch site:
+
+        caps = cfg.capacities(n_devices)
+
+    Defer-ring rows are GLOBAL (n_devices * per-device) and 0 whenever
+    the capped exchange cannot overflow (dense default, one device, or
+    route_cap >= the lane capacity) — a zero compiles the backpressure
+    path away (dist/wire.py)."""
+    outbox: int            # per-tick emission budget (rows, all parts)
+    outbox_per_part: int   # emission slots per part (outbox // n_parts)
+    query_admissions: int  # query rows admitted per tick (0 = plane off)
+    train_cap: int         # label rows admitted per tick (0 = plane off)
+    bc_defer_rows: int     # broadcast-lane defer-ring rows
+    rmi_defer_rows: int    # RMI-lane defer-ring rows
+    query_defer_rows: int  # query-wire-lane defer-ring rows
 
 
 @dataclass
@@ -123,6 +165,11 @@ class PipelineConfig:
                                       # (0 = query plane compiled away)
     query_tick_cap: Optional[int] = None  # query admissions per tick
                                       # (default: query_cap * n_parts)
+    train_cap: int = 0                # training plane (ISSUE 8): label
+                                      # admissions per tick (0 = the plane
+                                      # compiles away; > 0 needs a
+                                      # TrainConfig passed as
+                                      # D3Pipeline(train=...))
     route_cap: Optional[int] = None   # routing plane: per-destination
                                       # all_to_all bucket rows (None = each
                                       # lane's full capacity — dense,
@@ -161,23 +208,37 @@ class PipelineConfig:
     max_nodes: int = 100_000          # global id space for the host tables
     seed: int = 0
 
-    def outbox(self) -> int:
-        """The resolved per-tick emission budget."""
+    # -------------------------------------------- resolved budget views
+    def capacities(self, n_devices: int = 1) -> Capacities:
+        """The one documented view of every resolved per-tick budget.
+
+        n_devices is the DATA-axis device count (defer-ring rows are
+        sized per data shard); 1 covers the LocalRouter and any
+        single-data-shard mesh.  See `Capacities` for field semantics.
+        """
+        p_loc = self.n_parts // max(n_devices, 1)
+        return Capacities(
+            outbox=self._outbox(),
+            outbox_per_part=max(1, self._outbox() // self.n_parts),
+            query_admissions=self._query_admissions(),
+            train_cap=self.train_cap,
+            bc_defer_rows=self._defer_rows(p_loc * self.repl_cap,
+                                           n_devices),
+            rmi_defer_rows=self._defer_rows(
+                self.edge_tick_cap + p_loc * self.edge_cap, n_devices),
+            query_defer_rows=self._defer_rows(p_loc * self.query_cap,
+                                              n_devices))
+
+    def _outbox(self) -> int:
         return self.feat_cap if self.outbox_cap is None else self.outbox_cap
 
-    def query_admissions(self) -> int:
-        """The resolved per-tick query-admission capacity (0 = disabled)."""
+    def _query_admissions(self) -> int:
         if self.query_cap <= 0:
             return 0
         return (self.query_cap * self.n_parts if self.query_tick_cap is None
                 else self.query_tick_cap)
 
-    def defer_rows(self, lane_capacity: int, n_devices: int) -> int:
-        """GLOBAL (n_devices * per-device) defer-ring rows for a routed
-        lane of the given per-device emission capacity — 0 whenever the
-        capped exchange cannot overflow (dense default, one device, or
-        route_cap >= the lane capacity), which compiles the backpressure
-        path away."""
+    def _defer_rows(self, lane_capacity: int, n_devices: int) -> int:
         if n_devices <= 1 or self.route_cap is None:
             return 0
         if self.route_cap >= lane_capacity:    # bucket >= lane: no overflow
@@ -185,6 +246,29 @@ class PipelineConfig:
         per_dev = (lane_capacity if self.route_defer_cap is None
                    else self.route_defer_cap)
         return n_devices * per_dev
+
+    # deprecated accessors — the pre-ISSUE-8 API, kept as thin shims
+    def outbox(self) -> int:
+        """Deprecated: read `capacities().outbox` instead."""
+        warnings.warn("PipelineConfig.outbox() is deprecated — read "
+                      "capacities().outbox", DeprecationWarning,
+                      stacklevel=2)
+        return self._outbox()
+
+    def query_admissions(self) -> int:
+        """Deprecated: read `capacities().query_admissions` instead."""
+        warnings.warn("PipelineConfig.query_admissions() is deprecated — "
+                      "read capacities().query_admissions",
+                      DeprecationWarning, stacklevel=2)
+        return self._query_admissions()
+
+    def defer_rows(self, lane_capacity: int, n_devices: int) -> int:
+        """Deprecated: read the `*_defer_rows` fields of
+        `capacities(n_devices)` instead."""
+        warnings.warn("PipelineConfig.defer_rows() is deprecated — read "
+                      "capacities(n_devices).{bc,rmi,query}_defer_rows",
+                      DeprecationWarning, stacklevel=2)
+        return self._defer_rows(lane_capacity, n_devices)
 
     def validate(self, n_devices: int = 1, n_layers: Optional[int] = None,
                  local: bool = False) -> None:
@@ -223,7 +307,8 @@ class PipelineConfig:
                     "use a stage count that divides the layer count")
         caps = {"n_parts": self.n_parts, "node_cap": self.node_cap,
                 "edge_cap": self.edge_cap, "repl_cap": self.repl_cap,
-                "feat_cap": self.feat_cap, "outbox_cap": self.outbox(),
+                "feat_cap": self.feat_cap,
+                "outbox_cap (capacities().outbox)": self._outbox(),
                 "edge_tick_cap": self.edge_tick_cap}
         for name, v in caps.items():
             if v <= 0:
@@ -235,10 +320,16 @@ class PipelineConfig:
             raise ValueError(
                 "PipelineConfig.query_tick_cap is set but query_cap=0 — "
                 "the query plane is disabled; set query_cap > 0 to serve")
-        if self.query_cap > 0 and self.query_admissions() <= 0:
+        if self.query_cap > 0 and self._query_admissions() <= 0:
             raise ValueError(
                 f"PipelineConfig.query_tick_cap={self.query_tick_cap} "
-                "must be > 0 when the query plane is enabled")
+                "must be > 0 (capacities().query_admissions) when the "
+                "query plane is enabled")
+        if self.train_cap < 0:
+            raise ValueError(
+                f"PipelineConfig.train_cap={self.train_cap} must be >= 0 "
+                "(0 disables the training plane; see "
+                "capacities().train_cap)")
         if not (self.delta_eps >= 0.0):   # rejects negatives AND NaN
             raise ValueError(
                 f"PipelineConfig.delta_eps={self.delta_eps} must be a "
@@ -274,12 +365,12 @@ class PipelineConfig:
                 f"PipelineConfig.delivery_backend="
                 f"{self.delivery_backend!r} is not registered: pick one of "
                 f"{sorted(DELIVERY_BACKENDS)} (core/delivery.py)")
-        if self.outbox() % self.n_parts:
+        if self._outbox() % self.n_parts:
             raise ValueError(
-                f"the emission budget (outbox_cap or feat_cap)="
-                f"{self.outbox()} must be a multiple of "
-                f"n_parts={self.n_parts}: it is split into outbox() // "
-                "n_parts emission slots per part")
+                f"the emission budget capacities().outbox="
+                f"{self._outbox()} (outbox_cap or feat_cap) must be a "
+                f"multiple of n_parts={self.n_parts}: it is split into "
+                "capacities().outbox_per_part emission slots per part")
         if data_devs > 1 and self.n_parts % data_devs:
             raise ValueError(
                 f"n_parts={self.n_parts} is not divisible by the mesh's "
@@ -365,13 +456,18 @@ class StagedActLayer:
 class D3Pipeline:
     """L chained GraphStorage operators + the host driver."""
 
-    def __init__(self, model, params, cfg: PipelineConfig, mesh=None):
+    def __init__(self, model, params, cfg: PipelineConfig, mesh=None,
+                 train: Optional[TrainConfig] = None):
         """model: graph/sage.GraphSAGE (or compatible stack of layers with
         .message/.update); params: its param pytree.
         mesh: optional jax mesh — 1-D ("data",) shards the part axis of
         the tick program across its devices (MeshRouter); 2-D ("stage",
         "data") with cfg.n_stages > 1 additionally pipelines the layer
-        axis (`make_stream_mesh(stage=...)`)."""
+        axis (`make_stream_mesh(stage=...)`).
+        train: optional TrainConfig — enables the ONLINE training plane
+        (cfg.train_cap > 0 required): every tick ends with a windowed
+        training step over the live sharded state
+        (core/train_plane.py)."""
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
@@ -385,6 +481,21 @@ class D3Pipeline:
                 "mesh with make_stream_mesh(stage=n_stages)")
         cfg.validate(n_devices=S * n_dev, n_layers=len(model.layers),
                      local=mesh is None)
+        if (train is not None) != (cfg.train_cap > 0):
+            raise ValueError(
+                f"train={'set' if train is not None else 'None'} but "
+                f"PipelineConfig.train_cap={cfg.train_cap}: the online "
+                "training plane needs BOTH a TrainConfig (the knobs) and "
+                "train_cap > 0 (the per-tick label admission budget, "
+                "capacities().train_cap) — set both or neither")
+        if train is not None and "head" not in params:
+            raise ValueError(
+                "train= needs an output operator: build the model with "
+                "n_classes > 0 (GraphSAGE(dims, n_classes=...)) so its "
+                "params carry a 'head' entry to train")
+        self.train_cfg = train
+        self._head = getattr(model, "head", None) if train is not None \
+            else None
         self.n_stages = S
         self._n_data = n_dev
         self.router = (MeshRouter(cfg.n_parts, n_dev,
@@ -401,12 +512,13 @@ class D3Pipeline:
         self.topo = st.init_topo(cfg.n_parts, cfg.edge_cap, cfg.repl_cap,
                                  cfg.node_cap)
         dims = [l.in_dim for l in self.layers] + [self.layers[-1].out_dim]
-        # routing-plane backpressure rings, sized per lane from the LOCAL
-        # (per-device) emission capacities (0 rows = compiled away)
+        # every resolved per-tick budget, incl. the routing-plane
+        # backpressure rings sized per lane from the LOCAL (per-device)
+        # emission capacities (0 rows = compiled away)
+        caps = cfg.capacities(n_dev)
         p_loc = cfg.n_parts // n_dev
-        bc_rows = cfg.defer_rows(p_loc * cfg.repl_cap, n_dev)
-        rmi_rows = cfg.defer_rows(cfg.edge_tick_cap + p_loc * cfg.edge_cap,
-                                  n_dev)
+        bc_rows = caps.bc_defer_rows
+        rmi_rows = caps.rmi_defer_rows
         if S > 1:
             self._check_uniform_layers(dims)
             self._n_rounds = len(self.layers) // S
@@ -432,11 +544,19 @@ class D3Pipeline:
         self.sink_seen = jnp.zeros((cfg.n_parts, cfg.node_cap), bool)
         self.queries = init_query_state(
             cfg.n_parts, cfg.query_cap, self.d_out,
-            wire_defer_rows=cfg.defer_rows(p_loc * cfg.query_cap, n_dev))
+            wire_defer_rows=caps.query_defer_rows)
+        # the training plane's device state: labels/dirty window, live
+        # params, per-part optimizer state (core/train_plane.py)
+        self.train_state = (init_train_state(
+            cfg.n_parts, cfg.node_cap,
+            {f"l{i}": params[f"l{i}"] for i in range(len(self.layers))},
+            params["head"], train) if train is not None else None)
+        self._acts = tuple(
+            1.0 if getattr(l, "act", False) else 0.0 for l in self.layers)
         # inter-stage ring: one fixed packed-FeatBatch slot shape carries
         # both the host inbox (feat_cap rows) and any round's outbox
         # (p_loc * cap_pp rows) between stages
-        cap_pp = max(1, cfg.outbox() // cfg.n_parts)
+        cap_pp = caps.outbox_per_part
         self._ring_caps = (max(cfg.feat_cap, p_loc * cap_pp), dims[0] + 3)
         self.stage_ring = (jnp.zeros(
             (S, self._n_rounds, n_dev * self._ring_caps[0],
@@ -459,6 +579,9 @@ class D3Pipeline:
             self.sink = jax.device_put(self.sink, sh.sink)
             self.sink_seen = jax.device_put(self.sink_seen, sh.sink_seen)
             self.queries = jax.device_put(self.queries, sh.queries)
+        if mesh is not None and self.train_state is not None:
+            self.train_state = jax.device_put(
+                self.train_state, train_shardings(mesh, self.train_state))
         self.now = 0
         self.metrics = StreamMetrics(
             busy_logical=np.zeros(cfg.n_parts, np.int64))
@@ -471,10 +594,14 @@ class D3Pipeline:
         # host-resident twin for super-tick staging (stacked before upload)
         self._empty_edges_np = ev.edge_batch_from_numpy(
             empty_rows, cfg.edge_tick_cap, device=False)
-        self._empty_queries = empty_query_batch(cfg.query_admissions(),
+        self._empty_queries = empty_query_batch(caps.query_admissions,
                                                 self.d_out)
-        self._empty_queries_np = empty_query_batch(cfg.query_admissions(),
+        self._empty_queries_np = empty_query_batch(caps.query_admissions,
                                                    self.d_out, device=False)
+        z0 = np.zeros(0, np.int64)
+        self._empty_labels = ev.empty_label_batch(cfg.train_cap)
+        self._empty_labels_np = ev.label_batch_from_numpy(
+            z0, z0, z0, cfg.train_cap, device=False)
         self._answer_log: list = []    # host-side answered-row columns
 
     def _static_wire_bytes(self, dims, n_dev: int, n_stages: int = 1) -> int:
@@ -493,7 +620,14 @@ class D3Pipeline:
         rides round 0 on EVERY stage (QueryState is stage-replicated),
         and the stage axis adds its own wires: one [C_buf, W_fb] ppermute
         per round per device plus the final-round all_gather feeding the
-        replicated sinks (S - 1 foreign slots per device)."""
+        replicated sinks (S - 1 foreign slots per device).
+
+        The TRAINING plane (cfg.train_cap > 0) adds two DENSE lanes per
+        layer per tick (hop A: repl_cap rows of dagg; hop B: node_cap
+        rows of source gradients — always full capacity, route_cap does
+        not apply to gradient lanes) and, on a 2-D mesh, the per-round
+        stage all_gather of the layer caches (feat/agg/agg_cnt) every
+        stage's backward reads."""
         if self.mesh is None:
             return 0
         cfg = self.cfg
@@ -514,7 +648,18 @@ class D3Pipeline:
             slot = C_buf * W_fb * 4
             ring = n_stages * n_dev * self._n_rounds * slot
             gather = n_stages * n_dev * (n_stages - 1) * slot
-            return a2a + ring + gather
+            train = 0
+            if self.train_cfg is not None:
+                d = dims[0]
+                if n_dev > 1:
+                    train += (n_stages * n_dev * len(self.layers)
+                              * n_dev * (p_loc * cfg.repl_cap
+                                         + p_loc * cfg.node_cap)
+                              * (d + 5) * 4)
+                train += (n_stages * n_dev * (n_stages - 1)
+                          * self._n_rounds
+                          * p_loc * cfg.node_cap * (2 * d + 1) * 4)
+            return a2a + ring + gather + train
         if n_dev <= 1:
             return 0
         lanes = []
@@ -524,8 +669,13 @@ class D3Pipeline:
                           dims[li] + 5))
         if cfg.query_cap > 0:
             lanes.append((p_loc * cfg.query_cap, wire_width(self.d_out)))
-        return n_dev * sum(n_dev * self.router.lane_cap(c) * w * 4
-                           for c, w in lanes)
+        total = n_dev * sum(n_dev * self.router.lane_cap(c) * w * 4
+                            for c, w in lanes)
+        if self.train_cfg is not None:
+            total += n_dev * sum(
+                n_dev * (p_loc * cfg.repl_cap + p_loc * cfg.node_cap)
+                * (dims[li] + 5) * 4 for li in range(len(self.layers)))
+        return total
 
     def _check_uniform_layers(self, dims) -> None:
         """Stage parallelism runs ONE compiled round body for every layer
@@ -663,9 +813,13 @@ class D3Pipeline:
     def _build_batches(self, edges: Optional[np.ndarray],
                        feats: Optional[list], device: bool = True,
                        queries: Optional[list] = None,
-                       issue_tick: Optional[int] = None):
+                       issue_tick: Optional[int] = None,
+                       labels: Optional[list] = None):
         """One tick's padded batches. device=False keeps numpy leaves for
-        the super-tick staging path (stack first, upload once)."""
+        the super-tick staging path (stack first, upload once).
+        labels: [(vid, gold_class), ...] training-plane admissions —
+        resolved to master coordinates; vids the partitioner has never
+        seen are silently skipped (no master slot to label)."""
         cfg = self.cfg
         if edges is not None and len(edges):
             e_rows, r1, v1 = self.part.ingest_edges(edges)
@@ -706,38 +860,63 @@ class D3Pipeline:
                 "queries submitted but PipelineConfig.query_cap=0"
             q_rows = self._resolve_queries(
                 queries, self.now if issue_tick is None else issue_tick)
-            qb = query_batch_from_numpy(q_rows, cfg.query_admissions(),
+            qb = query_batch_from_numpy(q_rows, cfg._query_admissions(),
                                         self.d_out, device)
         else:
             qb = (self._empty_queries if device else self._empty_queries_np)
-        return eb, rb, vb, fb, qb
+        if labels:
+            assert cfg.train_cap > 0, \
+                "labels submitted but PipelineConfig.train_cap=0"
+            l_parts, l_slots, l_gold = [], [], []
+            for vid, y in labels:
+                m = self.part.locate_master(int(vid), create=False)
+                if m is None:
+                    continue
+                l_parts.append(m[0])
+                l_slots.append(m[1])
+                l_gold.append(int(y))
+            lb = ev.label_batch_from_numpy(
+                np.asarray(l_parts, np.int64), np.asarray(l_slots, np.int64),
+                np.asarray(l_gold, np.int64), cfg.train_cap, device)
+        else:
+            lb = (self._empty_labels if device else self._empty_labels_np)
+        return eb, rb, vb, fb, qb, lb
 
     # ---------------------------------------------------------- device side
     def tick(self, edges: Optional[np.ndarray] = None,
              feats: Optional[list] = None, window=None,
-             queries: Optional[list] = None):
+             queries: Optional[list] = None,
+             labels: Optional[list] = None):
         """One micro-tick through the full pipeline.
 
         queries: optional [(qid, kind, vid, [vid2,] consistent), ...]
         point-query admissions for this tick (needs cfg.query_cap > 0);
         answered rows accumulate in `drain_answers()`.
+        labels: optional [(vid, gold_class), ...] training-plane label
+        admissions for this tick (needs cfg.train_cap > 0 and a
+        TrainConfig); training progress is read via `train_stats()`.
         """
         cfg = self.cfg
         wconf = window or cfg.window
         t0 = time.perf_counter()
-        eb, rb, vb, fb, qb = self._build_batches(edges, feats,
-                                                 queries=queries)
+        outbox_cap = cfg.capacities().outbox
+        eb, rb, vb, fb, qb, lb = self._build_batches(edges, feats,
+                                                     queries=queries,
+                                                     labels=labels)
         now = jnp.asarray(self.now, jnp.int32)
         if self.n_stages > 1:
             (self.topo, new_states, self.sink, self.sink_seen,
              self.queries, self.stage_ring, stats_all, idle, answers,
-             qstats) = _tick_jit_2d(
+             qstats, new_ts) = _tick_jit_2d(
                 self.rounds, self._staged_params(), self.topo,
                 tuple(self.states), self.sink, self.sink_seen,
-                self.queries, self.stage_ring, fb, eb, rb, vb, qb, now,
-                wconf, cfg.outbox(), self.router, self.delivery,
-                self.mesh, cfg.delta_eps)
+                self.queries, self.stage_ring, fb, eb, rb, vb, qb, lb,
+                self.train_state, now, wconf, outbox_cap, self.router,
+                self.delivery, self.mesh, cfg.delta_eps, self.train_cfg,
+                self._head, self._acts)
             self.states = list(new_states)
+            self.train_state = new_ts
+            self._sync_params_from_train()
             self.now += 1
             self._harvest_answers(answers)
             per_layer = self._unstack_stats(jax.device_get(stats_all))
@@ -746,16 +925,40 @@ class D3Pipeline:
                              qstats=qstats)
             return per_layer
         (self.topo, new_states, self.sink, self.sink_seen, self.queries,
-         stats_all, answers, qstats) = _tick_jit(
+         stats_all, answers, qstats, new_ts) = _tick_jit(
             tuple(self.layers), self.params, self.topo, tuple(self.states),
             self.sink, self.sink_seen, self.queries, fb, eb, rb, vb, qb,
-            now, wconf, cfg.outbox(), self.router, self.delivery, self.mesh,
-            cfg.delta_eps)
+            lb, self.train_state, now, wconf, outbox_cap, self.router,
+            self.delivery, self.mesh, cfg.delta_eps, self.train_cfg,
+            self._head)
         self.states = list(new_states)
+        self.train_state = new_ts
+        self._sync_params_from_train()
         self.now += 1
         self._harvest_answers(answers)
         self._accumulate(stats_all, time.perf_counter() - t0, qstats=qstats)
         return list(stats_all)
+
+    def _sync_params_from_train(self) -> None:
+        """Mirror the live trained parameters back into `self.params` so
+        host-side consumers (checkpointing, `_staged_params`, the legacy
+        coordinator) always see the online plane's latest step."""
+        ts = self.train_state
+        if ts is None:
+            return
+        for k, v in ts.params.items():
+            self.params[k] = v
+        self.params["head"] = ts.head_params
+
+    def train_stats(self) -> dict:
+        """Training-plane progress in ONE host sync: the last fired
+        step's global loss, gradient norm and the fired-step count."""
+        ts = self.train_state
+        assert ts is not None, \
+            "training plane disabled (train_cap=0 / no TrainConfig)"
+        loss, gn, steps = jax.device_get((ts.loss, ts.grad_norm, ts.steps))
+        return {"loss": float(loss), "grad_norm": float(gn),
+                "steps": int(steps)}
 
     def _harvest_answers(self, answers) -> None:
         """Pull this launch's answered rows (valid mask) into the host-side
@@ -839,58 +1042,69 @@ class D3Pipeline:
         return e_chunks, f_chunks
 
     # ------------------------------------------------------ super-tick path
-    def _stage_super_batches(self, edge_chunks, feat_chunks, query_chunks):
+    def _stage_super_batches(self, edge_chunks, feat_chunks, query_chunks,
+                             label_chunks):
         """Host staging: build T per-tick padded batches, stack along T.
 
-        Returns (fb, eb, rb, vb, qb) pytrees with a leading [T] axis — the
-        xs of the super-tick scan. Host partitioner state advances tick by
-        tick exactly as the per-tick driver would have advanced it; query
-        issue ticks are stamped with the tick the scan will admit them in.
+        Returns (fb, eb, rb, vb, qb, lb) pytrees with a leading [T] axis —
+        the xs of the super-tick scan. Host partitioner state advances tick
+        by tick exactly as the per-tick driver would have advanced it;
+        query issue ticks are stamped with the tick the scan will admit
+        them in.
         """
-        ebs, rbs, vbs, fbs, qbs = [], [], [], [], []
-        for i, (edges_t, feats_t, queries_t) in enumerate(
-                zip(edge_chunks, feat_chunks, query_chunks)):
-            eb, rb, vb, fb, qb = self._build_batches(
+        ebs, rbs, vbs, fbs, qbs, lbs = [], [], [], [], [], []
+        for i, (edges_t, feats_t, queries_t, labels_t) in enumerate(
+                zip(edge_chunks, feat_chunks, query_chunks, label_chunks)):
+            eb, rb, vb, fb, qb, lb = self._build_batches(
                 edges_t, feats_t, device=False, queries=queries_t,
-                issue_tick=self.now + i)
+                issue_tick=self.now + i, labels=labels_t)
             ebs.append(eb)
             rbs.append(rb)
             vbs.append(vb)
             fbs.append(fb)
             qbs.append(qb)
+            lbs.append(lb)
         return (ev.stack_batches(fbs), ev.stack_batches(ebs),
                 ev.stack_batches(rbs), ev.stack_batches(vbs),
-                ev.stack_batches(qbs))
+                ev.stack_batches(qbs), ev.stack_batches(lbs))
 
     def run_super_tick(self, edge_chunks=None, feat_chunks=None,
                        T: Optional[int] = None, window=None,
-                       quiet0: int = 0, query_chunks=None):
+                       quiet0: int = 0, query_chunks=None,
+                       label_chunks=None):
         """Advance T micro-ticks in ONE device program (`lax.scan`).
 
         edge_chunks: list of per-tick edge arrays (or None entries);
         feat_chunks: list of per-tick [(vid, vec), ...] lists (or None);
         query_chunks: list of per-tick query-request lists (or None) —
-        the tick() `queries` format, admitted at their staged tick.
+        the tick() `queries` format, admitted at their staged tick;
+        label_chunks: list of per-tick [(vid, gold_class), ...] lists (or
+        None) — the tick() `labels` format, admitted at their staged tick.
         Shorter lists are padded with empty ticks up to T.
         quiet0 seeds the consecutive-quiet-tick counter (flush chaining).
 
         Returns (per-layer summed TickStats tuple, quiet_ticks) — the ONLY
         host sync of the super-tick (one device_get that also carries the
-        T ticks' stacked answers and the summed QueryStats).
+        T ticks' stacked answers and the summed QueryStats; training-plane
+        progress stays device-resident until `train_stats()` is read).
         """
         cfg = self.cfg
         t0 = time.perf_counter()
+        outbox_cap = cfg.capacities().outbox
         edge_chunks = list(edge_chunks) if edge_chunks is not None else []
         feat_chunks = list(feat_chunks) if feat_chunks is not None else []
         query_chunks = list(query_chunks) if query_chunks is not None else []
-        n = max(len(edge_chunks), len(feat_chunks), len(query_chunks), 1)
+        label_chunks = list(label_chunks) if label_chunks is not None else []
+        n = max(len(edge_chunks), len(feat_chunks), len(query_chunks),
+                len(label_chunks), 1)
         T = int(T) if T is not None else n
         assert T >= n, f"T={T} smaller than the {n} staged ticks"
         edge_chunks += [None] * (T - len(edge_chunks))
         feat_chunks += [None] * (T - len(feat_chunks))
         query_chunks += [None] * (T - len(query_chunks))
+        label_chunks += [None] * (T - len(label_chunks))
         batches = self._stage_super_batches(edge_chunks, feat_chunks,
-                                            query_chunks)
+                                            query_chunks, label_chunks)
 
         if self.n_stages > 1:
             carry = st.PipelineCarry(
@@ -898,18 +1112,21 @@ class D3Pipeline:
                 sink_seen=self.sink_seen, queries=self.queries,
                 now=jnp.asarray(self.now, jnp.int32),
                 quiet=jnp.asarray(quiet0, jnp.int32),
-                stage_ring=self.stage_ring)
+                stage_ring=self.stage_ring, train=self.train_state)
             (final, stats_sum, idle_sum, qstats_sum,
              answers) = _super_tick_scan_2d(
                 self.rounds, self._staged_params(), carry, batches,
-                window or cfg.window, cfg.outbox(), self.router,
-                self.delivery, self.mesh, cfg.delta_eps)
+                window or cfg.window, outbox_cap, self.router,
+                self.delivery, self.mesh, cfg.delta_eps, self.train_cfg,
+                self._head, self._acts)
             self.topo = final.topo
             self.states = list(final.layers)
             self.sink = final.sink
             self.sink_seen = final.sink_seen
             self.queries = final.queries
             self.stage_ring = final.stage_ring
+            self.train_state = final.train
+            self._sync_params_from_train()
             self.now += T
             (host_stats, quiet, host_idle, host_qstats,
              host_answers) = jax.device_get(
@@ -925,16 +1142,18 @@ class D3Pipeline:
             topo=self.topo, layers=tuple(self.states), sink=self.sink,
             sink_seen=self.sink_seen, queries=self.queries,
             now=jnp.asarray(self.now, jnp.int32),
-            quiet=jnp.asarray(quiet0, jnp.int32))
+            quiet=jnp.asarray(quiet0, jnp.int32), train=self.train_state)
         final, stats_sum, qstats_sum, answers = _super_tick_scan(
             tuple(self.layers), self.params, carry, batches,
-            window or cfg.window, cfg.outbox(), self.router, self.delivery,
-            self.mesh, cfg.delta_eps)
+            window or cfg.window, outbox_cap, self.router, self.delivery,
+            self.mesh, cfg.delta_eps, self.train_cfg, self._head)
         self.topo = final.topo
         self.states = list(final.layers)
         self.sink = final.sink
         self.sink_seen = final.sink_seen
         self.queries = final.queries
+        self.train_state = final.train
+        self._sync_params_from_train()
         self.now += T
         # the one host sync per super-tick: summed stats + quiet counter +
         # query stats + the T ticks' stacked answers, in ONE device_get
@@ -1060,14 +1279,18 @@ def _sink_update_body(sink, seen, fb: ev.FeatBatch, part0=0):
 
 
 def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
-                  inbox, eb, rb, vb, qb, now, wconf, outbox_cap, router,
-                  delivery, delta_eps=0.0):
+                  inbox, eb, rb, vb, qb, lb, now, wconf, outbox_cap,
+                  router, delivery, delta_eps=0.0, ts=None, tcfg=None,
+                  head=None):
     """ONE full micro-tick over the local part block: topology application,
     the query plane's admit/head-hop stage (start-of-tick), L staged layer
     ticks — with the query wire lane FUSED into layer 0's round-B exchange
-    (one all_to_all carries both, ISSUE 5) — the sink update, and the
-    query plane's answer stage. Runs directly under the LocalRouter and as
-    the shard_map body under the MeshRouter — the two drivers, the two
+    (one all_to_all carries both, ISSUE 5) — the sink update, the query
+    plane's answer stage, and the TRAINING plane's windowed online step
+    (end-of-tick, ISSUE 8; `tcfg is None` — the train_cap=0 default —
+    compiles the whole plane away and the program is bit-for-bit the
+    four-plane tick). Runs directly under the LocalRouter and as the
+    shard_map body under the MeshRouter — the two drivers, the two
     routers and the two delivery backends all share this program."""
     part0 = router.part0()
     topo = st.apply_vertex_batch(topo, vb, part0)
@@ -1084,11 +1307,13 @@ def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
     new_states, stats_all = [], []
     for li, layer in enumerate(layers):
         # topology reaches every layer; features only layer 0 (Splitter);
-        # the query wire rides layer 0's round-B collective
+        # the query wire rides layer 0's round-B collective. With the
+        # training plane on, the forward reads the LIVE trained params.
+        lp = ts.params[f"l{li}"] if tcfg is not None else params[f"l{li}"]
         extra = ((wire, (queries.wire_defer, queries.wire_defer_ok))
                  if li == 0 and wire is not None else None)
         ls, outbox, stats, extra_out = layer_tick_body(
-            layer, params[f"l{li}"], topo, states[li], inbox, eb, rb,
+            layer, lp, topo, states[li], inbox, eb, rb,
             now, wconf, outbox_cap, router, delivery, extra_lane=extra,
             delta_eps=delta_eps)
         if extra is not None:
@@ -1103,54 +1328,70 @@ def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
     queries, ans, qstats = query_answer_stage(
         queries, wire_d, qb, adm_drop, n_adm, tuple(new_states), sink,
         sink_seen, now, stats_all, router)
+    # training plane: one windowed online step through the live state
+    new_ts = ts
+    if tcfg is not None:
+        # 1-D stats scalars are already globally psum'd by the tick body
+        moved = sum(moved_msgs(s) for s in stats_all)
+        layers_bw = tuple((layers[li], ts.params[f"l{li}"], False)
+                          for li in range(len(layers)))
+        layer_feats = tuple(
+            (new_states[li].feat, new_states[li].agg, new_states[li].agg_cnt)
+            for li in range(len(layers)))
+        new_ts = train_stage(tcfg, head, layers_bw, layer_feats, topo,
+                             sink, sink_seen, ts, lb, inbox, now, moved,
+                             router, part0)
     return (topo, tuple(new_states), sink, sink_seen, queries,
-            tuple(stats_all), ans, qstats)
+            tuple(stats_all), ans, qstats, new_ts)
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh",
-                                   "delta_eps"))
+                                   "delta_eps", "tcfg", "head"))
 def _tick_jit(layers, params, topo, states, sink, sink_seen, queries,
-              inbox, eb, rb, vb, qb, now, wconf, outbox_cap, router,
-              delivery, mesh, delta_eps=0.0):
+              inbox, eb, rb, vb, qb, lb, ts, now, wconf, outbox_cap,
+              router, delivery, mesh, delta_eps=0.0, tcfg=None, head=None):
     """The per-tick driver's device program (reference path)."""
     def prog(params, topo, states, sink, sink_seen, queries, inbox, eb,
-             rb, vb, qb, now):
+             rb, vb, qb, lb, ts, now):
         return _tick_program(
             layers, params, topo, states, sink, sink_seen, queries, inbox,
-            eb, rb, vb, qb, now, wconf, outbox_cap, router, delivery,
-            delta_eps)
+            eb, rb, vb, qb, lb, now, wconf, outbox_cap, router, delivery,
+            delta_eps, ts, tcfg, head)
 
     if mesh is None:
         return prog(params, topo, states, sink, sink_seen, queries, inbox,
-                    eb, rb, vb, qb, now)
+                    eb, rb, vb, qb, lb, ts, now)
     cp = carry_pspecs(len(layers))
+    tspec = train_pspecs(ts) if tcfg is not None else P()
     sharded = shard_map(
         prog, mesh=mesh,
         in_specs=(P(), cp.topo, cp.layers, cp.sink, cp.sink_seen,
-                  cp.queries, P(), P(), P(), P(), P(), P()),
+                  cp.queries, P(), P(), P(), P(), P(), P(), tspec, P()),
         out_specs=(cp.topo, cp.layers, cp.sink, cp.sink_seen, cp.queries,
-                   stats_pspecs(len(layers)), P("data"), P()),
+                   stats_pspecs(len(layers)), P("data"), P(), tspec),
         check_rep=False)
     return sharded(params, topo, states, sink, sink_seen, queries, inbox,
-                   eb, rb, vb, qb, now)
+                   eb, rb, vb, qb, lb, ts, now)
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh",
-                                   "delta_eps"),
+                                   "delta_eps", "tcfg", "head"),
          donate_argnums=(2,))
 def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
                      wconf: win.WindowConfig, outbox_cap: int, router,
-                     delivery=None, mesh=None, delta_eps=0.0):
+                     delivery=None, mesh=None, delta_eps=0.0, tcfg=None,
+                     head=None):
     """T micro-ticks x L layers as one `lax.scan` — the super-tick body.
 
     carry (donated): PipelineCarry — topology, per-layer states, sink,
-    the pending-query table and the tick clock / quiet counter, all
+    the pending-query table, the training-plane TrainState (None when
+    the plane is off) and the tick clock / quiet counter, all
     device-resident (and part-sharded when a mesh is given: the scan runs
     INSIDE the shard_map, so the carry never leaves its owning shard
     between ticks).
-    batches: (fb, eb, rb, vb, qb) pytrees with leading [T] axis (scan xs).
+    batches: (fb, eb, rb, vb, qb, lb) pytrees with leading [T] axis (xs).
     Returns (final carry, per-layer TickStats summed over the T ticks,
     summed QueryStats, per-tick stacked AnswerBatch — the scan's ys).
     """
@@ -1159,18 +1400,19 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
 
         def body(state, batch_t):
             c, ssum, qsum = state
-            fb, eb, rb, vb, qb = batch_t
+            fb, eb, rb, vb, qb, lb = batch_t
             (topo, new_layers, sink, sink_seen, queries, stats_t, ans,
-             qstats_t) = _tick_program(
+             qstats_t, new_ts) = _tick_program(
                 layers, params, c.topo, c.layers, c.sink, c.sink_seen,
-                c.queries, fb, eb, rb, vb, qb, c.now, wconf, outbox_cap,
-                router, delivery, delta_eps)
+                c.queries, fb, eb, rb, vb, qb, lb, c.now, wconf,
+                outbox_cap, router, delivery, delta_eps, c.train, tcfg,
+                head)
             quiet = quiet_update(c.quiet, new_layers, stats_t, router,
                                  queries=queries)
             new_c = st.PipelineCarry(
                 topo=topo, layers=new_layers, sink=sink,
                 sink_seen=sink_seen, queries=queries,
-                now=c.now + jnp.int32(1), quiet=quiet)
+                now=c.now + jnp.int32(1), quiet=quiet, train=new_ts)
             ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
             return (new_c, ssum, add_query_stats(qsum, qstats_t)), ans
 
@@ -1181,7 +1423,9 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
 
     if mesh is None:
         return scan_prog(params, carry, batches)
-    cp = carry_pspecs(len(layers))
+    cp = carry_pspecs(len(layers),
+                      train=(train_pspecs(carry.train)
+                             if tcfg is not None else None))
     sharded = shard_map(scan_prog, mesh=mesh,
                         in_specs=(P(), cp, P()),
                         out_specs=(cp, stats_pspecs(len(layers)), P(),
@@ -1192,8 +1436,9 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
 
 # --------------------------------------------- hybrid-parallel pipeline
 def _tick_program_2d(rounds, params, topo, states, sink, sink_seen,
-                     queries, ring, inbox, eb, rb, vb, qb, now, wconf,
-                     outbox_cap, router, delivery, delta_eps=0.0):
+                     queries, ring, inbox, eb, rb, vb, qb, lb, now, wconf,
+                     outbox_cap, router, delivery, delta_eps=0.0, ts=None,
+                     tcfg=None, head=None, acts=None):
     """ONE micro-tick of the LAYER-PIPELINED program (ISSUE 7) — the
     shard_map body on a 2-D ("stage", "data") mesh.
 
@@ -1216,6 +1461,14 @@ def _tick_program_2d(rounds, params, topo, states, sink, sink_seen,
     times, once per stage's round-0 layer). Per-layer stats stay
     data-psum'd only: each stage's round-r scalars describe layer r*S+s,
     left as [1]-shaped leaves that stack to [S] over the stage out-spec.
+
+    TRAINING plane (ISSUE 8, `tcfg` set): TrainState is stage-REPLICATED
+    — the forward takes round r's params from ts.params at the stage's
+    own layer index (l = r*S + stage), and after the answer stage every
+    stage all_gathers the per-round layer caches over the stage axis and
+    runs the SAME deterministic full-L backward, so data-axis collectives
+    keep all stage copies bit-identical (acts: the static per-layer 0/1
+    activation flags driving the StagedActLayer relu).
     """
     R = len(rounds)
     part0 = router.part0()
@@ -1249,8 +1502,23 @@ def _tick_program_2d(rounds, params, topo, states, sink, sink_seen,
         idle.append((~jnp.any(round_inbox.valid)).astype(jnp.int32))
         extra = ((wire, (queries.wire_defer, queries.wire_defer_ok))
                  if r == 0 and wire is not None else None)
+        if tcfg is not None:
+            # live trained params: round r's layer on THIS stage is
+            # l = r*S + stage_index — gather it from the replicated
+            # TrainState by dynamic stage index
+            S = router.n_stages
+            sidx = router.stage_index()
+            stk = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[ts.params[f"l{r * S + s}"] for s in range(S)])
+            rparams = {
+                "p": jax.tree.map(lambda a: jnp.take(a, sidx, axis=0), stk),
+                "act": jnp.take(jnp.asarray(acts, jnp.float32),
+                                jnp.int32(r) * S + sidx)}
+        else:
+            rparams = sq(params[f"r{r}"])
         ls, outbox, stats, extra_out = layer_tick_body(
-            rounds[r], sq(params[f"r{r}"]), topo, sq_states[r],
+            rounds[r], rparams, topo, sq_states[r],
             round_inbox, eb, rb, now, wconf, outbox_cap, router,
             delivery, extra_lane=extra, delta_eps=delta_eps)
         if extra is not None:
@@ -1276,48 +1544,75 @@ def _tick_program_2d(rounds, params, topo, states, sink, sink_seen,
     queries, ans, qstats = query_answer_stage(
         queries, wire_d, qb, adm_drop, n_adm, tuple(new_states), sink,
         sink_seen, now, stats_all, router, extra_work=occ1)
+    # training plane: every stage gathers ALL rounds' caches over the
+    # stage axis and runs the identical full-L backward (TrainState stays
+    # stage-replicated; see module docstring of core/train_plane.py)
+    new_ts = ts
+    if tcfg is not None:
+        S = router.n_stages
+        L = R * S
+        # per-stage stats cover only that stage's layers: the movement
+        # vote needs the extra stage-axis reduction
+        moved = router.psum_stage(sum(moved_msgs(s) for s in stats_all))
+        feats_all = [None] * L
+        for r in range(R):
+            gf = router.stage_gather(new_states[r].feat)
+            ga = router.stage_gather(new_states[r].agg)
+            gc = router.stage_gather(new_states[r].agg_cnt)
+            for s in range(S):
+                feats_all[r * S + s] = (gf[s], ga[s], gc[s])
+        layers_bw = tuple(
+            (rounds[0], {"p": ts.params[f"l{l}"],
+                         "act": jnp.asarray(acts[l], jnp.float32)}, True)
+            for l in range(L))
+        new_ts = train_stage(tcfg, head, layers_bw, tuple(feats_all),
+                             topo, sink, sink_seen, ts, lb, final_fb,
+                             now, moved, router, part0)
     idle_v = router.psum(jnp.stack(idle))[None]   # [1, R] -> [S, R]
     return (topo, tuple(ex(s) for s in new_states), sink, sink_seen,
             queries, new_ring, tuple(ex(s) for s in stats_all), idle_v,
-            ans, qstats)
+            ans, qstats, new_ts)
 
 
 @partial(jax.jit, static_argnames=("rounds", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh",
-                                   "delta_eps"))
+                                   "delta_eps", "tcfg", "head", "acts"))
 def _tick_jit_2d(rounds, params, topo, states, sink, sink_seen, queries,
-                 ring, inbox, eb, rb, vb, qb, now, wconf, outbox_cap,
-                 router, delivery, mesh, delta_eps=0.0):
+                 ring, inbox, eb, rb, vb, qb, lb, ts, now, wconf,
+                 outbox_cap, router, delivery, mesh, delta_eps=0.0,
+                 tcfg=None, head=None, acts=None):
     """The per-tick driver's device program on the 2-D mesh."""
     def prog(params, topo, states, sink, sink_seen, queries, ring, inbox,
-             eb, rb, vb, qb, now):
+             eb, rb, vb, qb, lb, ts, now):
         return _tick_program_2d(
             rounds, params, topo, states, sink, sink_seen, queries, ring,
-            inbox, eb, rb, vb, qb, now, wconf, outbox_cap, router,
-            delivery, delta_eps)
+            inbox, eb, rb, vb, qb, lb, now, wconf, outbox_cap, router,
+            delivery, delta_eps, ts, tcfg, head, acts)
 
     cp = stage_carry_pspecs(len(rounds))
+    tspec = train_pspecs(ts) if tcfg is not None else P()
     pspec = jax.tree.map(lambda _: P("stage"), params)
     sharded = shard_map(
         prog, mesh=mesh,
         in_specs=(pspec, cp.topo, cp.layers, cp.sink, cp.sink_seen,
                   cp.queries, cp.stage_ring, P(), P(), P(), P(), P(),
-                  P()),
+                  P(), tspec, P()),
         out_specs=(cp.topo, cp.layers, cp.sink, cp.sink_seen, cp.queries,
                    cp.stage_ring, stage_stats_pspecs(len(rounds)),
-                   P("stage"), P("data"), P()),
+                   P("stage"), P("data"), P(), tspec),
         check_rep=False)
     return sharded(params, topo, states, sink, sink_seen, queries, ring,
-                   inbox, eb, rb, vb, qb, now)
+                   inbox, eb, rb, vb, qb, lb, ts, now)
 
 
 @partial(jax.jit, static_argnames=("rounds", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh",
-                                   "delta_eps"),
+                                   "delta_eps", "tcfg", "head", "acts"),
          donate_argnums=(2,))
 def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
                         wconf: win.WindowConfig, outbox_cap: int, router,
-                        delivery=None, mesh=None, delta_eps=0.0):
+                        delivery=None, mesh=None, delta_eps=0.0,
+                        tcfg=None, head=None, acts=None):
     """T micro-ticks of the PIPELINED program as one `lax.scan`.
 
     Same contract as `_super_tick_scan` plus: the donated carry includes
@@ -1334,12 +1629,13 @@ def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
 
         def body(state, batch_t):
             c, ssum, isum, qsum = state
-            fb, eb, rb, vb, qb = batch_t
+            fb, eb, rb, vb, qb, lb = batch_t
             (topo, new_layers, sink, sink_seen, queries, ring, stats_t,
-             idle_t, ans, qstats_t) = _tick_program_2d(
+             idle_t, ans, qstats_t, new_ts) = _tick_program_2d(
                 rounds, params, c.topo, c.layers, c.sink, c.sink_seen,
-                c.queries, c.stage_ring, fb, eb, rb, vb, qb, c.now,
-                wconf, outbox_cap, router, delivery, delta_eps)
+                c.queries, c.stage_ring, fb, eb, rb, vb, qb, lb, c.now,
+                wconf, outbox_cap, router, delivery, delta_eps, c.train,
+                tcfg, head, acts)
             # rows still in flight between stages are pending work; the
             # valid flag packs LAST in a FeatBatch wire row
             occ = jnp.sum((ring[0, ..., -1] > 0.5).astype(jnp.int32))
@@ -1349,7 +1645,8 @@ def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
             new_c = st.PipelineCarry(
                 topo=topo, layers=new_layers, sink=sink,
                 sink_seen=sink_seen, queries=queries,
-                now=c.now + jnp.int32(1), quiet=quiet, stage_ring=ring)
+                now=c.now + jnp.int32(1), quiet=quiet, stage_ring=ring,
+                train=new_ts)
             ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
             return (new_c, ssum, isum + idle_t,
                     add_query_stats(qsum, qstats_t)), ans
@@ -1362,7 +1659,8 @@ def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
             body, (carry, zeros, izero, zero_query_stats()), batches)
         return final, ssum, isum, qsum, answers
 
-    cp = stage_carry_pspecs(R)
+    cp = stage_carry_pspecs(R, train=(train_pspecs(carry.train)
+                                      if tcfg is not None else None))
     pspec = jax.tree.map(lambda _: P("stage"), params)
     sharded = shard_map(scan_prog, mesh=mesh,
                         in_specs=(pspec, cp, P()),

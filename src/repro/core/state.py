@@ -55,6 +55,13 @@ class TopoState:
     # vertex flags
     v_exists: jnp.ndarray         # [P, N] bool
     is_master: jnp.ndarray        # [P, N] bool
+    # master-coordinate mirror: every local vertex row knows its master's
+    # global (part, slot) — a master row points at itself, a replica row
+    # learns its master from the ReplBatch that created it, -1 = unknown.
+    # The training plane's replica->master gradient fold (hop B in
+    # core/train_plane.py) addresses its wire rows with these.
+    m_part: jnp.ndarray           # [P, N] int32 (-1 until materialized)
+    m_slot: jnp.ndarray           # [P, N] int32
 
     @property
     def n_parts(self):
@@ -126,18 +133,23 @@ class PipelineCarry:
                                   # (None on 1-D meshes: the field flattens
                                   # to zero leaves and the carry pytree is
                                   # unchanged from the stage-free program)
+    train: object = None          # training-plane TrainState
+                                  # (core/train_plane.py) — None when
+                                  # cfg.train_cap == 0: zero leaves, the
+                                  # fifth plane compiles away and the
+                                  # carry pytree matches the prior program
 
 
 for _cls, _df in (
     (TopoState, ["e_src_slot", "e_dst_slot", "e_dst_mpart", "e_dst_mslot",
                  "e_valid", "r_master_slot", "r_rep_part", "r_rep_slot",
-                 "r_valid", "v_exists", "is_master"]),
+                 "r_valid", "v_exists", "is_master", "m_part", "m_slot"]),
     (LayerState, ["feat", "has_feat", "x_sent", "has_sent", "agg", "agg_cnt",
                   "red_pending", "red_deadline", "fwd_pending", "fwd_deadline",
                   "cms", "last_touch", "bc_defer", "bc_defer_ok",
                   "rmi_defer", "rmi_defer_ok"]),
     (PipelineCarry, ["topo", "layers", "sink", "sink_seen", "queries",
-                     "now", "quiet", "stage_ring"]),
+                     "now", "quiet", "stage_ring", "train"]),
 ):
     jax.tree_util.register_dataclass(_cls, data_fields=_df, meta_fields=[])
 
@@ -152,7 +164,9 @@ def init_topo(n_parts: int, edge_cap: int, repl_cap: int,
         e_valid=zb(n_parts, edge_cap),
         r_master_slot=zi(n_parts, repl_cap), r_rep_part=zi(n_parts, repl_cap),
         r_rep_slot=zi(n_parts, repl_cap), r_valid=zb(n_parts, repl_cap),
-        v_exists=zb(n_parts, node_cap), is_master=zb(n_parts, node_cap))
+        v_exists=zb(n_parts, node_cap), is_master=zb(n_parts, node_cap),
+        m_part=jnp.full((n_parts, node_cap), -1, jnp.int32),
+        m_slot=jnp.full((n_parts, node_cap), -1, jnp.int32))
 
 
 def init_layer(n_parts: int, node_cap: int, d_in: int, d_agg: int,
@@ -206,13 +220,24 @@ def apply_repl_batch(topo: TopoState, rb, part0=0) -> TopoState:
     def scat(dst, val):
         return flat(dst).at[idx].set(val, mode="drop").reshape(P, R)
 
+    # mirror fill: the REPLICA row (possibly on another device's block)
+    # learns its master coordinate — a separate node-table scatter, since
+    # the record itself lives in the master's replication table
+    N = topo.v_exists.shape[1]
+    ridx, _ = local_index(rb.rep_part, rb.rep_slot, part0, P, N, rb.valid)
+    m_part = topo.m_part.reshape(P * N).at[ridx].set(
+        rb.part, mode="drop").reshape(P, N)
+    m_slot = topo.m_slot.reshape(P * N).at[ridx].set(
+        rb.master_slot, mode="drop").reshape(P, N)
+
     from dataclasses import replace as _replace
     return _replace(
         topo,
         r_master_slot=scat(topo.r_master_slot, rb.master_slot),
         r_rep_part=scat(topo.r_rep_part, rb.rep_part),
         r_rep_slot=scat(topo.r_rep_slot, rb.rep_slot),
-        r_valid=scat(topo.r_valid, rb.valid))
+        r_valid=scat(topo.r_valid, rb.valid),
+        m_part=m_part, m_slot=m_slot)
 
 
 def apply_vertex_batch(topo: TopoState, vb, part0=0) -> TopoState:
@@ -223,4 +248,12 @@ def apply_vertex_batch(topo: TopoState, vb, part0=0) -> TopoState:
         True, mode="drop").reshape(P, N)
     is_master = topo.is_master.reshape(P * N).at[idx].max(
         vb.is_master, mode="drop").reshape(P, N)
-    return _replace(topo, v_exists=v_exists, is_master=is_master)
+    # mirror fill: a master row's master coordinate is itself
+    idx_m, _ = local_index(vb.part, vb.slot, part0, P, N,
+                           vb.valid & vb.is_master)
+    m_part = topo.m_part.reshape(P * N).at[idx_m].set(
+        vb.part, mode="drop").reshape(P, N)
+    m_slot = topo.m_slot.reshape(P * N).at[idx_m].set(
+        vb.slot, mode="drop").reshape(P, N)
+    return _replace(topo, v_exists=v_exists, is_master=is_master,
+                    m_part=m_part, m_slot=m_slot)

@@ -1,12 +1,15 @@
 """The per-layer micro-tick: streaming (Alg. 1) and windowed (Alg. 2)
-forward pass, factored into FOUR planes — a part-local COMPUTE plane
+forward pass, factored into FIVE planes — a part-local COMPUTE plane
 (the four stages below, ISSUE 2), an explicit ROUTING plane
 (`dist/router.py`), a pluggable DELIVERY plane (`core/delivery.py`,
-ISSUE 3) that lands routed records in the local state blocks, and a
+ISSUE 3) that lands routed records in the local state blocks, a
 QUERY plane (`serve/query.py`, ISSUE 4) that answers point queries from
 the state the other three maintain — it runs after the layer ticks and
 the sink update (see `core/pipeline.py`), reading this module's
-red/fwd pending flags as the per-target freshness signal.
+red/fwd pending flags as the per-target freshness signal — and a
+TRAINING plane (`core/train_plane.py`, ISSUE 8) that closes the tick
+with a windowed online training step backpropagating through the live
+caches the compute plane just refreshed.
 
 One tick = two routing rounds (DESIGN §2), four pure stages with a
 Router delivery between them:

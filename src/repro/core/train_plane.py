@@ -1,0 +1,474 @@
+"""The TRAINING plane: windowed online learning inside the tick (§4.3,
+NeutronStream/GNNFlow — the fifth plane).
+
+The legacy path (`core/training.py`) reproduces the paper's stop-the-world
+life-cycle: halt the splitter, flush, full-batch backprop, Alg. 3
+averaging, rebuild.  This module makes training ride the live dataflow
+instead: every tick ends with a `train_stage` that
+
+  1. ingests a fixed-capacity `LabelBatch` (label events addressed to
+     master coordinates, admission-capped by `PipelineConfig.train_cap` —
+     0, the default, compiles the whole plane away);
+  2. forms the sliding-window batch NeutronStream-style: masters that are
+     labeled AND materialized in the sink AND touched within the last
+     `TrainConfig.window` ticks (window=0 disables the recency gate);
+  3. runs the layered backward of §4.3.2 through the LIVE sharded state —
+     the same cached-synopsis VJP as the halt-flush oracle, but with the
+     two cross-part hops (master→replica dagg shipping, replica→master
+     gradient folding) riding `route_lanes` as dense packed-wire lanes
+     instead of host-side global gathers;
+  4. optionally error-feedback-compresses the per-part gradients
+     (`dist/grad_compression.py`, residual carried in `TrainState`);
+  5. applies Algorithm 3 (vmapped per-part optimizer + global parameter
+     mean) — but only when the batch FIRES (global active count >=
+     `TrainConfig.batch_threshold`); a non-firing tick leaves parameters,
+     optimizer state and residuals bit-untouched.
+
+The backward itself runs unconditionally every tick and the fire flag
+only masks the *application*: a data-dependent `lax.cond` around the
+collectives would be illegal under `shard_map`, and the masked form keeps
+the one-collective-schedule-per-tick contract of every other plane.
+
+Quiescence contract: the plane contributes ZERO pending work, so
+`core/termination.py` is untouched.  Batch-formation bookkeeping makes
+that safe: a fire consumes (clears) the dirty set, and any tick that
+still MOVED messages re-dirties every labeled-and-seen master.  During a
+flush the first quiet tick therefore fires one final step on exactly the
+quiescent fixed point (where the caches equal the static oracle's), and
+every later quiet tick has an empty batch — training can never keep a
+flush alive, and a flushed stream's last recorded gradients are the
+oracle's (`tests/test_train_plane.py` pins this against
+`TrainingCoordinator._full_batch_grads` / `jax.grad`).
+
+`TrainState` lives in the donated `PipelineCarry` (`PipelineCarry.train`),
+block-sharded by `train_pspecs`/`train_shardings` (labels/dirty/touch and
+per-part optimizer state on the part axis, parameters and global
+gradients replicated), rides the consistent checkpoint cut
+(`ft/checkpoint.py`), and is stage-REPLICATED on 2-D meshes: each stage
+row runs the identical deterministic backward over stage-gathered layer
+caches, so data-axis collectives keep every stage's copy bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.events import MsgBatch
+from repro.core.state import local_index
+from repro.dist.grad_compression import compress_decompress
+from repro.dist.router import MeshRouter
+from repro.dist.wire import init_defer
+from repro.optim.optimizers import Optimizer
+
+
+# ----------------------------------------------------------------- config
+@dataclass(frozen=True)
+class TrainConfig:
+    """Validated training knobs, shared by BOTH training paths.
+
+    The legacy halt-flush coordinator (`core/training.py`) and the online
+    plane consume the same record, so switching between them is a config
+    change, not an API fork:
+
+      optimizer       : `repro/optim/optimizers.py` Optimizer (hashable
+                        NamedTuple of pure functions).
+      lr              : step size (both paths).
+      batch_threshold : legacy — per-part label count for a StartTraining
+                        vote; online — GLOBAL active-batch size at which a
+                        tick's step fires.
+      epochs          : legacy — full-batch passes per train() call.  The
+                        online plane takes one step per firing tick and
+                        ignores it.
+      window          : online — sliding recency window in ticks
+                        (NeutronStream batch formation): only masters
+                        touched within the last `window` ticks join the
+                        batch.  0 = no recency gate.  Ignored by legacy.
+      compression     : route per-part gradients through the
+                        error-feedback compressor before Alg. 3
+                        (`dist/grad_compression.py`); the residual is
+                        carried in `TrainState` (online) or host-side
+                        (legacy).
+      int8, topk_frac : compressor parameters.
+
+    Frozen and hashable so it can ride jit boundaries as a static
+    argument, like PipelineConfig/WindowConfig.
+    """
+    optimizer: Optimizer
+    lr: float = 1e-2
+    batch_threshold: int = 8
+    epochs: int = 1
+    window: int = 0
+    compression: bool = False
+    int8: bool = True
+    topk_frac: float = 0.25
+
+    def __post_init__(self):
+        if not isinstance(self.optimizer, Optimizer):
+            raise ValueError(
+                f"optimizer must be a repro.optim Optimizer, got "
+                f"{type(self.optimizer).__name__}")
+        if self.batch_threshold < 1:
+            raise ValueError(
+                f"batch_threshold={self.batch_threshold} must be >= 1")
+        if self.epochs < 1:
+            raise ValueError(f"epochs={self.epochs} must be >= 1")
+        if self.window < 0:
+            raise ValueError(f"window={self.window} must be >= 0 "
+                             "(0 disables the recency gate)")
+        if not (self.lr >= 0.0):
+            raise ValueError(f"lr={self.lr} must be finite and >= 0")
+        if not (0.0 < self.topk_frac <= 1.0):
+            raise ValueError(
+                f"topk_frac={self.topk_frac} must be in (0, 1]")
+
+
+# ------------------------------------------------------------------ state
+@dataclass(frozen=True)
+class TrainState:
+    """Device-side training-plane state, one field group per concern.
+
+    Donation-safe: fixed shapes/dtypes, scalars as device arrays.
+    """
+    labels: jnp.ndarray      # [P, N] int32 gold class per master slot
+    label_mask: jnp.ndarray  # [P, N] bool  slot carries a label
+    dirty: jnp.ndarray       # [P, N] bool  labeled master awaiting a step
+    touch: jnp.ndarray       # [P, N] int32 last tick the sink row moved
+    params: dict             # {f"l{i}": tree} live layer params (replicated)
+    head_params: object      # head tree (replicated)
+    opt: dict                # {f"l{i}": vmapped per-part state, "head": plain}
+    residual: dict           # {f"l{i}": [P, ...] f32} error-feedback carry
+                             # (empty dict when compression is off)
+    last_grad: dict          # {f"l{i}": tree, "head": tree} GLOBAL summed
+                             # grads of the last fired step (f32, replicated)
+    loss: jnp.ndarray        # f32 scalar, last fired step
+    grad_norm: jnp.ndarray   # f32 scalar, last fired step
+    steps: jnp.ndarray       # int32 scalar, fired steps so far
+
+
+jax.tree_util.register_dataclass(
+    TrainState,
+    data_fields=["labels", "label_mask", "dirty", "touch", "params",
+                 "head_params", "opt", "residual", "last_grad", "loss",
+                 "grad_norm", "steps"],
+    meta_fields=[])
+
+
+def init_train_state(n_parts: int, node_cap: int, layer_params: dict,
+                     head_params, tcfg: TrainConfig) -> TrainState:
+    """Fresh training-plane state for `n_parts` GLOBAL parts.
+
+    `layer_params` is {f"l{i}": tree}; optimizer state is initialized
+    vmapped over the part axis (Alg. 3 keeps one local optimizer per
+    logical part) except for the single-operator head."""
+    Pn, N = n_parts, node_cap
+    f32 = jnp.float32
+    params = {k: jax.tree.map(jnp.asarray, v) for k, v in layer_params.items()}
+    opt = {}
+    for k, v in params.items():
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (Pn,) + p.shape), v)
+        opt[k] = jax.vmap(tcfg.optimizer.init)(stacked)
+    opt["head"] = tcfg.optimizer.init(head_params)
+    residual = {}
+    if tcfg.compression:
+        residual = {k: jax.tree.map(
+            lambda p: jnp.zeros((Pn,) + p.shape, f32), v)
+            for k, v in params.items()}
+    last_grad = {k: jax.tree.map(lambda p: jnp.zeros(p.shape, f32), v)
+                 for k, v in params.items()}
+    last_grad["head"] = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, f32), head_params)
+    return TrainState(
+        labels=jnp.zeros((Pn, N), jnp.int32),
+        label_mask=jnp.zeros((Pn, N), bool),
+        dirty=jnp.zeros((Pn, N), bool),
+        touch=jnp.zeros((Pn, N), jnp.int32),
+        params=params, head_params=jax.tree.map(jnp.asarray, head_params),
+        opt=opt, residual=residual, last_grad=last_grad,
+        loss=jnp.float32(0.0), grad_norm=jnp.float32(0.0),
+        steps=jnp.int32(0))
+
+
+def _train_tree(ts: TrainState, part, rep) -> TrainState:
+    """Spec/sharding skeleton: `part` for part-leading tables, `rep` for
+    replicated leaves.  A builder (not a generic tree_map) because
+    PartitionSpec is itself a tuple pytree node."""
+    rmap = lambda t: jax.tree.map(lambda _: rep, t)
+    pmap = lambda t: jax.tree.map(lambda _: part, t)
+    return TrainState(
+        labels=part, label_mask=part, dirty=part, touch=part,
+        params=rmap(ts.params), head_params=rmap(ts.head_params),
+        opt={k: (rmap(v) if k == "head" else pmap(v))
+             for k, v in ts.opt.items()},
+        residual=pmap(ts.residual), last_grad=rmap(ts.last_grad),
+        loss=rep, grad_norm=rep, steps=rep)
+
+
+def train_pspecs(ts: TrainState, axis: str = "data") -> TrainState:
+    """PartitionSpecs matching `ts`: part-leading tables block-sharded on
+    the data axis, parameters/global grads/scalars replicated (which on a
+    2-D mesh also replicates them over the stage axis)."""
+    return _train_tree(ts, P(axis), P())
+
+
+def train_shardings(mesh, ts: TrainState, axis: str = "data") -> TrainState:
+    return _train_tree(ts, NamedSharding(mesh, P(axis)),
+                       NamedSharding(mesh, P()))
+
+
+# --------------------------------------------------------------- backward
+def _dense(router):
+    """Gradient lanes never defer or drop: route them at full (dense)
+    bucket capacity regardless of the data plane's route_cap."""
+    if isinstance(router, MeshRouter) and router.route_cap is not None:
+        return dataclasses.replace(router, route_cap=None)
+    return router
+
+
+def backward_layer_routed(layer, params, topo, feat, agg, cnt, g_next,
+                          router, part0):
+    """One layer of §4.3.2 on the LOCAL block of parts.
+
+    Identical math to `core/training.py:backward_layer`, with the two
+    cross-part transfers made explicit:
+
+      hop A (phase 1 step 4): dL/dagg computed at masters is shipped to
+        every replica over the replication records, so each edge can
+        gather it at its LOCAL destination slot;
+      hop B (phase 2 step 4): per-edge source gradients accumulated at
+        replica rows fold back onto the master coordinate (TopoState's
+        m_part/m_slot mirror gives every local row its master address).
+
+    On one device (`router.n_devices == 1` — LocalRouter or a trivial
+    mesh) both hops collapse to the oracle's global gathers and the
+    result is BIT-identical to `backward_layer`.  On D > 1 the hops ride
+    `route_lanes` as dense packed lanes; scatter-add ORDER then differs
+    from the oracle's fold, so cross-device equality is to float
+    tolerance (1e-5 in the golden tests), not bitwise.
+
+    Returns (per-part param grads [P_loc, ...], g_prev [P_loc, N, d_in]).
+    """
+    Pl, N, d_in = feat.shape
+    pp = jnp.arange(Pl)[:, None]
+    feat_flat = feat.reshape(Pl * N, d_in)
+    agg_flat = agg.reshape(Pl * N, -1)
+    cnt_flat = cnt.reshape(Pl * N)
+    g_flat = g_next.reshape(Pl * N, -1)
+    mean = agg_flat / jnp.maximum(cnt_flat, 1.0)[:, None]
+
+    def per_part(x_p, a_p, g_p):
+        _, vjp = jax.vjp(lambda q, x, a: layer.update(q, x, a),
+                         params, x_p, a_p)
+        return vjp(g_p)
+
+    dparams, dx_self, dmean = jax.vmap(per_part)(
+        feat_flat.reshape(Pl, N, d_in), mean.reshape(Pl, N, -1),
+        g_flat.reshape(Pl, N, -1))
+    dx_self = dx_self.reshape(Pl * N, d_in)
+    dmean = dmean.reshape(Pl * N, -1)
+    dagg = dmean / jnp.maximum(cnt_flat, 1.0)[:, None]
+    d_agg = dagg.shape[-1]
+    is_m = topo.is_master.reshape(Pl * N)
+    src = (pp * N + topo.e_src_slot).reshape(-1)
+    live = topo.e_valid.reshape(-1)
+
+    def phi_vjp(x_e, g_e):
+        _, vjp = jax.vjp(lambda x: layer.message(params, x), x_e)
+        return vjp(g_e)[0]
+
+    if router.n_devices == 1:
+        # single-device fast path: the oracle's global-gather fold,
+        # bit-for-bit `core/training.py:backward_layer`
+        tgt = (topo.e_dst_mpart * N + topo.e_dst_mslot).reshape(-1)
+        dm = jnp.where(live[:, None], dagg[tgt], 0.0)
+        dx_src = phi_vjp(feat_flat[src], dm)
+        g_prev = jnp.zeros((Pl * N, d_in)).at[src].add(
+            jnp.where(live[:, None], dx_src, 0.0), mode="drop")
+        r_midx = (pp * N + topo.r_master_slot).reshape(-1)
+        r_tgt = (topo.r_rep_part * N + topo.r_rep_slot).reshape(-1)
+        r_live = topo.r_valid.reshape(-1)
+        fold = jnp.where(r_live[:, None], g_prev[r_tgt], 0.0)
+        g_prev = g_prev.at[jnp.where(r_live, r_midx, Pl * N)].add(
+            fold, mode="drop")
+        g_prev = g_prev.at[jnp.where(r_live, r_tgt, Pl * N)].set(
+            0.0, mode="drop")
+        g_prev = g_prev + jnp.where(is_m[:, None], dx_self, 0.0)
+        return dparams, g_prev.reshape(Pl, N, d_in)
+
+    droute = _dense(router)
+    Rc = topo.r_master_slot.shape[1]
+
+    # hop A: master dagg -> replica rows (one row per replication record)
+    r_src = (pp * N + topo.r_master_slot).reshape(-1)
+    ha = MsgBatch(
+        part=topo.r_rep_part.reshape(-1), slot=topo.r_rep_slot.reshape(-1),
+        vec=dagg[r_src], cnt=jnp.zeros((Pl * Rc,), jnp.float32),
+        src_part=jnp.broadcast_to(part0 + pp, (Pl, Rc)
+                                  ).reshape(-1).astype(jnp.int32),
+        valid=topo.r_valid.reshape(-1))
+    (da,), _, _ = droute.route_lanes((ha,), (init_defer(0, d_agg + 5),))
+    ia, _ = local_index(da.part, da.slot, part0, Pl, N, da.valid)
+    dagg_rep = jnp.zeros((Pl * N, d_agg)).at[ia].set(
+        jnp.where(da.valid[:, None], da.vec, 0.0), mode="drop")
+    dagg_t = jnp.where(is_m[:, None], dagg, dagg_rep)
+
+    # per-edge message grads gather at the edge's LOCAL destination slot
+    # (same VALUE as the oracle's master gather: hop A shipped it here)
+    dst = (pp * N + topo.e_dst_slot).reshape(-1)
+    dm = jnp.where(live[:, None], dagg_t[dst], 0.0)
+    dx_src = phi_vjp(feat_flat[src], dm)
+    g_loc = jnp.zeros((Pl * N, d_in)).at[src].add(
+        jnp.where(live[:, None], dx_src, 0.0), mode="drop")
+    g_loc = g_loc + jnp.where(is_m[:, None], dx_self, 0.0)
+
+    # hop B: replica-row accumulations -> master coordinates
+    hb_valid = (topo.v_exists.reshape(-1) & ~is_m
+                & (topo.m_part.reshape(-1) >= 0))
+    hb = MsgBatch(
+        part=topo.m_part.reshape(-1), slot=topo.m_slot.reshape(-1),
+        vec=g_loc, cnt=jnp.zeros((Pl * N,), jnp.float32),
+        src_part=jnp.broadcast_to(part0 + pp, (Pl, N)
+                                  ).reshape(-1).astype(jnp.int32),
+        valid=hb_valid)
+    (db,), _, _ = droute.route_lanes((hb,), (init_defer(0, d_in + 5),))
+    ib, _ = local_index(db.part, db.slot, part0, Pl, N, db.valid)
+    g_prev = jnp.where(is_m[:, None], g_loc, 0.0).at[ib].add(
+        jnp.where(db.valid[:, None], db.vec, 0.0), mode="drop")
+    return dparams, g_prev.reshape(Pl, N, d_in)
+
+
+# ------------------------------------------------------------ train stage
+def train_stage(tcfg: TrainConfig, head, layers_bw, layer_feats, topo,
+                sink, sink_seen, ts: TrainState, lb, sink_fb, now, moved,
+                router, part0) -> TrainState:
+    """The fifth plane: one windowed online step at the end of a tick.
+
+    layers_bw   : per layer (layer, params-for-backward, take_p) — take_p
+                  extracts the "p" sub-tree of the VJP's param grads (the
+                  2-D path wraps params as {"p": ..., "act": ...}).
+    layer_feats : per layer (feat, agg, agg_cnt) caches on the local
+                  block (stage-gathered on 2-D meshes so every stage
+                  holds all L layers).
+    lb          : LabelBatch, capacity = cfg.train_cap.
+    sink_fb     : the tick's final feature batch (rows whose sink entry
+                  moved — their masters' recency `touch` refreshes).
+    moved       : int32 scalar, GLOBAL messages moved this tick (0 at the
+                  quiescent fixed point).
+    """
+    Pl, N = ts.labels.shape
+    flat = Pl * N
+    i32 = jnp.int32
+
+    # (1) label ingest at master coordinates
+    il, _ = local_index(lb.part, lb.slot, part0, Pl, N, lb.valid)
+    labels = ts.labels.reshape(flat).at[il].set(
+        lb.label, mode="drop").reshape(Pl, N)
+    lmask = ts.label_mask.reshape(flat).at[il].set(
+        True, mode="drop").reshape(Pl, N)
+    dirty = ts.dirty.reshape(flat).at[il].set(
+        True, mode="drop").reshape(Pl, N)
+    touch = ts.touch.reshape(flat).at[il].set(
+        now, mode="drop").reshape(Pl, N)
+
+    # (2) recency refresh from this tick's sink updates
+    it, _ = local_index(sink_fb.part, sink_fb.slot, part0, Pl, N,
+                        sink_fb.valid)
+    touch = touch.reshape(flat).at[it].set(now, mode="drop").reshape(Pl, N)
+
+    # (3) sliding-window batch formation + the global fire vote
+    win_ok = (i32(tcfg.window) <= 0) | ((now - touch) <= i32(tcfg.window))
+    active = dirty & lmask & sink_seen & win_ok
+    n_active = router.psum(jnp.sum(active.astype(i32)))
+    fire = n_active >= i32(tcfg.batch_threshold)
+
+    # (4) output operator: masked-mean CE over the global active batch
+    n1 = jnp.maximum(router.psum(jnp.sum(active.astype(jnp.float32))), 1.0)
+
+    def local_loss(hp, x):
+        logits = head(hp, x).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        gold = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return jnp.sum(jnp.where(active, -gold, 0.0)) / n1
+
+    lsum, (d_hp, g) = jax.value_and_grad(local_loss, argnums=(0, 1))(
+        ts.head_params, sink)
+    loss = router.psum(lsum)
+    head_grad = jax.tree.map(router.psum, d_hp)
+
+    # (5) layered backward through the live caches
+    part_grads, glob = {}, {}
+    for li in reversed(range(len(layers_bw))):
+        layer, lp, take_p = layers_bw[li]
+        feat, agg, cntv = layer_feats[li]
+        dparams, g = backward_layer_routed(layer, lp, topo, feat, agg,
+                                           cntv, g, router, part0)
+        if take_p:
+            dparams = dparams["p"]
+        part_grads[f"l{li}"] = dparams
+        glob[f"l{li}"] = jax.tree.map(
+            lambda a: router.psum(jnp.sum(a, 0)), dparams)
+    glob["head"] = head_grad
+
+    # (6) diagnostics
+    gn_sq = sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                for leaf in jax.tree.leaves(glob))
+    grad_norm = jnp.sqrt(gn_sq)
+
+    # (7) Algorithm 3, fire-masked: per-part optimizer, global mean update
+    new_params, new_opt, new_res = {}, {}, {}
+    inv_p = jnp.float32(1.0 / router.n_parts)
+    for name in part_grads:
+        gpart = part_grads[name]
+        if tcfg.compression:
+            res = ts.residual[name]
+            gpart2, res2 = jax.vmap(
+                lambda gg, rr: compress_decompress(
+                    gg, rr, int8=tcfg.int8, topk_frac=tcfg.topk_frac)
+            )(gpart, res)
+            new_res[name] = jax.tree.map(
+                lambda a, b: jnp.where(fire, a, b), res2, res)
+            gpart = gpart2
+        base = ts.params[name]
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (Pl,) + p.shape), base)
+
+        def one(p, gg, s):
+            return tcfg.optimizer.update(s, gg, p, tcfg.lr)
+
+        upd, s_new = jax.vmap(one)(stacked, gpart, ts.opt[name])
+        delta = jax.tree.map(
+            lambda u: router.psum(jnp.sum(u, 0)) * inv_p, upd)
+        new_params[name] = jax.tree.map(
+            lambda p, d: jnp.where(fire, p + d.astype(p.dtype), p),
+            base, delta)
+        new_opt[name] = jax.tree.map(
+            lambda a, b: jnp.where(fire, a, b), s_new, ts.opt[name])
+    upd_h, hs = tcfg.optimizer.update(ts.opt["head"], head_grad,
+                                      ts.head_params, tcfg.lr)
+    new_head = jax.tree.map(
+        lambda p, u: jnp.where(fire, p + u.astype(p.dtype), p),
+        ts.head_params, upd_h)
+    new_opt["head"] = jax.tree.map(
+        lambda a, b: jnp.where(fire, a, b), hs, ts.opt["head"])
+
+    # (8) batch bookkeeping: a fire consumes the batch; a moving stream
+    # re-dirties AFTER the consume, so the final flush fire lands exactly
+    # once, on the quiescent fixed point (see module docstring)
+    dirty = jnp.where(fire, dirty & ~active, dirty)
+    dirty = dirty | (lmask & sink_seen & (moved > 0))
+
+    # (9) assemble (diagnostics latch on fire only)
+    last_grad = jax.tree.map(
+        lambda a, b: jnp.where(fire, a.astype(jnp.float32), b),
+        glob, ts.last_grad)
+    return TrainState(
+        labels=labels, label_mask=lmask, dirty=dirty, touch=touch,
+        params=new_params, head_params=new_head, opt=new_opt,
+        residual=new_res, last_grad=last_grad,
+        loss=jnp.where(fire, loss, ts.loss),
+        grad_norm=jnp.where(fire, grad_norm, ts.grad_norm),
+        steps=ts.steps + fire.astype(jnp.int32))

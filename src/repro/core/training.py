@@ -34,6 +34,8 @@ import numpy as np
 
 from repro.core.pipeline import D3Pipeline
 from repro.core.state import LayerState, TopoState
+from repro.core.train_plane import TrainConfig
+from repro.dist.grad_compression import compress_decompress
 from repro.nn.layers import Linear
 
 
@@ -150,16 +152,28 @@ class TrainResult:
 
 
 class TrainingCoordinator:
-    """Majority-vote start, halt+flush, train, rebuild, resume (§4.3.1)."""
+    """Majority-vote start, halt+flush, train, rebuild, resume (§4.3.1).
+
+    The halt-flush path — the ONLINE training plane's exactness oracle
+    (`core/train_plane.py` golden-tests its quiescent gradients against
+    `_full_batch_grads`). Both paths consume the same validated
+    `TrainConfig`; switching between them is a config change, not an API
+    fork."""
 
     def __init__(self, pipe: D3Pipeline, head: Linear, head_params,
-                 optimizer, lr: float = 1e-2, batch_threshold: int = 8):
+                 cfg: TrainConfig):
+        if not isinstance(cfg, TrainConfig):
+            raise TypeError(
+                "TrainingCoordinator now takes a TrainConfig (optimizer, "
+                "lr, batch_threshold, epochs, compression) instead of "
+                f"loose keyword arguments — got {type(cfg).__name__}")
         self.pipe = pipe
         self.head = head
         self.head_params = head_params
-        self.opt = optimizer
-        self.lr = lr
-        self.batch_threshold = batch_threshold
+        self.cfg = cfg
+        self.opt = cfg.optimizer
+        self.lr = cfg.lr
+        self.batch_threshold = cfg.batch_threshold
         self.labels: dict[int, int] = {}
 
     def observe_labels(self, labels: dict):
@@ -179,8 +193,9 @@ class TrainingCoordinator:
         return self.votes() > self.pipe.cfg.n_parts // 2
 
     # ---------------------------------------------------------------- train
-    def train(self, epochs: int = 1) -> TrainResult:
+    def train(self, epochs: int | None = None) -> TrainResult:
         pipe = self.pipe
+        epochs = self.cfg.epochs if epochs is None else epochs
         flush_ticks = pipe.flush()            # stale-free guarantee
         label_arr, label_mask = self._device_labels()
 
@@ -244,10 +259,23 @@ class TrainingCoordinator:
         return loss, head_grads, dict(part_grads)
 
     def _apply_alg3(self, head_grads, part_grads):
-        """Algorithm 3: local optimizer per part, then parameter mean."""
+        """Algorithm 3: local optimizer per part, then parameter mean.
+        With cfg.compression, per-part gradients pass through the
+        error-feedback compressor first (host-carried residuals)."""
         pipe = self.pipe
         P = pipe.cfg.n_parts
         for name, dparams in part_grads.items():
+            if self.cfg.compression:
+                if not hasattr(self, "_residuals"):
+                    self._residuals = {}
+                if name not in self._residuals:
+                    self._residuals[name] = jax.tree.map(
+                        lambda g: jnp.zeros(g.shape, jnp.float32), dparams)
+                dparams, self._residuals[name] = jax.vmap(
+                    lambda g, r: compress_decompress(
+                        g, r, int8=self.cfg.int8,
+                        topk_frac=self.cfg.topk_frac)
+                )(dparams, self._residuals[name])
             base = pipe.params[name]
             stacked = jax.tree.map(lambda p: jnp.broadcast_to(p, (P,) + p.shape),
                                    base)

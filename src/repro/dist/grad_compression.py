@@ -39,8 +39,16 @@ def init_error_feedback(grads):
 def _compress_leaf(g: jnp.ndarray, res: jnp.ndarray, int8: bool,
                    topk_frac: float):
     """One leaf: error-feedback add, top-k mask, optional int8 round-trip.
-    Returns (reconstructed update, new residual)."""
-    acc = g + res
+    Returns (reconstructed update, new residual), each in its input's
+    dtype (g's resp. res's).
+
+    The accumulator runs in f32 regardless: `dequantize_int8` returns
+    f32, so without the explicit up/down-cast a bf16/f16 gradient would
+    silently promote `sent` AND the carried residual to f32 — a
+    dtype-drifting carry that breaks fixed-dtype donation (and any
+    lax.scan) on the second step. For f32 inputs the casts are no-ops and
+    the arithmetic is bit-identical to the pre-fix path."""
+    acc = g.astype(jnp.float32) + res.astype(jnp.float32)
     flat = acc.reshape(-1)
     n = flat.shape[0]
     k = max(1, int(n * topk_frac))
@@ -54,7 +62,8 @@ def _compress_leaf(g: jnp.ndarray, res: jnp.ndarray, int8: bool,
     else:
         sent = kept
     new_res = flat - sent
-    return sent.reshape(acc.shape), new_res.reshape(acc.shape)
+    return (sent.reshape(acc.shape).astype(g.dtype),
+            new_res.reshape(acc.shape).astype(res.dtype))
 
 
 def compress_decompress(grads, residual, int8: bool = True,

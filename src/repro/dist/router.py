@@ -1,6 +1,6 @@
 """The routing plane: transport of part-addressed record batches.
 
-The streaming tick is split into four planes (ISSUE 2-5):
+The streaming tick is split into five planes (ISSUE 2-5, 8):
 
   * COMPUTE plane — pure part-local stages in `core/tick.py`
     (`round_a_apply`, `round_b_emit`, `apply_rmis`, `forward_psi`) that
@@ -26,6 +26,11 @@ The streaming tick is split into four planes (ISSUE 2-5):
   * QUERY plane — `repro/serve/query.py` answers point queries from the
     state the other three maintain; its link-score wire hop rides
     `route_lanes` fused with layer 0's round-B exchange.
+  * TRAINING plane — `repro/core/train_plane.py` (ISSUE 8) runs a
+    windowed online training step at the end of the tick; its layered
+    backward ships dL/dagg to replicas and folds replica gradients onto
+    masters through two dense `route_lanes` calls per layer, and its
+    parameter averaging (Alg. 3) rides `psum`.
 
 Hybrid parallelism (ISSUE 7): on a 2-D ("stage", "data") mesh the L GNN
 layers are placed round-robin on the stage axis (layer l lives on stage
@@ -169,6 +174,10 @@ class LocalRouter:
     def psum_vote(self, x):
         return x
 
+    def stage_gather(self, x):
+        """All stages' copies of `x`, leading [S] axis ([1] here)."""
+        return x[None]
+
 
 @dataclass(frozen=True)
 class MeshRouter:
@@ -242,6 +251,14 @@ class MeshRouter:
         layer lives on stage S-1; its outbox must reach every stage's
         replicated sink/serve plane in the same tick)."""
         return lax.all_gather(rows, self.stage_axis)[self.n_stages - 1]
+
+    def stage_gather(self, x):
+        """Every stage's copy of `x`, leading [S] axis — the training
+        plane gathers all rounds' layer caches so each stage row can run
+        the full (stage-replicated) layered backward."""
+        if self.stage_axis is None:
+            return x[None]
+        return lax.all_gather(x, self.stage_axis)
 
     def lane_cap(self, capacity: int) -> int:
         """Resolved per-destination bucket rows for a lane of the given

@@ -99,15 +99,18 @@ FAMILY_INPUT_RULES = {
 # body keeps them consistent via psum). The pspec tree doubles as the
 # shard_map in/out specs for the tick program (core/pipeline.py).
 
-def _carry_tree(n_layers: int, part, rep):
+def _carry_tree(n_layers: int, part, rep, train=None):
     """Build a PipelineCarry-shaped tree with `part` at every
-    part-leading leaf and `rep` at every replicated leaf."""
+    part-leading leaf and `rep` at every replicated leaf. `train` is an
+    already-built TrainState spec tree (core/train_plane.py:train_pspecs
+    / train_shardings) or None when the training plane is off."""
     from repro.core.state import LayerState, PipelineCarry, TopoState
     from repro.serve.query import QueryState
     topo = TopoState(
         e_src_slot=part, e_dst_slot=part, e_dst_mpart=part, e_dst_mslot=part,
         e_valid=part, r_master_slot=part, r_rep_part=part, r_rep_slot=part,
-        r_valid=part, v_exists=part, is_master=part)
+        r_valid=part, v_exists=part, is_master=part,
+        m_part=part, m_slot=part)
     # defer rings are [D * K, W] globally — block-sharded on axis 0 like
     # every part-leading table, so each device carries its own [K, W] ring
     layer = LayerState(
@@ -120,18 +123,20 @@ def _carry_tree(n_layers: int, part, rep):
         consistent=part, ok=part, issue=part, vec=part, pending=part,
         wire_defer=part, wire_defer_ok=part)
     return PipelineCarry(topo=topo, layers=(layer,) * n_layers, sink=part,
-                         sink_seen=part, queries=queries, now=rep, quiet=rep)
+                         sink_seen=part, queries=queries, now=rep, quiet=rep,
+                         train=train)
 
 
-def carry_pspecs(n_layers: int, axis: str = "data"):
+def carry_pspecs(n_layers: int, axis: str = "data", train=None):
     """PartitionSpec tree for PipelineCarry (shard_map in/out specs)."""
-    return _carry_tree(n_layers, P(axis), P())
+    return _carry_tree(n_layers, P(axis), P(), train)
 
 
-def carry_shardings(mesh: Mesh, n_layers: int, axis: str = "data"):
+def carry_shardings(mesh: Mesh, n_layers: int, axis: str = "data",
+                    train=None):
     """NamedSharding tree for device_put-ing the carry onto the mesh."""
     return _carry_tree(n_layers, NamedSharding(mesh, P(axis)),
-                       NamedSharding(mesh, P()))
+                       NamedSharding(mesh, P()), train)
 
 
 def stats_pspecs(n_layers: int, axis: str = "data"):
@@ -156,16 +161,21 @@ def stats_pspecs(n_layers: int, axis: str = "data"):
 # psum_vote over both axes). The inter-stage ring is stage-sharded on its
 # leading axis and data-sharded on its row axis.
 
-def _stage_carry_tree(n_rounds: int, part, part2, stage, rep, ring):
+def _stage_carry_tree(n_rounds: int, part, part2, stage, rep, ring,
+                      train=None):
     """PipelineCarry-shaped tree for the pipelined program: `part2` at
     stacked per-round layer leaves, `stage` at the stacked CMS, `part` at
-    stage-replicated part tables, `rep` at scalars, `ring` at stage_ring."""
+    stage-replicated part tables, `rep` at scalars, `ring` at stage_ring,
+    `train` an already-built stage-replicated TrainState spec tree (the
+    training plane uses the same `train_pspecs` as the 1-D mesh — part
+    tables shard over "data" and replicate per stage)."""
     from repro.core.state import LayerState, PipelineCarry, TopoState
     from repro.serve.query import QueryState
     topo = TopoState(
         e_src_slot=part, e_dst_slot=part, e_dst_mpart=part, e_dst_mslot=part,
         e_valid=part, r_master_slot=part, r_rep_part=part, r_rep_slot=part,
-        r_valid=part, v_exists=part, is_master=part)
+        r_valid=part, v_exists=part, is_master=part,
+        m_part=part, m_slot=part)
     layer = LayerState(
         feat=part2, has_feat=part2, x_sent=part2, has_sent=part2, agg=part2,
         agg_cnt=part2, red_pending=part2, red_deadline=part2,
@@ -178,25 +188,26 @@ def _stage_carry_tree(n_rounds: int, part, part2, stage, rep, ring):
         wire_defer=part, wire_defer_ok=part)
     return PipelineCarry(topo=topo, layers=(layer,) * n_rounds, sink=part,
                          sink_seen=part, queries=queries, now=rep, quiet=rep,
-                         stage_ring=ring)
+                         stage_ring=ring, train=train)
 
 
 def stage_carry_pspecs(n_rounds: int, stage_axis: str = "stage",
-                       axis: str = "data"):
+                       axis: str = "data", train=None):
     """PartitionSpec tree for the pipelined PipelineCarry (shard_map
     in/out specs of `_tick_program_2d`)."""
     return _stage_carry_tree(
         n_rounds, P(axis), P(stage_axis, axis), P(stage_axis), P(),
-        P(stage_axis, None, axis))
+        P(stage_axis, None, axis), train)
 
 
 def stage_carry_shardings(mesh: Mesh, n_rounds: int,
-                          stage_axis: str = "stage", axis: str = "data"):
+                          stage_axis: str = "stage", axis: str = "data",
+                          train=None):
     """NamedSharding tree for device_put-ing the pipelined carry."""
     ns = lambda spec: NamedSharding(mesh, spec)
     return _stage_carry_tree(
         n_rounds, ns(P(axis)), ns(P(stage_axis, axis)), ns(P(stage_axis)),
-        ns(P()), ns(P(stage_axis, None, axis)))
+        ns(P()), ns(P(stage_axis, None, axis)), train)
 
 
 def stage_stats_pspecs(n_rounds: int, stage_axis: str = "stage",

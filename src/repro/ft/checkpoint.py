@@ -201,14 +201,19 @@ class CheckpointManager:
                 # hybrid-parallel pipelines DO have a non-empty channel at
                 # the tick cut: the inter-stage ring's in-flight rows ride
                 # the snapshot (None on a 1-D mesh — zero leaves)
-                "stage_ring": getattr(pipe, "stage_ring", None)}
+                "stage_ring": getattr(pipe, "stage_ring", None),
+                # training-plane state (labels/dirty window, live params,
+                # optimizer + error-feedback residuals) is part of the
+                # consistent cut; None when cfg.train_cap == 0
+                "train": getattr(pipe, "train_state", None)}
         self.save(step, tree, meta={"now": pipe.now}, aux=aux)
 
     def restore_pipeline(self, pipe, step: int | None = None) -> int:
         template = {"topo": pipe.topo, "layers": pipe.states,
                     "sink": pipe.sink, "sink_seen": pipe.sink_seen,
                     "queries": pipe.queries, "params": pipe.params,
-                    "stage_ring": getattr(pipe, "stage_ring", None)}
+                    "stage_ring": getattr(pipe, "stage_ring", None),
+                    "train": getattr(pipe, "train_state", None)}
         tree, got_step = self.restore(template, step)
         pipe.topo = tree["topo"]
         pipe.states = tree["layers"]
@@ -218,6 +223,10 @@ class CheckpointManager:
         pipe.params = tree["params"]
         if tree.get("stage_ring") is not None:
             pipe.stage_ring = tree["stage_ring"]
+        if tree.get("train") is not None:
+            pipe.train_state = tree["train"]
+            if hasattr(pipe, "_sync_params_from_train"):
+                pipe._sync_params_from_train()
         h = self.restore_aux(got_step)
         t = pipe.part.t
         t.degree = np.asarray(h["degree"])

@@ -1,13 +1,17 @@
-"""The query plane: on-device point queries over the live sharded state.
+"""Session-style host APIs over the live sharded state.
 
 `serve/query.py` — event records + the device-side query stage (the
 fourth plane of the streaming tick); `serve/session.py` — the host-side
 ServeSession that interleaves update chunks with query admissions over
-both pipeline drivers and reports end-to-end latency percentiles.
+both pipeline drivers and reports end-to-end latency percentiles;
+`serve/train_session.py` — the host-side TrainSession that interleaves
+update chunks with label admissions for the fifth (training) plane and
+reports online-training diagnostics.
 """
 from repro.serve.query import (KIND_EMBED, KIND_LINK, AnswerBatch,
                                QueryBatch, QueryState, QueryStats)
 from repro.serve.session import ServeSession
+from repro.serve.train_session import TrainSession
 
 __all__ = ["KIND_EMBED", "KIND_LINK", "AnswerBatch", "QueryBatch",
-           "QueryState", "QueryStats", "ServeSession"]
+           "QueryState", "QueryStats", "ServeSession", "TrainSession"]

@@ -121,7 +121,7 @@ class ServeSession:
     def advance(self, edges=None, feats=None, window=None):
         """One micro-tick (driver='tick'): queued submissions admit now,
         up to the per-tick admission budget (the rest stay queued)."""
-        cap = self.pipe.cfg.query_admissions()
+        cap = self.pipe.cfg.capacities().query_admissions
         q, self._queue = self._queue[:cap], self._queue[cap:]
         stats = self.pipe.tick(edges, feats, window=window,
                                queries=q or None)
@@ -132,7 +132,8 @@ class ServeSession:
                       T=None, window=None, quiet0: int = 0):
         """One super-tick (driver='super'): queued submissions spread
         over the launch's T micro-ticks (earliest first, at most
-        `query_admissions()` per tick), so admission interleaves with
+        `capacities().query_admissions` per tick), so admission
+        interleaves with
         the update stream on device. Submissions beyond the launch's
         admission budget stay queued for the next advance — they never
         overflow a tick's fixed-capacity query batch."""
@@ -140,7 +141,7 @@ class ServeSession:
         feat_chunks = list(feat_chunks) if feat_chunks is not None else []
         n = max(len(edge_chunks), len(feat_chunks), 1)
         T = int(T) if T is not None else n
-        per_tick = self.pipe.cfg.query_admissions()
+        per_tick = self.pipe.cfg.capacities().query_admissions
         q, self._queue = self._queue[:per_tick * T], self._queue[per_tick * T:]
         q_chunks = [q[i * per_tick: (i + 1) * per_tick] for i in range(T)]
         out = self.pipe.run_super_tick(edge_chunks, feat_chunks, T=T,

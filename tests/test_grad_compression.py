@@ -1,0 +1,109 @@
+"""Error-feedback gradient compression: conservation + dtype contracts.
+
+The fixed-dtype regression here pins the ISSUE 8 bugfix in
+`_compress_leaf`: the error-feedback accumulator runs in f32 internally,
+but `sent` and the carried residual must come back in their INPUT dtypes.
+Before the fix a bf16/f16 gradient silently promoted both to f32 via
+`dequantize_int8` — a dtype-drifting carry that broke fixed-dtype
+donation and any `lax.scan` on the second step (exactly where the online
+training plane now carries the residual).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist.grad_compression import (compress_decompress,
+                                         init_error_feedback)
+
+
+def _rand_tree(rng, dtype=jnp.float32):
+    return {"w": jnp.asarray(rng.normal(size=(32, 16)), dtype),
+            "b": jnp.asarray(rng.normal(size=(16,)), dtype)}
+
+
+@pytest.mark.parametrize("int8", [True, False], ids=["int8", "f32-wire"])
+def test_conservation_invariant(int8):
+    """Per step, compression only MOVES mass between the wire and the
+    residual: sent + new_res == g + res exactly (f32), so the telescoped
+    sum of sent updates + final residual equals the true gradient sum."""
+    rng = np.random.default_rng(0)
+    res = init_error_feedback(_rand_tree(rng))
+    total_sent = jax.tree.map(jnp.zeros_like, res)
+    total_true = jax.tree.map(jnp.zeros_like, res)
+    for _ in range(8):
+        g = _rand_tree(rng)
+        sent, new_res = compress_decompress(g, res, int8=int8,
+                                            topk_frac=0.25)
+        for k in g:
+            np.testing.assert_array_equal(
+                np.asarray(sent[k] + new_res[k]), np.asarray(g[k] + res[k]))
+        total_sent = jax.tree.map(jnp.add, total_sent, sent)
+        total_true = jax.tree.map(jnp.add, total_true, g)
+        res = new_res
+    for k in res:
+        np.testing.assert_allclose(np.asarray(total_sent[k] + res[k]),
+                                   np.asarray(total_true[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16, jnp.float32],
+                         ids=["bf16", "f16", "f32"])
+def test_fixed_dtype_carry(dtype):
+    """sent comes back in the gradient's dtype and the residual in the
+    residual's dtype — int8 round-trip included (the path that used to
+    promote everything to f32)."""
+    rng = np.random.default_rng(1)
+    g = _rand_tree(rng, dtype)
+    res = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), g)
+    sent, new_res = compress_decompress(g, res, int8=True, topk_frac=0.25)
+    for k in g:
+        assert sent[k].dtype == dtype
+        assert new_res[k].dtype == jnp.float32
+    # mixed low-precision residual too: the carry must be a fixed point
+    res_lp = jax.tree.map(lambda x: jnp.zeros_like(x), g)
+    sent, new_res = compress_decompress(g, res_lp, int8=True)
+    for k in g:
+        assert sent[k].dtype == dtype and new_res[k].dtype == dtype
+
+
+def test_scan_carry_is_donation_safe():
+    """The residual must survive a lax.scan carry — the shape/dtype
+    stability contract the online plane's donated TrainState relies on
+    (pre-fix this raised a carry-dtype mismatch on bf16 inputs)."""
+    rng = np.random.default_rng(2)
+    g = _rand_tree(rng, jnp.bfloat16)
+    res0 = jax.tree.map(jnp.zeros_like, g)
+
+    def body(res, _):
+        sent, new_res = compress_decompress(g, res, int8=True,
+                                            topk_frac=0.5)
+        return new_res, jax.tree.map(
+            lambda s: jnp.sum(s.astype(jnp.float32)), sent)
+
+    final, sums = jax.lax.scan(body, res0, None, length=4)
+    for k in g:
+        assert final[k].dtype == jnp.bfloat16
+        assert np.isfinite(np.asarray(sums[k])).all()
+
+
+def test_vmapped_per_part_usage():
+    """The training plane vmaps the compressor over the part axis; every
+    part must carry its own independent residual."""
+    rng = np.random.default_rng(3)
+    P = 4
+    g = {"w": jnp.asarray(rng.normal(size=(P, 8, 8)), jnp.float32)}
+    res = jax.tree.map(jnp.zeros_like, g)
+    sent, new_res = jax.vmap(
+        lambda gg, rr: compress_decompress(gg, rr, int8=True,
+                                           topk_frac=0.25))(g, res)
+    assert sent["w"].shape == (P, 8, 8)
+    for p in range(P):
+        one_s, one_r = compress_decompress(
+            {"w": g["w"][p]}, {"w": res["w"][p]}, int8=True, topk_frac=0.25)
+        np.testing.assert_allclose(np.asarray(sent["w"][p]),
+                                   np.asarray(one_s["w"]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_res["w"][p]),
+                                   np.asarray(one_r["w"]),
+                                   rtol=1e-6, atol=1e-6)

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.core import windowing as win
 from repro.core.oracle import build_snapshot, oracle_embeddings
 from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.core.train_plane import TrainConfig
 from repro.core.training import TrainingCoordinator
 from repro.ft.checkpoint import CheckpointManager
 from repro.graph.graphs import powerlaw_edges
@@ -38,8 +39,9 @@ def test_full_lifecycle(tmp_path):
     half = len(edges) // 2
     pipe.run_stream(edges[:half], feats, tick_edges=64)
     head = Linear(16, 3)
-    coord = TrainingCoordinator(pipe, head, head.init(jax.random.key(1)),
-                                sgd(), lr=0.05, batch_threshold=2)
+    coord = TrainingCoordinator(
+        pipe, head, head.init(jax.random.key(1)),
+        TrainConfig(optimizer=sgd(), lr=0.05, batch_threshold=2))
     coord.observe_labels(labels)
     res = coord.train(epochs=2)
     assert res.losses[-1] <= res.losses[0]

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 from repro.core import windowing as win
 from repro.core.oracle import build_snapshot, oracle_embeddings
 from repro.core.pipeline import D3Pipeline, PipelineConfig
+from repro.core.train_plane import TrainConfig
 from repro.core.training import TrainingCoordinator
 from repro.graph.sage import GraphSAGE
 from repro.nn.layers import Linear
@@ -30,8 +31,9 @@ def setup(seed=0, n_nodes=50, n_edges=150, d_in=8, n_cls=4):
                          window=win.WindowConfig(kind=win.STREAMING))
     pipe = D3Pipeline(model, params, cfg)
     pipe.run_stream(edges, feats, tick_edges=32)
-    coord = TrainingCoordinator(pipe, head, head_params, sgd(), lr=0.1,
-                                batch_threshold=2)
+    coord = TrainingCoordinator(pipe, head, head_params,
+                                TrainConfig(optimizer=sgd(), lr=0.1,
+                                            batch_threshold=2))
     coord.observe_labels(labels)
     return edges, feats, labels, model, params, head, head_params, pipe, coord
 
@@ -106,6 +108,7 @@ def test_majority_vote():
     assert coord.votes() >= 3
     assert coord.should_train()
     coord2 = TrainingCoordinator(coord.pipe, coord.head, coord.head_params,
-                                 sgd(), batch_threshold=10_000)
+                                 TrainConfig(optimizer=sgd(),
+                                             batch_threshold=10_000))
     coord2.observe_labels({0: 1})
     assert not coord2.should_train()
