@@ -40,21 +40,22 @@ n_nodes = 200
 edges = powerlaw_edges(rng, n_nodes, N_EDGES, 1.3)
 feats = {{v: rng.normal(size=16).astype(np.float32) for v in range(n_nodes)}}
 
-def build(mesh=None, route_cap=None):
+def build(mesh=None, route_cap=None, telemetry=False):
     model = GraphSAGE((16, 32, 32))
     params = model.init(jax.random.key(0))
     cfg = PipelineConfig(n_parts=8, node_cap=256, edge_cap=2048,
                          repl_cap=512, feat_cap=512, edge_tick_cap=64,
                          max_nodes=n_nodes, route_cap=route_cap,
+                         telemetry=telemetry,
                          window=win.WindowConfig(kind=win.STREAMING))
     return D3Pipeline(model, params, cfg, mesh=mesh)
 
-def timed(mesh=None, route_cap=None):
-    pipe = build(mesh, route_cap)            # warm-up: compile the scan
+def timed(mesh=None, route_cap=None, telemetry=False):
+    pipe = build(mesh, route_cap, telemetry)  # warm-up: compile the scan
     pipe.run_stream_super(edges[:512], feats, tick_edges=TICK_EDGES,
                           super_ticks=SUPER_T)
     pipe.flush_super(max_ticks=64, T=SUPER_T)
-    pipe = build(mesh, route_cap)
+    pipe = build(mesh, route_cap, telemetry)
     t0 = time.perf_counter()
     pipe.run_stream_super(edges, feats, tick_edges=TICK_EDGES,
                           super_ticks=SUPER_T)
@@ -63,6 +64,9 @@ def timed(mesh=None, route_cap=None):
 
 if D == 1:
     print(f"RESULT,local,{{timed(None):.1f}}")
+    # telemetry-plane overhead (ISSUE 9): same stream with the trace
+    # recorder + occupancy gauges live — the acceptance gate is <= 5%
+    print(f"RESULT,telemetry,{{timed(None, telemetry=True):.1f}}")
 print(f"RESULT,mesh,{{timed(make_stream_mesh(D)):.1f}}")
 if D == 4:
     # traffic-adaptive exchange: route_cap = C_rmi // D (ISSUE 5) — the
@@ -178,6 +182,11 @@ def run(scale: str = "small"):
             base = res["local"]
             rows.append(fmt_row("scaling[local,D=1]", 1e6 / base,
                                 f"events_per_s={base:.0f}"))
+        if "telemetry" in res:
+            tel = res["telemetry"]
+            rows.append(fmt_row(
+                "scaling[local,D=1,telemetry]", 1e6 / tel,
+                f"events_per_s={tel:.0f};vs_off={tel / base:.3f}x"))
         rel = res["mesh"] / base if base else float("nan")
         rows.append(fmt_row(f"scaling[mesh,D={d}]", 1e6 / res["mesh"],
                             f"events_per_s={res['mesh']:.0f};"

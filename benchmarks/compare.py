@@ -1,14 +1,25 @@
-"""Perf-regression gate over BENCH.json snapshots (ISSUE 7).
+"""Perf-regression gate over BENCH.json snapshots (ISSUE 7, 9).
 
 CI's bench lane best-effort-downloads the previous commit's
 ``bench-<sha>`` artifact and runs ``run.py --compare BASELINE.json``:
-any row present in BOTH snapshots whose measured ``events_per_s`` fell
-more than ``REGRESSION_FRAC`` below the baseline fails the lane. Rows
-that appear or disappear between commits never fail (benchmarks
-evolve), rows without an ``events_per_s`` derived column are ignored
-(latency/volume rows have their own validator gates), and a missing
-baseline file is a no-op — the first run after this lands, expired
-artifacts, or a fork without artifact access must not turn red.
+any row present in BOTH snapshots whose gated metrics regressed beyond
+their allowed fraction fails the lane. Three derived columns are gated
+(ISSUE 9 widened this from events_per_s alone):
+
+  events_per_s : throughput, higher is better   (allowed drop 20%)
+  p99_ms       : serving tail latency, lower is better (allowed rise
+                 100% — wall-clock tails on shared CI runners are far
+                 noisier than throughput means)
+  wire_mb      : exact collective bytes, lower is better (allowed rise
+                 25% — wire volume is deterministic arithmetic, so any
+                 rise is a real config/lane change, but new lanes may
+                 legitimately add bytes)
+
+Rows that appear or disappear between commits never fail (benchmarks
+evolve), rows missing a gated column are ignored for that column, and
+a missing baseline file is a no-op — the first run after this lands,
+expired artifacts, or a fork without artifact access must not turn
+red.
 """
 from __future__ import annotations
 
@@ -17,29 +28,48 @@ import os
 
 REGRESSION_FRAC = 0.2
 
+# column -> (higher_is_better, allowed regression fraction)
+GATED_METRICS = {
+    "events_per_s": (True, REGRESSION_FRAC),
+    "p99_ms": (False, 1.0),
+    "wire_mb": (False, 0.25),
+}
+
 
 def compare_rows(rows: list, baseline_rows: list,
-                 threshold: float = REGRESSION_FRAC) -> list:
+                 threshold: float = None) -> list:
     """Regression messages for every row name present in both snapshots
-    whose events_per_s dropped by more than `threshold` (fraction)."""
-    base = {r["name"]: r.get("derived", {}).get("events_per_s")
-            for r in baseline_rows}
+    with a gated metric beyond its allowed fraction. `threshold`
+    overrides the events_per_s allowance (the historical single-metric
+    knob); the latency/volume allowances are fixed in GATED_METRICS."""
+    base = {r["name"]: r.get("derived", {}) for r in baseline_rows}
     msgs = []
     for r in rows:
-        cur = r.get("derived", {}).get("events_per_s")
-        ref = base.get(r["name"])
-        if not cur or not ref:
+        ref_row = base.get(r["name"])
+        if ref_row is None:
             continue
-        if cur < ref * (1.0 - threshold):
-            msgs.append(
-                f"{r['name']}: events_per_s {cur:.0f} is "
-                f"{1.0 - cur / ref:.0%} below baseline {ref:.0f} "
-                f"(allowed {threshold:.0%})")
+        for col, (higher, allowed) in GATED_METRICS.items():
+            if col == "events_per_s" and threshold is not None:
+                allowed = threshold
+            cur = r.get("derived", {}).get(col)
+            ref = ref_row.get(col)
+            if not cur or not ref:
+                continue
+            if higher and cur < ref * (1.0 - allowed):
+                msgs.append(
+                    f"{r['name']}: {col} {cur:.0f} is "
+                    f"{1.0 - cur / ref:.0%} below baseline {ref:.0f} "
+                    f"(allowed {allowed:.0%})")
+            elif not higher and cur > ref * (1.0 + allowed):
+                msgs.append(
+                    f"{r['name']}: {col} {cur:.3f} is "
+                    f"{cur / ref - 1.0:.0%} above baseline {ref:.3f} "
+                    f"(allowed {allowed:.0%})")
     return msgs
 
 
 def compare_to_baseline(rows: list, baseline_path: str,
-                        threshold: float = REGRESSION_FRAC):
+                        threshold: float = None):
     """None if the baseline file is absent (best-effort lane), else the
     list of regression messages (empty = clean)."""
     if not os.path.exists(baseline_path):

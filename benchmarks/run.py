@@ -75,10 +75,12 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as structured JSON")
     ap.add_argument("--compare", default=None, metavar="BASELINE",
-                    help="fail when any shared row's events_per_s drops "
-                         ">20%% below this BENCH.json snapshot (a missing "
-                         "file skips the gate — the CI download is "
-                         "best-effort)")
+                    help="fail when any shared row regresses vs this "
+                         "BENCH.json snapshot: events_per_s drops >20%%, "
+                         "serving p99_ms rises >100%%, or wire_mb rises "
+                         ">25%% (benchmarks/compare.py GATED_METRICS; a "
+                         "missing file skips the gate — the CI download "
+                         "is best-effort)")
     args = ap.parse_args()
 
     if args.profile:
@@ -125,8 +127,8 @@ def main() -> None:
                 print(f"REGRESSION: {msg}")
             raise SystemExit(1)
         else:
-            print(f"perf compare vs {args.compare}: no events_per_s "
-                  "regressions", file=sys.stderr)
+            print(f"perf compare vs {args.compare}: no events_per_s / "
+                  "p99_ms / wire_mb regressions", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -80,6 +80,19 @@ the program is bit-for-bit the four-plane tick.
 `serve/train_session.py:TrainSession` wraps the label queue/driver
 loop, mirroring ServeSession.
 
+Telemetry plane (ISSUE 9): `PipelineConfig.telemetry=True` turns on the
+SIXTH plane — the one that watches the other five. On device, TickStats
+grows exact occupancy gauges (defer-ring populations, pre-cap route and
+per-part outbox demand peaks) and each tick emits one occupancy row
+that rides the super-tick scan's ys — still ONE host sync. On the host,
+every tick appends a row (device gauges + wall/staging timings + exact
+wire bytes + ingest counts) to `telemetry/trace.py:TraceRecorder`
+(`save_trace()` -> .npz) and feeds `ft/stragglers.py`; the cost model
+(`telemetry/cost_model.py`) and capacity advisor
+(`telemetry/advisor.py`) consume the trace offline. `telemetry=False`
+(default) keeps the gauges as static zeros — XLA dead-code-eliminates
+them and the program is bit-for-bit the five-plane tick.
+
 Staging model / constraints:
   - batch capacities derive from PipelineConfig, so every tick's batches
     have identical shapes and stack cleanly along T;
@@ -119,6 +132,8 @@ from repro.dist.sharding import (carry_pspecs, carry_shardings,
                                  stage_carry_pspecs, stage_carry_shardings,
                                  stage_stats_pspecs, stats_pspecs)
 from repro.dist.wire import field_col, pack_lane, pad_lane, unpack_lane
+from repro.ft.stragglers import StragglerMitigator
+from repro.telemetry.trace import TRACE_DEVICE_COLS, TraceRecorder
 from repro.core.train_plane import (TrainConfig, init_train_state,
                                     train_pspecs, train_shardings,
                                     train_stage)
@@ -202,6 +217,16 @@ class PipelineConfig:
                                       # match make_stream_mesh(stage=...);
                                       # 1 (default) = the layer-sequential
                                       # 1-D program, bit-for-bit
+    telemetry: bool = False           # telemetry plane (ISSUE 9): True
+                                      # lights up exact per-plane occupancy
+                                      # gauges (TickStats/RouteReceipt), a
+                                      # per-tick occupancy row riding the
+                                      # scan ys, and the host-side
+                                      # TraceRecorder (D3Pipeline.trace) +
+                                      # StragglerMitigator feed. False
+                                      # (default) compiles every gauge to a
+                                      # static zero — bit-for-bit the
+                                      # untraced program
     partitioner: str = "hdrf"
     base_parallelism: int = 2         # p  (physical, for stats/sharding)
     explosion: float = 1.0            # lambda
@@ -408,6 +433,23 @@ class StreamMetrics:
                                        # inbox, summed over ticks — 0 on a
                                        # 1-D mesh; D3Pipeline.
                                        # bubble_fraction() normalizes it
+    # telemetry plane (ISSUE 9) — all 0 unless PipelineConfig.telemetry:
+    occ_defer_ticks: int = 0           # defer-ring backlog INTEGRAL
+                                       # (end-of-tick bc+rmi ring rows,
+                                       # summed over ticks — the
+                                       # query_hold_ticks convention)
+    route_peak: int = 0                # MAX per-tick per-dest bucket
+                                       # demand pre-cap (the zero-defer
+                                       # route_cap for the traffic seen)
+    outbox_peak: int = 0               # MAX per-tick per-layer GLOBAL
+                                       # emission demand (emitted+dropped)
+    outbox_part_peak: int = 0          # MAX per-tick PER-PART eviction
+                                       # demand — the cap binds per part,
+                                       # so zero-drop needs outbox_cap >=
+                                       # n_parts x outbox_part_peak
+    host_seconds: float = 0.0          # host-side staging time (per-tick
+                                       # driver only; the scan driver's
+                                       # staging amortizes into wall)
     wall_seconds: float = 0.0
     busy_logical: Optional[np.ndarray] = None
 
@@ -502,7 +544,7 @@ class D3Pipeline:
                                   route_cap=cfg.route_cap,
                                   pack_backend=cfg.delivery_backend,
                                   stage_axis="stage" if S > 1 else None,
-                                  n_stages=S)
+                                  n_stages=S, telemetry=cfg.telemetry)
                        if mesh is not None else LocalRouter(cfg.n_parts))
         self.delivery = make_delivery(cfg.delivery_backend)
         self.layers = list(model.layers)
@@ -603,6 +645,72 @@ class D3Pipeline:
         self._empty_labels_np = ev.label_batch_from_numpy(
             z0, z0, z0, cfg.train_cap, device=False)
         self._answer_log: list = []    # host-side answered-row columns
+        # telemetry plane (ISSUE 9): the trace recorder + straggler feed.
+        # The lane list / a2a multiplier let the cost model re-price wire
+        # bytes at candidate route_caps without re-deriving the lane
+        # arithmetic (same constants as _static_wire_bytes above).
+        lanes = self._wire_lane_list(dims, n_dev, S)
+        a2a_mult = (S * n_dev * n_dev * 4
+                    if mesh is not None and n_dev > 1 else 0)
+        a2a = a2a_mult * sum(self.router.lane_cap(c) * w for c, w in lanes)
+        if cfg.telemetry:
+            from dataclasses import asdict
+            self.trace = TraceRecorder(meta={
+                "n_parts": cfg.n_parts, "n_devices": n_dev, "n_stages": S,
+                "n_layers": len(self.layers), "dims": list(dims),
+                "window": cfg.window.kind,
+                "delivery_backend": cfg.delivery_backend,
+                "delta_eps": cfg.delta_eps,
+                "route_cap": cfg.route_cap,
+                "route_defer_cap": cfg.route_defer_cap,
+                "node_cap": cfg.node_cap, "edge_cap": cfg.edge_cap,
+                "repl_cap": cfg.repl_cap, "feat_cap": cfg.feat_cap,
+                "edge_tick_cap": cfg.edge_tick_cap,
+                "query_cap": cfg.query_cap,
+                "query_tick_cap": cfg.query_tick_cap,
+                "train_cap": cfg.train_cap,
+                "caps": asdict(caps),
+                "wire_bytes_per_tick": self._wire_bytes_per_tick,
+                "wire_lanes": [list(l) for l in lanes],
+                "a2a_mult": a2a_mult,
+                "fixed_wire_bytes": self._wire_bytes_per_tick - a2a})
+            self.straggler = StragglerMitigator(n_shards=max(n_dev, 1))
+        else:
+            self.trace = None
+            self.straggler = None
+
+    def _wire_lane_list(self, dims, n_dev: int, n_stages: int = 1):
+        """The capped-exchange lanes of one tick as (local emission
+        capacity, wire width) pairs — the SAME constants
+        `_static_wire_bytes` prices (its a2a term is
+        a2a_mult * sum(lane_cap(c) * w)); recorded in the trace meta so
+        the cost model can replay wire bytes at a different route_cap."""
+        if self.mesh is None or n_dev <= 1:
+            return []
+        cfg = self.cfg
+        p_loc = cfg.n_parts // n_dev
+        lanes = []
+        n_lay = self._n_rounds if n_stages > 1 else len(self.layers)
+        for li in range(n_lay):
+            d = dims[0] if n_stages > 1 else dims[li]
+            lanes.append((p_loc * cfg.repl_cap, d + 5))
+            lanes.append((cfg.edge_tick_cap + p_loc * cfg.edge_cap, d + 5))
+        if cfg.query_cap > 0:
+            lanes.append((p_loc * cfg.query_cap, wire_width(self.d_out)))
+        return lanes
+
+    def save_trace(self, path) -> None:
+        """Write the recorded telemetry trace (needs cfg.telemetry)."""
+        assert self.trace is not None, \
+            "telemetry plane disabled (PipelineConfig.telemetry=False)"
+        self.trace.save(path)
+
+    def parts_per_shard(self) -> list:
+        """Logical parts owned by each data shard (block sharding) — the
+        StragglerMitigator's work-steal planner input."""
+        D = max(self._n_data, 1)
+        p_loc = self.cfg.n_parts // D
+        return [np.arange(d * p_loc, (d + 1) * p_loc) for d in range(D)]
 
     def _static_wire_bytes(self, dims, n_dev: int, n_stages: int = 1) -> int:
         """EXACT collective bytes per tick across the whole mesh — a
@@ -899,21 +1007,27 @@ class D3Pipeline:
         cfg = self.cfg
         wconf = window or cfg.window
         t0 = time.perf_counter()
+        tick0 = self.now
         outbox_cap = cfg.capacities().outbox
         eb, rb, vb, fb, qb, lb = self._build_batches(edges, feats,
                                                      queries=queries,
                                                      labels=labels)
+        host_s = time.perf_counter() - t0   # host-side staging round timer
+        counts = (len(edges) if edges is not None else 0,
+                  len(feats) if feats else 0,
+                  len(queries) if queries else 0,
+                  len(labels) if labels else 0)
         now = jnp.asarray(self.now, jnp.int32)
         if self.n_stages > 1:
             (self.topo, new_states, self.sink, self.sink_seen,
              self.queries, self.stage_ring, stats_all, idle, answers,
-             qstats, new_ts) = _tick_jit_2d(
+             qstats, new_ts, occ) = _tick_jit_2d(
                 self.rounds, self._staged_params(), self.topo,
                 tuple(self.states), self.sink, self.sink_seen,
                 self.queries, self.stage_ring, fb, eb, rb, vb, qb, lb,
                 self.train_state, now, wconf, outbox_cap, self.router,
                 self.delivery, self.mesh, cfg.delta_eps, self.train_cfg,
-                self._head, self._acts)
+                self._head, self._acts, cfg.telemetry)
             self.states = list(new_states)
             self.train_state = new_ts
             self._sync_params_from_train()
@@ -921,22 +1035,31 @@ class D3Pipeline:
             self._harvest_answers(answers)
             per_layer = self._unstack_stats(jax.device_get(stats_all))
             self.metrics.stage_idle += int(np.sum(jax.device_get(idle)))
-            self._accumulate(per_layer, time.perf_counter() - t0,
-                             qstats=qstats)
+            dt = time.perf_counter() - t0
+            occ_np = (np.asarray(jax.device_get(occ))
+                      if self.trace is not None else None)
+            self._accumulate(per_layer, dt, qstats=qstats,
+                             occ_rows=occ_np)
+            self._trace_ticks(occ_np, tick0, dt, host_s, counts,
+                              per_layer)
             return per_layer
         (self.topo, new_states, self.sink, self.sink_seen, self.queries,
-         stats_all, answers, qstats, new_ts) = _tick_jit(
+         stats_all, answers, qstats, new_ts, occ) = _tick_jit(
             tuple(self.layers), self.params, self.topo, tuple(self.states),
             self.sink, self.sink_seen, self.queries, fb, eb, rb, vb, qb,
             lb, self.train_state, now, wconf, outbox_cap, self.router,
             self.delivery, self.mesh, cfg.delta_eps, self.train_cfg,
-            self._head)
+            self._head, cfg.telemetry)
         self.states = list(new_states)
         self.train_state = new_ts
         self._sync_params_from_train()
         self.now += 1
         self._harvest_answers(answers)
-        self._accumulate(stats_all, time.perf_counter() - t0, qstats=qstats)
+        dt = time.perf_counter() - t0
+        occ_np = (np.asarray(jax.device_get(occ))
+                  if self.trace is not None else None)
+        self._accumulate(stats_all, dt, qstats=qstats, occ_rows=occ_np)
+        self._trace_ticks(occ_np, tick0, dt, host_s, counts, stats_all)
         return list(stats_all)
 
     def _sync_params_from_train(self) -> None:
@@ -994,10 +1117,15 @@ class D3Pipeline:
         return {k: np.concatenate([chunk[k] for chunk in log])
                 for k in log[0]}
 
-    def _accumulate(self, stats_all, dt, ticks: int = 1, qstats=None):
+    def _accumulate(self, stats_all, dt, ticks: int = 1, qstats=None,
+                    occ_rows=None):
         """Fold per-layer stats into StreamMetrics — one tick's stats from
         the per-tick driver, or `ticks` micro-ticks' summed stats from a
-        super-tick (the counters are additive either way)."""
+        super-tick (the counters are additive either way).
+
+        occ_rows (telemetry plane): [ticks, len(TRACE_DEVICE_COLS)] int
+        per-tick occupancy rows off the device — backlog integrals add,
+        the peak gauges fold with max (their scan SUM is meaningless)."""
         m = self.metrics
         m.ticks += ticks
         m.wall_seconds += dt
@@ -1011,13 +1139,57 @@ class D3Pipeline:
             m.route_deferred += int(s.route_deferred)
             m.route_dropped += int(s.route_dropped)
             m.suppressed += int(s.n_suppressed)
+            m.occ_defer_ticks += int(s.occ_bc_defer) + int(s.occ_rmi_defer)
             m.busy_logical += np.asarray(s.busy, np.int64)
         m.emitted_total += int(stats_all[-1].emitted)
+        if occ_rows is not None:
+            occ = np.asarray(occ_rows).reshape(-1, len(TRACE_DEVICE_COLS))
+            ci = {c: i for i, c in enumerate(TRACE_DEVICE_COLS)}
+            if occ.size:
+                m.route_peak = max(m.route_peak,
+                                   int(occ[:, ci["route_peak"]].max()))
+                m.outbox_peak = max(m.outbox_peak,
+                                    int(occ[:, ci["outbox_demand"]].max()))
+                m.outbox_part_peak = max(
+                    m.outbox_part_peak,
+                    int(occ[:, ci["outbox_part_peak"]].max()))
         if qstats is not None:
             m.queries_admitted += int(qstats.admitted)
             m.queries_answered += int(qstats.answered)
             m.queries_dropped += int(qstats.dropped)
             m.query_hold_ticks += int(qstats.held_ticks)
+
+    def _trace_ticks(self, occ_rows, tick0, wall_s, host_s, counts,
+                     stats_all, ticks: int = 1, amortized: int = 0):
+        """Telemetry-plane host side: append per-tick trace rows and feed
+        the straggler mitigator. No-op when telemetry is off.
+
+        occ_rows: [ticks, C] device occupancy rows; counts: per-tick
+        (edges, feats, queries, labels) ingest tuples — a single tuple on
+        the per-tick driver, a list of `ticks` tuples on the scan driver
+        (whose wall time is attributed uniformly, amortized=1)."""
+        if self.trace is None:
+            return
+        occ = np.asarray(occ_rows).reshape(-1, len(TRACE_DEVICE_COLS))
+        rows = [counts] if ticks == 1 else list(counts)
+        per = wall_s / max(ticks, 1)
+        for i in range(ticks):
+            e, f, q, l = rows[i]
+            self.trace.append(
+                {"tick": tick0 + i, "ticks": 1, "wall_s": per,
+                 "host_s": host_s if ticks == 1 else 0.0,
+                 "amortized": amortized,
+                 "wire_bytes": self._wire_bytes_per_tick,
+                 "edges_in": e, "feats_in": f, "queries_in": q,
+                 "labels_in": l},
+                occ[i])
+        # straggler feed: per-part busy proxies folded to their shard
+        busy = np.zeros(self.cfg.n_parts, np.int64)
+        for s in stats_all:
+            busy += np.asarray(jax.device_get(s.busy), np.int64)
+        shards = busy.reshape(max(self._n_data, 1), -1).sum(axis=1)
+        self.straggler.observe_tick(per, shards)
+        self.metrics.host_seconds += host_s
 
     def chunk_stream(self, edges, feats, tick_edges: int,
                      feat_with_first_edge: bool = True, seen=None):
@@ -1105,6 +1277,13 @@ class D3Pipeline:
         label_chunks += [None] * (T - len(label_chunks))
         batches = self._stage_super_batches(edge_chunks, feat_chunks,
                                             query_chunks, label_chunks)
+        host_s = time.perf_counter() - t0
+        tick0 = self.now
+        counts = [(len(e) if e is not None else 0,
+                   len(f) if f else 0, len(q) if q else 0,
+                   len(l) if l else 0)
+                  for e, f, q, l in zip(edge_chunks, feat_chunks,
+                                        query_chunks, label_chunks)]
 
         if self.n_stages > 1:
             carry = st.PipelineCarry(
@@ -1113,12 +1292,12 @@ class D3Pipeline:
                 now=jnp.asarray(self.now, jnp.int32),
                 quiet=jnp.asarray(quiet0, jnp.int32),
                 stage_ring=self.stage_ring, train=self.train_state)
-            (final, stats_sum, idle_sum, qstats_sum,
-             answers) = _super_tick_scan_2d(
+            (final, stats_sum, idle_sum, qstats_sum, answers,
+             occ_t) = _super_tick_scan_2d(
                 self.rounds, self._staged_params(), carry, batches,
                 window or cfg.window, outbox_cap, self.router,
                 self.delivery, self.mesh, cfg.delta_eps, self.train_cfg,
-                self._head, self._acts)
+                self._head, self._acts, cfg.telemetry)
             self.topo = final.topo
             self.states = list(final.layers)
             self.sink = final.sink
@@ -1128,14 +1307,20 @@ class D3Pipeline:
             self.train_state = final.train
             self._sync_params_from_train()
             self.now += T
-            (host_stats, quiet, host_idle, host_qstats,
-             host_answers) = jax.device_get(
-                (stats_sum, final.quiet, idle_sum, qstats_sum, answers))
+            (host_stats, quiet, host_idle, host_qstats, host_answers,
+             host_occ) = jax.device_get(
+                (stats_sum, final.quiet, idle_sum, qstats_sum, answers,
+                 occ_t))
             self._harvest_answers(host_answers)
             per_layer = self._unstack_stats(host_stats)
             self.metrics.stage_idle += int(np.sum(host_idle))
-            self._accumulate(per_layer, time.perf_counter() - t0,
-                             ticks=T, qstats=host_qstats)
+            dt = time.perf_counter() - t0
+            occ_np = (np.asarray(host_occ)
+                      if self.trace is not None else None)
+            self._accumulate(per_layer, dt, ticks=T, qstats=host_qstats,
+                             occ_rows=occ_np)
+            self._trace_ticks(occ_np, tick0, dt, host_s, counts,
+                              per_layer, ticks=T, amortized=1)
             return per_layer, int(quiet)
 
         carry = st.PipelineCarry(
@@ -1143,10 +1328,11 @@ class D3Pipeline:
             sink_seen=self.sink_seen, queries=self.queries,
             now=jnp.asarray(self.now, jnp.int32),
             quiet=jnp.asarray(quiet0, jnp.int32), train=self.train_state)
-        final, stats_sum, qstats_sum, answers = _super_tick_scan(
+        final, stats_sum, qstats_sum, answers, occ_t = _super_tick_scan(
             tuple(self.layers), self.params, carry, batches,
             window or cfg.window, outbox_cap, self.router, self.delivery,
-            self.mesh, cfg.delta_eps, self.train_cfg, self._head)
+            self.mesh, cfg.delta_eps, self.train_cfg, self._head,
+            cfg.telemetry)
         self.topo = final.topo
         self.states = list(final.layers)
         self.sink = final.sink
@@ -1156,12 +1342,18 @@ class D3Pipeline:
         self._sync_params_from_train()
         self.now += T
         # the one host sync per super-tick: summed stats + quiet counter +
-        # query stats + the T ticks' stacked answers, in ONE device_get
-        host_stats, quiet, host_qstats, host_answers = jax.device_get(
-            (stats_sum, final.quiet, qstats_sum, answers))
+        # query stats + the T ticks' stacked answers + the telemetry
+        # occupancy rows, in ONE device_get
+        (host_stats, quiet, host_qstats, host_answers,
+         host_occ) = jax.device_get(
+            (stats_sum, final.quiet, qstats_sum, answers, occ_t))
         self._harvest_answers(host_answers)
-        self._accumulate(host_stats, time.perf_counter() - t0, ticks=T,
-                         qstats=host_qstats)
+        dt = time.perf_counter() - t0
+        occ_np = np.asarray(host_occ) if self.trace is not None else None
+        self._accumulate(host_stats, dt, ticks=T, qstats=host_qstats,
+                         occ_rows=occ_np)
+        self._trace_ticks(occ_np, tick0, dt, host_s, counts, host_stats,
+                          ticks=T, amortized=1)
         return host_stats, int(quiet)
 
     def run_stream_super(self, edges: np.ndarray, feats: dict,
@@ -1270,6 +1462,71 @@ class D3Pipeline:
                 for p in pars]
 
 
+def _occ_row(stats_all, qstats, ts, router, stage: bool = False):
+    """The telemetry plane's per-tick device occupancy row — int32
+    [len(TRACE_DEVICE_COLS)] in exactly `telemetry/trace.py`'s column
+    order. All entries are EXACT integers, already reduced over the data
+    axis by the tick body; `stage=True` (the 2-D program) additionally
+    folds the per-stage partial stats over the stage axis — additive
+    counters with psum_stage, the peak gauges with pmax_stage, and the
+    final layer's emissions masked to stage S-1 (layer L-1 lives there).
+    Query/train entries are stage-replicated already and skip the stage
+    reduction."""
+    if stage:
+        add, mx = router.psum_stage, router.pmax_stage
+        last_w = (router.stage_index()
+                  == jnp.int32(router.n_stages - 1)).astype(jnp.int32)
+    else:
+        add = mx = lambda x: x
+        last_w = jnp.int32(1)
+    fsum = lambda f: add(sum(getattr(s, f) for s in stats_all))
+
+    def fmax(vals):
+        m = vals[0]
+        for v in vals[1:]:
+            m = jnp.maximum(m, v)
+        return mx(m)
+
+    z = jnp.zeros((), jnp.int32)
+    if ts is not None:
+        labeled = router.psum(jnp.sum(ts.label_mask.astype(jnp.int32)))
+        dirty = router.psum(jnp.sum(
+            (ts.dirty & ts.label_mask).astype(jnp.int32)))
+    else:
+        labeled, dirty = z, z
+    row = (
+        add(stats_all[-1].emitted * last_w),            # emitted_final
+        fsum("emitted"),                                # emitted_sum
+        fsum("reduce_msgs"),
+        fsum("broadcast_msgs"),
+        fsum("wire_rows"),
+        fsum("route_deferred"),
+        fsum("route_dropped"),
+        fsum("dropped"),
+        fsum("n_suppressed"),                           # suppressed
+        fsum("occ_bc_defer"),
+        fsum("occ_rmi_defer"),
+        fmax([s.route_peak for s in stats_all]),        # route_peak
+        fmax([s.emitted + s.dropped
+              for s in stats_all]),                     # outbox_demand
+        fmax([s.outbox_part_peak
+              for s in stats_all]),                     # outbox_part_peak
+        qstats.held_ticks,                              # query_pending
+        qstats.wire_backlog,                            # query_backlog
+        labeled,                                        # train_labeled
+        dirty,                                          # train_dirty
+        qstats.admitted,                                # q_admitted
+        qstats.answered,                                # q_answered
+        qstats.dropped,                                 # q_dropped
+    )
+    assert len(row) == len(TRACE_DEVICE_COLS)
+    return jnp.stack([jnp.asarray(v, jnp.int32) for v in row])
+
+
+def _zero_occ_row():
+    return jnp.zeros((len(TRACE_DEVICE_COLS),), jnp.int32)
+
+
 def _sink_update_body(sink, seen, fb: ev.FeatBatch, part0=0):
     P_loc, N, d = sink.shape
     idx, _ = st.local_index(fb.part, fb.slot, part0, P_loc, N, fb.valid)
@@ -1281,7 +1538,7 @@ def _sink_update_body(sink, seen, fb: ev.FeatBatch, part0=0):
 def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
                   inbox, eb, rb, vb, qb, lb, now, wconf, outbox_cap,
                   router, delivery, delta_eps=0.0, ts=None, tcfg=None,
-                  head=None):
+                  head=None, telemetry=False):
     """ONE full micro-tick over the local part block: topology application,
     the query plane's admit/head-hop stage (start-of-tick), L staged layer
     ticks — with the query wire lane FUSED into layer 0's round-B exchange
@@ -1315,7 +1572,7 @@ def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
         ls, outbox, stats, extra_out = layer_tick_body(
             layer, lp, topo, states[li], inbox, eb, rb,
             now, wconf, outbox_cap, router, delivery, extra_lane=extra,
-            delta_eps=delta_eps)
+            delta_eps=delta_eps, telemetry=telemetry)
         if extra is not None:
             wire_d, (wdb, wdo) = extra_out
             queries = replace(queries, wire_defer=wdb, wire_defer_ok=wdo)
@@ -1341,23 +1598,28 @@ def _tick_program(layers, params, topo, states, sink, sink_seen, queries,
         new_ts = train_stage(tcfg, head, layers_bw, layer_feats, topo,
                              sink, sink_seen, ts, lb, inbox, now, moved,
                              router, part0)
+    # telemetry plane: the per-tick occupancy row (trace.py column order)
+    occ = (_occ_row(stats_all, qstats, new_ts, router) if telemetry
+           else _zero_occ_row())
     return (topo, tuple(new_states), sink, sink_seen, queries,
-            tuple(stats_all), ans, qstats, new_ts)
+            tuple(stats_all), ans, qstats, new_ts, occ)
 
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh",
-                                   "delta_eps", "tcfg", "head"))
+                                   "delta_eps", "tcfg", "head",
+                                   "telemetry"))
 def _tick_jit(layers, params, topo, states, sink, sink_seen, queries,
               inbox, eb, rb, vb, qb, lb, ts, now, wconf, outbox_cap,
-              router, delivery, mesh, delta_eps=0.0, tcfg=None, head=None):
+              router, delivery, mesh, delta_eps=0.0, tcfg=None, head=None,
+              telemetry=False):
     """The per-tick driver's device program (reference path)."""
     def prog(params, topo, states, sink, sink_seen, queries, inbox, eb,
              rb, vb, qb, lb, ts, now):
         return _tick_program(
             layers, params, topo, states, sink, sink_seen, queries, inbox,
             eb, rb, vb, qb, lb, now, wconf, outbox_cap, router, delivery,
-            delta_eps, ts, tcfg, head)
+            delta_eps, ts, tcfg, head, telemetry)
 
     if mesh is None:
         return prog(params, topo, states, sink, sink_seen, queries, inbox,
@@ -1369,7 +1631,7 @@ def _tick_jit(layers, params, topo, states, sink, sink_seen, queries,
         in_specs=(P(), cp.topo, cp.layers, cp.sink, cp.sink_seen,
                   cp.queries, P(), P(), P(), P(), P(), P(), tspec, P()),
         out_specs=(cp.topo, cp.layers, cp.sink, cp.sink_seen, cp.queries,
-                   stats_pspecs(len(layers)), P("data"), P(), tspec),
+                   stats_pspecs(len(layers)), P("data"), P(), tspec, P()),
         check_rep=False)
     return sharded(params, topo, states, sink, sink_seen, queries, inbox,
                    eb, rb, vb, qb, lb, ts, now)
@@ -1377,12 +1639,13 @@ def _tick_jit(layers, params, topo, states, sink, sink_seen, queries,
 
 @partial(jax.jit, static_argnames=("layers", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh",
-                                   "delta_eps", "tcfg", "head"),
+                                   "delta_eps", "tcfg", "head",
+                                   "telemetry"),
          donate_argnums=(2,))
 def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
                      wconf: win.WindowConfig, outbox_cap: int, router,
                      delivery=None, mesh=None, delta_eps=0.0, tcfg=None,
-                     head=None):
+                     head=None, telemetry=False):
     """T micro-ticks x L layers as one `lax.scan` — the super-tick body.
 
     carry (donated): PipelineCarry — topology, per-layer states, sink,
@@ -1393,7 +1656,9 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
     between ticks).
     batches: (fb, eb, rb, vb, qb, lb) pytrees with leading [T] axis (xs).
     Returns (final carry, per-layer TickStats summed over the T ticks,
-    summed QueryStats, per-tick stacked AnswerBatch — the scan's ys).
+    summed QueryStats, per-tick stacked AnswerBatch and the per-tick
+    [T, len(TRACE_DEVICE_COLS)] occupancy rows — the scan's ys; the occ
+    rows are static zeros unless `telemetry`).
     """
     def scan_prog(params, carry, batches):
         n_parts_loc = carry.topo.n_parts          # LOCAL block under mesh
@@ -1402,11 +1667,11 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
             c, ssum, qsum = state
             fb, eb, rb, vb, qb, lb = batch_t
             (topo, new_layers, sink, sink_seen, queries, stats_t, ans,
-             qstats_t, new_ts) = _tick_program(
+             qstats_t, new_ts, occ) = _tick_program(
                 layers, params, c.topo, c.layers, c.sink, c.sink_seen,
                 c.queries, fb, eb, rb, vb, qb, lb, c.now, wconf,
                 outbox_cap, router, delivery, delta_eps, c.train, tcfg,
-                head)
+                head, telemetry)
             quiet = quiet_update(c.quiet, new_layers, stats_t, router,
                                  queries=queries)
             new_c = st.PipelineCarry(
@@ -1414,12 +1679,13 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
                 sink_seen=sink_seen, queries=queries,
                 now=c.now + jnp.int32(1), quiet=quiet, train=new_ts)
             ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
-            return (new_c, ssum, add_query_stats(qsum, qstats_t)), ans
+            return (new_c, ssum, add_query_stats(qsum, qstats_t)), \
+                (ans, occ)
 
         zeros = tuple(zero_stats(n_parts_loc) for _ in layers)
-        (final, stats_sum, qstats_sum), answers = jax.lax.scan(
+        (final, stats_sum, qstats_sum), (answers, occ_t) = jax.lax.scan(
             body, (carry, zeros, zero_query_stats()), batches)
-        return final, stats_sum, qstats_sum, answers
+        return final, stats_sum, qstats_sum, answers, occ_t
 
     if mesh is None:
         return scan_prog(params, carry, batches)
@@ -1429,7 +1695,7 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
     sharded = shard_map(scan_prog, mesh=mesh,
                         in_specs=(P(), cp, P()),
                         out_specs=(cp, stats_pspecs(len(layers)), P(),
-                                   P(None, "data")),
+                                   P(None, "data"), P()),
                         check_rep=False)
     return sharded(params, carry, batches)
 
@@ -1438,7 +1704,7 @@ def _super_tick_scan(layers, params, carry: st.PipelineCarry, batches,
 def _tick_program_2d(rounds, params, topo, states, sink, sink_seen,
                      queries, ring, inbox, eb, rb, vb, qb, lb, now, wconf,
                      outbox_cap, router, delivery, delta_eps=0.0, ts=None,
-                     tcfg=None, head=None, acts=None):
+                     tcfg=None, head=None, acts=None, telemetry=False):
     """ONE micro-tick of the LAYER-PIPELINED program (ISSUE 7) — the
     shard_map body on a 2-D ("stage", "data") mesh.
 
@@ -1520,7 +1786,8 @@ def _tick_program_2d(rounds, params, topo, states, sink, sink_seen,
         ls, outbox, stats, extra_out = layer_tick_body(
             rounds[r], rparams, topo, sq_states[r],
             round_inbox, eb, rb, now, wconf, outbox_cap, router,
-            delivery, extra_lane=extra, delta_eps=delta_eps)
+            delivery, extra_lane=extra, delta_eps=delta_eps,
+            telemetry=telemetry)
         if extra is not None:
             wire_d, (wdb, wdo) = extra_out
             queries = replace(queries, wire_defer=wdb, wire_defer_ok=wdo)
@@ -1569,25 +1836,31 @@ def _tick_program_2d(rounds, params, topo, states, sink, sink_seen,
                              topo, sink, sink_seen, ts, lb, final_fb,
                              now, moved, router, part0)
     idle_v = router.psum(jnp.stack(idle))[None]   # [1, R] -> [S, R]
+    # telemetry plane: the occ row folds the per-stage partial stats over
+    # the stage axis (psum_stage / pmax_stage) so it is globally
+    # replicated — same row on every device, P() out-spec
+    occ = (_occ_row(stats_all, qstats, new_ts, router, stage=True)
+           if telemetry else _zero_occ_row())
     return (topo, tuple(ex(s) for s in new_states), sink, sink_seen,
             queries, new_ring, tuple(ex(s) for s in stats_all), idle_v,
-            ans, qstats, new_ts)
+            ans, qstats, new_ts, occ)
 
 
 @partial(jax.jit, static_argnames=("rounds", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh",
-                                   "delta_eps", "tcfg", "head", "acts"))
+                                   "delta_eps", "tcfg", "head", "acts",
+                                   "telemetry"))
 def _tick_jit_2d(rounds, params, topo, states, sink, sink_seen, queries,
                  ring, inbox, eb, rb, vb, qb, lb, ts, now, wconf,
                  outbox_cap, router, delivery, mesh, delta_eps=0.0,
-                 tcfg=None, head=None, acts=None):
+                 tcfg=None, head=None, acts=None, telemetry=False):
     """The per-tick driver's device program on the 2-D mesh."""
     def prog(params, topo, states, sink, sink_seen, queries, ring, inbox,
              eb, rb, vb, qb, lb, ts, now):
         return _tick_program_2d(
             rounds, params, topo, states, sink, sink_seen, queries, ring,
             inbox, eb, rb, vb, qb, lb, now, wconf, outbox_cap, router,
-            delivery, delta_eps, ts, tcfg, head, acts)
+            delivery, delta_eps, ts, tcfg, head, acts, telemetry)
 
     cp = stage_carry_pspecs(len(rounds))
     tspec = train_pspecs(ts) if tcfg is not None else P()
@@ -1599,7 +1872,7 @@ def _tick_jit_2d(rounds, params, topo, states, sink, sink_seen, queries,
                   P(), tspec, P()),
         out_specs=(cp.topo, cp.layers, cp.sink, cp.sink_seen, cp.queries,
                    cp.stage_ring, stage_stats_pspecs(len(rounds)),
-                   P("stage"), P("data"), P(), tspec),
+                   P("stage"), P("data"), P(), tspec, P()),
         check_rep=False)
     return sharded(params, topo, states, sink, sink_seen, queries, ring,
                    inbox, eb, rb, vb, qb, lb, ts, now)
@@ -1607,12 +1880,13 @@ def _tick_jit_2d(rounds, params, topo, states, sink, sink_seen, queries,
 
 @partial(jax.jit, static_argnames=("rounds", "wconf", "outbox_cap",
                                    "router", "delivery", "mesh",
-                                   "delta_eps", "tcfg", "head", "acts"),
+                                   "delta_eps", "tcfg", "head", "acts",
+                                   "telemetry"),
          donate_argnums=(2,))
 def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
                         wconf: win.WindowConfig, outbox_cap: int, router,
                         delivery=None, mesh=None, delta_eps=0.0,
-                        tcfg=None, head=None, acts=None):
+                        tcfg=None, head=None, acts=None, telemetry=False):
     """T micro-ticks of the PIPELINED program as one `lax.scan`.
 
     Same contract as `_super_tick_scan` plus: the donated carry includes
@@ -1631,11 +1905,11 @@ def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
             c, ssum, isum, qsum = state
             fb, eb, rb, vb, qb, lb = batch_t
             (topo, new_layers, sink, sink_seen, queries, ring, stats_t,
-             idle_t, ans, qstats_t, new_ts) = _tick_program_2d(
+             idle_t, ans, qstats_t, new_ts, occ_row) = _tick_program_2d(
                 rounds, params, c.topo, c.layers, c.sink, c.sink_seen,
                 c.queries, c.stage_ring, fb, eb, rb, vb, qb, lb, c.now,
                 wconf, outbox_cap, router, delivery, delta_eps, c.train,
-                tcfg, head, acts)
+                tcfg, head, acts, telemetry)
             # rows still in flight between stages are pending work; the
             # valid flag packs LAST in a FeatBatch wire row
             occ = jnp.sum((ring[0, ..., -1] > 0.5).astype(jnp.int32))
@@ -1649,15 +1923,15 @@ def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
                 train=new_ts)
             ssum = tuple(add_stats(a, b) for a, b in zip(ssum, stats_t))
             return (new_c, ssum, isum + idle_t,
-                    add_query_stats(qsum, qstats_t)), ans
+                    add_query_stats(qsum, qstats_t)), (ans, occ_row)
 
         zeros = tuple(jax.tree.map(lambda a: a[None],
                                    zero_stats(n_parts_loc))
                       for _ in range(R))
         izero = jnp.zeros((1, R), jnp.int32)
-        (final, ssum, isum, qsum), answers = jax.lax.scan(
+        (final, ssum, isum, qsum), (answers, occ_t) = jax.lax.scan(
             body, (carry, zeros, izero, zero_query_stats()), batches)
-        return final, ssum, isum, qsum, answers
+        return final, ssum, isum, qsum, answers, occ_t
 
     cp = stage_carry_pspecs(R, train=(train_pspecs(carry.train)
                                       if tcfg is not None else None))
@@ -1665,6 +1939,6 @@ def _super_tick_scan_2d(rounds, params, carry: st.PipelineCarry, batches,
     sharded = shard_map(scan_prog, mesh=mesh,
                         in_specs=(pspec, cp, P()),
                         out_specs=(cp, stage_stats_pspecs(R), P("stage"),
-                                   P(), P(None, "data")),
+                                   P(), P(None, "data"), P()),
                         check_rep=False)
     return sharded(params, carry, batches)

@@ -192,6 +192,15 @@ def init_layer(n_parts: int, node_cap: int, d_in: int, d_agg: int,
         rmi_defer=zf(rmi_defer_rows, w_r), rmi_defer_ok=zb(rmi_defer_rows))
 
 
+def defer_occupancy(ls: LayerState):
+    """Exact occupied-slot counts of a layer's routing defer rings as
+    (broadcast_rows, rmi_rows) int scalars — the oracle the telemetry
+    plane's `occ_bc_defer`/`occ_rmi_defer` gauges must reproduce
+    (ISSUE 9). Works on host numpy arrays and device arrays alike."""
+    return (jnp.sum(jnp.asarray(ls.bc_defer_ok).astype(jnp.int32)),
+            jnp.sum(jnp.asarray(ls.rmi_defer_ok).astype(jnp.int32)))
+
+
 def apply_edge_batch(topo: TopoState, eb, part0=0) -> TopoState:
     """Scatter new edge records into the (local block of the) adjacency
     tables; records addressed to non-local parts are dropped."""

@@ -1,15 +1,22 @@
 """The per-layer micro-tick: streaming (Alg. 1) and windowed (Alg. 2)
-forward pass, factored into FIVE planes — a part-local COMPUTE plane
+forward pass, factored into SIX planes — a part-local COMPUTE plane
 (the four stages below, ISSUE 2), an explicit ROUTING plane
 (`dist/router.py`), a pluggable DELIVERY plane (`core/delivery.py`,
 ISSUE 3) that lands routed records in the local state blocks, a
 QUERY plane (`serve/query.py`, ISSUE 4) that answers point queries from
 the state the other three maintain — it runs after the layer ticks and
 the sink update (see `core/pipeline.py`), reading this module's
-red/fwd pending flags as the per-target freshness signal — and a
+red/fwd pending flags as the per-target freshness signal — a
 TRAINING plane (`core/train_plane.py`, ISSUE 8) that closes the tick
 with a windowed online training step backpropagating through the live
-caches the compute plane just refreshed.
+caches the compute plane just refreshed — and a TELEMETRY plane
+(`repro/telemetry/`, ISSUE 9) that WATCHES the other five:
+`PipelineConfig.telemetry=True` lights up exact per-plane occupancy
+counters in TickStats (defer-ring gauges, peak route-bucket demand)
+plus a per-tick occupancy row riding the super-tick scan, streamed to
+an on-disk trace the capacity advisor replays. The default
+(telemetry=False) emits static zeros — the program is bit-for-bit the
+five-plane tick.
 
 One tick = two routing rounds (DESIGN §2), four pure stages with a
 Router delivery between them:
@@ -110,6 +117,27 @@ class TickStats:
     # eps for a fixed send schedule); psum'd over the mesh; always 0 in
     # exact mode (delta_eps=0 compiles the gate away).
     n_suppressed: jnp.ndarray
+    # telemetry plane (ISSUE 9) — occupancy gauges, static zeros unless
+    # PipelineConfig.telemetry=True (XLA dead-code-eliminates them, so the
+    # default program is bit-for-bit the five-plane tick). The defer-ring
+    # gauges are END-OF-TICK ring populations (psum'd exact integers);
+    # summed over a super-tick they become backlog INTEGRALS (ring-rows x
+    # ticks, the same convention as QueryStats.held_ticks). route_peak is
+    # the tick's max per-destination route-bucket demand BEFORE capping —
+    # the zero-defer route_cap; its scan SUM is meaningless and unused
+    # (per-tick values ride the trace's occupancy row instead).
+    occ_bc_defer: jnp.ndarray        # rows waiting in broadcast defer rings
+    occ_rmi_defer: jnp.ndarray       # rows waiting in RMI defer rings
+    route_peak: jnp.ndarray          # peak per-dest bucket demand (pre-cap)
+    # outbox_part_peak is the tick's max PER-PART eviction demand before
+    # the outbox quota. The outbox cap binds per part (outbox_cap //
+    # n_parts slots each, enforced by forward_psi's top_k), so the GLOBAL
+    # demand (emitted + dropped) under-sizes the cap whenever demand is
+    # skewed across parts — zero-drop needs
+    # outbox_cap >= n_parts x outbox_part_peak. pmax'd across devices;
+    # like route_peak its scan SUM is meaningless (per-tick values ride
+    # the trace's occupancy row).
+    outbox_part_peak: jnp.ndarray    # peak per-part outbox demand (pre-cap)
     busy: jnp.ndarray                # [P] per-part processed-event proxy
 
 
@@ -117,7 +145,9 @@ jax.tree_util.register_dataclass(
     TickStats, data_fields=["broadcast_msgs", "reduce_msgs",
                             "cross_part_msgs", "emitted", "dropped",
                             "wire_rows", "route_deferred",
-                            "route_dropped", "n_suppressed", "busy"],
+                            "route_dropped", "n_suppressed",
+                            "occ_bc_defer", "occ_rmi_defer",
+                            "route_peak", "outbox_part_peak", "busy"],
     meta_fields=[])
 
 
@@ -130,6 +160,8 @@ def zero_stats(n_parts: int) -> TickStats:
     return TickStats(broadcast_msgs=z, reduce_msgs=z, cross_part_msgs=z,
                      emitted=z, dropped=z, wire_rows=z,
                      route_deferred=z, route_dropped=z, n_suppressed=z,
+                     occ_bc_defer=z, occ_rmi_defer=z, route_peak=z,
+                     outbox_part_peak=z,
                      busy=jnp.zeros((n_parts,), jnp.int32))
 
 
@@ -327,7 +359,10 @@ def forward_psi(layer, params, topo: TopoState, ls: LayerState, feat_flat,
     PER-PART capacity-limited outbox (first `outbox_cap_pp` evicted slots
     per part emit; the rest stay pending -> natural backpressure).
 
-    Returns (fwd_pending, fwd_deadline, outbox, busy, n_emit, n_drop)."""
+    Returns (fwd_pending, fwd_deadline, outbox, busy, n_emit, n_drop,
+    n_demand_pp) — n_demand_pp is the max per-part eviction demand
+    BEFORE the quota (the zero-drop per-part outbox size; DCE'd by XLA
+    when the telemetry plane is off)."""
     P_loc, N, _ = ls.feat.shape
     is_m = topo.is_master.reshape(P_loc * N)
     dirty = (agg_dirty | (changed & is_m)) & has_feat & is_m
@@ -339,6 +374,8 @@ def forward_psi(layer, params, topo: TopoState, ls: LayerState, feat_flat,
     evict = fwd_pending if wconf.kind == win.STREAMING else \
         fwd_pending & (fwd_deadline <= now)
 
+    n_demand_pp = jnp.max(jnp.sum(evict.reshape(P_loc, N), axis=1,
+                                  dtype=jnp.int32))
     order = jnp.where(evict.reshape(P_loc, N),
                       jnp.arange(N)[None, :], N)                # [Pl,N]
     k = max(1, min(outbox_cap_pp, N))
@@ -366,7 +403,8 @@ def forward_psi(layer, params, topo: TopoState, ls: LayerState, feat_flat,
                        feat=x_out, valid=picked_valid.reshape(-1))
     fwd_pending = fwd_pending & ~emitted_mask
     busy = busy + jnp.sum(picked_valid, axis=1, dtype=jnp.int32)
-    return fwd_pending, fwd_deadline, outbox, busy, n_emit, n_drop
+    return (fwd_pending, fwd_deadline, outbox, busy, n_emit, n_drop,
+            n_demand_pp)
 
 
 # ======================================================== the full tick body
@@ -375,7 +413,8 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
                     inbox: FeatBatch, new_edges: EdgeBatch,
                     new_repl: ReplBatch, now: jnp.ndarray,
                     wconf: win.WindowConfig, outbox_cap: int, router=None,
-                    delivery=None, extra_lane=None, delta_eps: float = 0.0):
+                    delivery=None, extra_lane=None, delta_eps: float = 0.0,
+                    telemetry: bool = False):
     """Advance one GNN layer by one tick (pure, trace-friendly).
 
     `layer` supplies message/update (phi/psi): layer.message(params, x) and
@@ -390,6 +429,11 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
     part-addressed lane FUSED into this layer's round-B exchange (same
     all_to_all launch; ISSUE 5 lane fusion). The pipeline rides the query
     plane's link-score wire on layer 0 this way.
+
+    telemetry (static, ISSUE 9): when True the TickStats occupancy gauges
+    (occ_bc_defer / occ_rmi_defer / route_peak) carry exact measured
+    integers; when False (default) they are static zeros and XLA compiles
+    the gauge arithmetic away — bit-for-bit the untraced tick.
 
     delta_eps (static): delta-gated propagation (ISSUE 6, see
     round_b_emit). In approximate mode (> 0) the tick additionally
@@ -456,7 +500,7 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
 
     # ---- forward/update phase (psi), intra-layer window
     (fwd_pending, fwd_deadline, outbox, busy,
-     n_emit, n_drop) = forward_psi(
+     n_emit, n_drop, n_demand_pp) = forward_psi(
         layer, params, topo, ls, feat_flat, has_feat, agg_flat, cnt_flat,
         agg_dirty, changed, now, wconf, cap_pp, part0, busy, freq, delivery)
 
@@ -488,6 +532,13 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
         bc_defer=bc_defer[0], bc_defer_ok=bc_defer[1],
         rmi_defer=rmi_defer[0], rmi_defer_ok=rmi_defer[1])
     psum = router.psum
+    if telemetry:
+        occ_bc = psum(jnp.sum(bc_defer[1].astype(jnp.int32)))
+        occ_rmi = psum(jnp.sum(rmi_defer[1].astype(jnp.int32)))
+        route_peak = router.pmax(rcpt.peak)
+        outbox_pp = router.pmax(n_demand_pp)
+    else:
+        occ_bc = occ_rmi = route_peak = outbox_pp = jnp.zeros((), jnp.int32)
     stats = TickStats(broadcast_msgs=psum(n_bcast),
                       reduce_msgs=psum(n_reduce),
                       cross_part_msgs=psum(bcast_cross + red_cross),
@@ -495,13 +546,16 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
                       wire_rows=psum(rcpt.rows),
                       route_deferred=psum(rcpt.deferred),
                       route_dropped=psum(rcpt.dropped),
-                      n_suppressed=psum(n_supp), busy=busy)
+                      n_suppressed=psum(n_supp),
+                      occ_bc_defer=occ_bc, occ_rmi_defer=occ_rmi,
+                      route_peak=route_peak, outbox_part_peak=outbox_pp,
+                      busy=busy)
     return new_ls, outbox, stats, extra_out
 
 
 layer_tick = partial(jax.jit, static_argnames=("layer", "wconf", "outbox_cap",
                                                "router", "delivery",
-                                               "delta_eps")
+                                               "delta_eps", "telemetry")
                      )(layer_tick_body)
 
 

@@ -1,6 +1,6 @@
 """The routing plane: transport of part-addressed record batches.
 
-The streaming tick is split into five planes (ISSUE 2-5, 8):
+The streaming tick is split into six planes (ISSUE 2-5, 8, 9):
 
   * COMPUTE plane — pure part-local stages in `core/tick.py`
     (`round_a_apply`, `round_b_emit`, `apply_rmis`, `forward_psi`) that
@@ -31,6 +31,10 @@ The streaming tick is split into five planes (ISSUE 2-5, 8):
     backward ships dL/dagg to replicas and folds replica gradients onto
     masters through two dense `route_lanes` calls per layer, and its
     parameter averaging (Alg. 3) rides `psum`.
+  * TELEMETRY plane — `repro/telemetry/` (ISSUE 9) watches the other
+    five: with `MeshRouter.telemetry=True` each exchange also reports
+    its peak pre-cap bucket demand (`RouteReceipt.peak`, the zero-defer
+    route_cap), reduced over the mesh with `pmax`/`pmax_stage`.
 
 Hybrid parallelism (ISSUE 7): on a 2-D ("stage", "data") mesh the L GNN
 layers are placed round-robin on the stage axis (layer l lives on stage
@@ -108,7 +112,14 @@ class RouteReceipt:
       rows     : live records actually shipped on the wire this call;
       deferred : live records pushed into the defer rings (backpressure);
       dropped  : live records lost to a FULL defer ring (loud — see
-                 module docstring; 0 in any correctly-sized config).
+                 module docstring; 0 in any correctly-sized config);
+      peak     : telemetry plane (ISSUE 9) — the call's MAX per-
+                 destination bucket demand BEFORE capping (carried +
+                 fresh live rows aimed at the busiest device). This is
+                 the zero-defer route_cap for the traffic the call saw;
+                 static 0 unless MeshRouter.telemetry is set. Combined
+                 across calls with `jnp.maximum` (see add_receipts) — a
+                 peak gauge, never a sum.
 
     Wire BYTES are deliberately absent: the send-buffer size of a
     route_lanes call is a compile-time constant of (lanes, caps), so the
@@ -119,20 +130,26 @@ class RouteReceipt:
     rows: jnp.ndarray
     deferred: jnp.ndarray
     dropped: jnp.ndarray
+    peak: jnp.ndarray
 
 
 jax.tree_util.register_dataclass(
-    RouteReceipt, data_fields=["rows", "deferred", "dropped"],
+    RouteReceipt, data_fields=["rows", "deferred", "dropped", "peak"],
     meta_fields=[])
 
 
 def zero_receipt() -> RouteReceipt:
     z = jnp.zeros((), jnp.int32)
-    return RouteReceipt(rows=z, deferred=z, dropped=z)
+    return RouteReceipt(rows=z, deferred=z, dropped=z, peak=z)
 
 
 def add_receipts(a: RouteReceipt, b: RouteReceipt) -> RouteReceipt:
-    return jax.tree.map(jnp.add, a, b)
+    """Field-wise combine: counters add, the peak gauge maxes (summing a
+    per-call maximum would be meaningless)."""
+    return RouteReceipt(rows=a.rows + b.rows,
+                        deferred=a.deferred + b.deferred,
+                        dropped=a.dropped + b.dropped,
+                        peak=jnp.maximum(a.peak, b.peak))
 
 
 @dataclass(frozen=True)
@@ -163,12 +180,18 @@ class LocalRouter:
     def psum(self, x):
         return x
 
+    def pmax(self, x):
+        return x
+
     # stage-axis interface (trivial here: LocalRouter never runs with
     # n_stages > 1 — PipelineConfig.validate rejects the combination —
     # but shared code paths in serve/termination call these)
     n_stages = 1
 
     def psum_stage(self, x):
+        return x
+
+    def pmax_stage(self, x):
         return x
 
     def psum_vote(self, x):
@@ -196,6 +219,11 @@ class MeshRouter:
     stage_axis  : name of the pipeline-stage mesh axis, or None on the
                   1-D mesh. n_devices always counts the DATA axis only —
                   parts shard within a stage row, never across stages.
+    telemetry   : telemetry plane (ISSUE 9) — when True each route_lanes
+                  call also measures its peak per-destination bucket
+                  demand pre-cap (RouteReceipt.peak); when False (the
+                  default) the gauge is a static 0 and the measurement
+                  compiles away, keeping the exchange bit-for-bit.
     """
     n_parts: int
     n_devices: int
@@ -204,6 +232,7 @@ class MeshRouter:
     pack_backend: str = "xla"
     stage_axis: Optional[str] = None
     n_stages: int = 1
+    telemetry: bool = False
 
     @property
     def n_local_parts(self) -> int:
@@ -216,6 +245,10 @@ class MeshRouter:
     def psum(self, x):
         return lax.psum(x, self.axis)
 
+    def pmax(self, x):
+        """Max-reduce over the data axis (peak gauges, ISSUE 9)."""
+        return lax.pmax(x, self.axis)
+
     # ---- stage-axis interface (hybrid parallelism, ISSUE 7) ----------
     # Valid inside a shard_map that names `stage_axis`; on a 1-D router
     # (stage_axis=None) every method degrades to its data-plane
@@ -226,6 +259,13 @@ class MeshRouter:
         if self.stage_axis is None:
             return x
         return lax.psum(x, self.stage_axis)
+
+    def pmax_stage(self, x):
+        """Max-reduce over the stage axis only (identity on a 1-D mesh) —
+        peak gauges cross the stage axis with max, never sum."""
+        if self.stage_axis is None:
+            return x
+        return lax.pmax(x, self.stage_axis)
 
     def psum_vote(self, x):
         """Global reduction for quiescence/silence votes: both axes on a
@@ -297,6 +337,7 @@ class MeshRouter:
         n_ship = jnp.zeros((), jnp.int32)
         n_defer = jnp.zeros((), jnp.int32)
         n_drop = jnp.zeros((), jnp.int32)
+        n_peak = jnp.zeros((), jnp.int32)
         for lane, (dbuf, dok) in zip(lanes, defers):
             packed = pack_lane(lane)                           # [C, W]
             C, W = packed.shape
@@ -311,6 +352,12 @@ class MeshRouter:
                         & (lane.part < self.n_parts))
             ok = jnp.concatenate([dok, fresh_ok]) if K else fresh_ok
             dst = jnp.where(ok, parts // Pl, D)
+            if self.telemetry:
+                # peak per-destination demand BEFORE capping: the
+                # route_cap at which this lane would never defer
+                demand = jnp.zeros((D,), jnp.int32).at[dst].add(
+                    ok.astype(jnp.int32), mode="drop")
+                n_peak = jnp.maximum(n_peak, jnp.max(demand))
 
             order, ship_s, slot_s, left_s = route_plan(dst, ok, D, cap)
             rows_s = allp[order]
@@ -344,5 +391,5 @@ class MeshRouter:
             off += cap * W
             outs.append(unpack_lane(blk, proto))
         receipt = RouteReceipt(rows=n_ship, deferred=n_defer,
-                               dropped=n_drop)
+                               dropped=n_drop, peak=n_peak)
         return tuple(outs), tuple(new_defers), receipt

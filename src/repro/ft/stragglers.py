@@ -1,5 +1,14 @@
 """Straggler mitigation for the synchronous tick loop.
 
+Live-wired since ISSUE 9: when the telemetry plane is on
+(`PipelineConfig.telemetry=True`) both pipeline drivers feed
+`StragglerMitigator.observe_tick` every launch — the per-tick wall
+time (super-tick wall / T on the scan driver) plus the per-shard busy
+proxies folded from `TickStats.busy` — via
+`D3Pipeline._trace_ticks`; `D3Pipeline.parts_per_shard()` supplies
+the work-steal planner's part map. Before that the class was only
+exercised by unit tests.
+
 On a real pod a straggling host slows every lock-step collective. The
 standard mitigations this module provides:
 
@@ -29,6 +38,9 @@ class StragglerMitigator:
     _ewma: float = 0.0
     _flags: np.ndarray = field(default=None)
     overrides: dict = field(default_factory=dict)   # logical part -> shard
+    ticks_observed: int = 0           # observe_tick feed counter — lets
+                                      # tests/telemetry assert the drivers
+                                      # actually wire the mitigator in
 
     def __post_init__(self):
         if self._flags is None:
@@ -39,6 +51,8 @@ class StragglerMitigator:
 
         Flagged (slow) ticks do NOT update the EWMA baseline — otherwise a
         persistent straggler would poison its own detection threshold."""
+        self.ticks_observed += 1
+        busy_per_shard = np.asarray(busy_per_shard)
         flagged = []
         if self._ewma and wall_s > self.threshold * self._ewma \
                 and busy_per_shard.sum() > 0:

@@ -16,7 +16,11 @@ enqueue times per qid. Every harvested answer gets an end-to-end
 enqueue->answer latency (submission to host-visible result, INCLUDING the
 super-tick batching delay — that is the serving latency a client would
 observe) plus tick-domain staleness (answer_tick - issue_tick).
-`latency_stats()` reports p50/p95/p99 histogram summaries.
+`latency_stats()` reports p50/p95/p99 histogram summaries; when the
+pipeline runs with the telemetry plane on (cfg.telemetry, ISSUE 9)
+they are also annotated into the trace recorder's metadata
+(`serving_p50_ms`/`p95`/`p99`) so a recorded trace carries the serving
+latency alongside the per-tick occupancy rows.
 """
 from __future__ import annotations
 
@@ -215,7 +219,7 @@ class ServeSession:
                     "outstanding": self.outstanding}
         lats = np.asarray([a.latency_s for a in timed])
         stale = np.asarray([a.staleness_ticks for a in timed])
-        return {
+        out = {
             "answered": len(self.answers),
             "adopted": len(self.answers) - len(timed),
             "outstanding": self.outstanding,
@@ -225,3 +229,11 @@ class ServeSession:
             "staleness_ticks_p50": float(np.percentile(stale, 50)),
             "staleness_ticks_max": int(stale.max()),
         }
+        # telemetry plane: stamp the serving percentiles into the trace
+        # meta so a saved trace carries them next to the occupancy rows
+        if getattr(self.pipe, "trace", None) is not None:
+            self.pipe.trace.annotate(
+                serving_p50_ms=out["p50_ms"], serving_p95_ms=out["p95_ms"],
+                serving_p99_ms=out["p99_ms"],
+                serving_answered=out["answered"])
+        return out

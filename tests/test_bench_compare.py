@@ -6,8 +6,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.compare import (REGRESSION_FRAC, compare_rows,
-                                compare_to_baseline)
+from benchmarks.compare import (GATED_METRICS, REGRESSION_FRAC,
+                                compare_rows, compare_to_baseline)
 
 
 def row(name, evs=None, **derived):
@@ -48,6 +48,35 @@ def test_custom_threshold():
     assert compare_rows([row("r", 94.0)], base, threshold=0.05) != []
     assert compare_rows([row("r", 96.0)], base, threshold=0.05) == []
     assert 0.0 < REGRESSION_FRAC < 1.0
+
+
+def test_p99_latency_gate_lower_is_better():
+    """ISSUE 9: serving p99_ms is gated in the opposite direction."""
+    base = [row("serving[super,T=8]", p99_ms=10.0)]
+    # rises within 100% pass; beyond fail; drops never fail
+    assert compare_rows([row("serving[super,T=8]", p99_ms=19.0)], base) == []
+    assert compare_rows([row("serving[super,T=8]", p99_ms=2.0)], base) == []
+    msgs = compare_rows([row("serving[super,T=8]", p99_ms=25.0)], base)
+    assert len(msgs) == 1 and "p99_ms" in msgs[0] and "above" in msgs[0]
+
+
+def test_wire_mb_gate_lower_is_better():
+    base = [row("fig4b[capped]", wire_mb=8.0)]
+    assert compare_rows([row("fig4b[capped]", wire_mb=9.9)], base) == []
+    msgs = compare_rows([row("fig4b[capped]", wire_mb=10.1)], base)
+    assert len(msgs) == 1 and "wire_mb" in msgs[0]
+
+
+def test_multiple_metrics_gate_independently():
+    """One row can regress on several gated columns at once; the
+    events_per_s threshold override must not loosen the other gates."""
+    base = [row("serving[s]", 1000.0, p99_ms=10.0, wire_mb=4.0)]
+    cur = [row("serving[s]", 500.0, p99_ms=30.0, wire_mb=6.0)]
+    msgs = compare_rows(cur, base)
+    assert len(msgs) == 3
+    msgs = compare_rows(cur, base, threshold=0.6)   # evs 500 now allowed
+    assert len(msgs) == 2
+    assert set(GATED_METRICS) == {"events_per_s", "p99_ms", "wire_mb"}
 
 
 def test_missing_baseline_is_a_noop(tmp_path):

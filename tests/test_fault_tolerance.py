@@ -183,6 +183,45 @@ def test_straggler_detection_and_steal():
     assert overrides and all(v != 3 for v in overrides.values())
 
 
+def test_drivers_feed_straggler_mitigator():
+    """ISSUE 9: with the telemetry plane on, BOTH pipeline drivers feed
+    `observe_tick` (per-tick wall + per-shard busy proxies) and a
+    synthetically slowed shard is flagged and re-mapped off itself via
+    the pipeline's own part map."""
+    from dataclasses import replace
+    edges, feats = make_stream()
+    model = GraphSAGE((6, 12, 12))
+    params = model.init(jax.random.key(0))
+    cfg = PipelineConfig(n_parts=4, node_cap=64, edge_cap=256,
+                         repl_cap=256, feat_cap=256, edge_tick_cap=64,
+                         max_nodes=40, telemetry=True)
+    pipe = D3Pipeline(model, params, cfg)
+    assert pipe.straggler is not None and pipe.straggler.ticks_observed == 0
+    pipe.run_stream(edges[:48], feats, tick_edges=16)     # per-tick driver
+    n1 = pipe.straggler.ticks_observed
+    assert n1 == 3 and pipe.straggler._ewma > 0.0
+    pipe.run_super_tick(T=4)                              # scan driver
+    assert pipe.straggler.ticks_observed == n1 + 1
+    # telemetry off: the mitigator is not even constructed
+    off = D3Pipeline(model, params, replace(cfg, telemetry=False))
+    assert off.straggler is None
+
+    # synthetically slow shard 2: inflate the wall clock past threshold x
+    # EWMA with shard 2 carrying the busy mass, past the patience window
+    m = StragglerMitigator(n_shards=4, patience=2)
+    parts = [np.arange(d, 16, 4) for d in range(4)]       # pipeline-style map
+    busy = np.array([5, 5, 80, 5])
+    m.observe_tick(0.01, np.array([20, 20, 20, 20]))      # healthy baseline
+    for _ in range(3):
+        flagged = m.observe_tick(0.05, busy)
+        assert flagged == [2]
+    assert m.persistent_stragglers() == [2]
+    overrides = m.plan_work_steal(parts, busy)
+    moved = {lp for lp in overrides}
+    assert moved and moved.issubset(set(parts[2].tolist()))
+    assert all(tgt != 2 for tgt in overrides.values())
+
+
 def test_speculative_chunks():
     started = {0: 0.0, 1: 5.0, 2: 9.0}
     assert speculative_chunks([0, 1, 2], started, now_s=10.0,
