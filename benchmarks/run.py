@@ -18,9 +18,9 @@ from types import SimpleNamespace
 
 from benchmarks import (bench_comm_volume, bench_delivery,
                         bench_delta_gating, bench_explosion,
-                        bench_imbalance, bench_latency, bench_runtime,
-                        bench_scaling, bench_serving, bench_throughput,
-                        bench_training, bench_vs_batch)
+                        bench_imbalance, bench_latency, bench_recovery,
+                        bench_runtime, bench_scaling, bench_serving,
+                        bench_throughput, bench_training, bench_vs_batch)
 
 ALL = {
     "fig4a_throughput": bench_throughput,
@@ -35,6 +35,7 @@ ALL = {
     "delivery_backend": bench_delivery,
     "delta_gating": bench_delta_gating,
     "serving": bench_serving,
+    "recovery": bench_recovery,
     # the driver comparison alone (fig4a without the 12-policy sweep) —
     # what the CI perf snapshot tracks
     "driver_comparison": SimpleNamespace(
@@ -46,7 +47,8 @@ ALL = {
 # seeded rng, so CI snapshots are comparable across commits
 PROFILES = {
     "ci": ["driver_comparison", "dist_scaling", "delivery_backend",
-           "serving", "fig4b_comm_volume", "delta_gating", "training"],
+           "serving", "fig4b_comm_volume", "delta_gating", "training",
+           "recovery"],
 }
 
 

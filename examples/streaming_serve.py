@@ -5,8 +5,12 @@ ingests a chunk of the edge stream AND admits a batch of point queries
 (embedding reads + on-device link scores, mixed stale_ok/consistent),
 answered from the live sharded state in the launch's single host sync.
 Reports update throughput alongside query latency percentiles,
-checkpoints mid-run, and demonstrates crash recovery with an elastic
-re-scale — the online-query deployment loop of DESIGN §2.
+checkpoints mid-run, and runs a LIVE fail-stop drill: the session
+degrades, the checkpoint restores, `D3Pipeline.reshard` relays the
+carry onto the survivor mesh — same pipeline object, same session,
+pending queries intact — and serving resumes on fewer shards. The
+online-query deployment loop of DESIGN §2 plus the ISSUE 10 recovery
+path.
 
     PYTHONPATH=src python examples/streaming_serve.py [--edges 4000]
 
@@ -24,10 +28,10 @@ import jax
 from repro.core import windowing as win
 from repro.core.pipeline import D3Pipeline, PipelineConfig
 from repro.ft.checkpoint import CheckpointManager
-from repro.ft.elastic import simulate_failure_and_recover
+from repro.ft.elastic import rescale_parts
 from repro.graph.graphs import powerlaw_edges
 from repro.graph.sage import GraphSAGE
-from repro.launch.mesh import make_stream_mesh
+from repro.launch.mesh import make_stream_mesh, survivor_mesh
 from repro.serve.session import ServeSession
 
 
@@ -105,48 +109,60 @@ def main():
           f"(emitted so far: {pipe.metrics.emitted_total}, "
           f"queries answered: {pipe.metrics.queries_answered})")
 
-    # ---- crash + recover onto fewer shards, keep serving -------------
-    _, _, pipe2 = build(args.nodes, d_in, stage=args.stage)
-    step, plan = simulate_failure_and_recover(pipe2, mgr, None,
-                                              new_parallelism=2)
-    print(f"recovered checkpoint step={step}; re-scale 4->2 moved "
-          f"{plan.moved_fraction:.0%} of logical parts")
-    # qid_base: the restored carry still holds session 1's pending
-    # queries — session 2 must not reuse their qids
-    session2 = ServeSession(pipe2, driver="super", super_ticks=8,
-                            qid_base=session._next_qid)
-    serve_half(session2, edges[half:], feats, args, rng, seen, ingested)
-    session2.flush()
+    # ---- fail-stop drill: lose half the shards, keep serving LIVE ----
+    # The session degrades (stale_ok flows, consistent holds), the
+    # checkpoint restores INTO THE SAME PIPELINE, and reshard relays the
+    # carry — layer tables, defer rings, held queries — onto the survivor
+    # mesh. No second pipeline, no new session: pending qids ride along.
+    session.degrade("failstop drill")
+    old_d = pipe._n_data
+    new_d = max(1, old_d // 2)
+    while new_d > 1 and pipe.cfg.n_parts % new_d:
+        new_d -= 1
+    step = mgr.restore_pipeline(pipe)
+    if new_d < old_d:
+        lost = list(range(new_d, old_d))
+        pipe.reshard(survivor_mesh(pipe.mesh, lost, n_data=new_d))
+        plan = rescale_parts(old_d, new_d, pipe.cfg.n_parts)
+        print(f"recovered checkpoint step={step}; live reshard "
+              f"{old_d}->{new_d} shards moved {plan.moved_fraction:.0%} "
+              f"of logical parts")
+    else:
+        pipe.reshard(pipe.mesh)   # single shard: relay in place
+        print(f"recovered checkpoint step={step}; single-shard relay")
+    session.restore_normal()
+    serve_half(session, edges[half:], feats, args, rng, seen, ingested)
+    session.flush()
     wall = time.perf_counter() - t_start
 
-    m = pipe2.metrics
-    # disjoint qid spaces (qid_base): concatenating is collision-free;
-    # adopted answers (restored pending queries) carry no enqueue time
-    answered = (list(session.answers.values())
-                + list(session2.answers.values()))
+    # ONE pipeline end to end — it survived the drill; no summing across
+    # a second instance
+    m = pipe.metrics
+    answered = list(session.answers.values())
     lats = np.asarray([a.latency_s for a in answered
                        if a.latency_s is not None]) * 1e3
     stale = np.asarray([a.staleness_ticks for a in answered])
     print(f"stream done: {args.edges} edges in {wall:.1f}s "
           f"({args.edges / wall:.0f} edges/s ingested)")
     if args.stage > 1:
-        print(f"pipeline bubble fraction: {pipe2.bubble_fraction():.3f} "
+        print(f"pipeline bubble fraction: {pipe.bubble_fraction():.3f} "
               f"(stage_idle={m.stage_idle})")
-    print(f"emitted={m.emitted_total + pipe.metrics.emitted_total} "
+    print(f"emitted={m.emitted_total} "
           f"reduce_msgs={m.reduce_msgs} cross_part={m.cross_part_msgs}")
+    st = session.latency_stats()
     n_ok = sum(a.ok for a in answered)
     print(f"queries resolved={len(answered)} (ok={n_ok}, "
-          f"device-answered="
-          f"{m.queries_answered + pipe.metrics.queries_answered}, "
-          f"dropped={m.queries_dropped + pipe.metrics.queries_dropped})")
+          f"device-answered={m.queries_answered}, "
+          f"dropped={m.queries_dropped}, shed={st['shed']}, "
+          f"degraded_ticks={st['degraded_ticks']})")
     if lats.size:
         print(f"query latency ms: p50={np.percentile(lats, 50):.1f} "
               f"p95={np.percentile(lats, 95):.1f} "
               f"p99={np.percentile(lats, 99):.1f}; "
               f"staleness ticks p50={np.percentile(stale, 50):.0f} "
               f"max={stale.max()}")
-    print(f"embedding table size: {len(pipe2.embeddings())} "
-          f"(read_nodes on 8 vids: {len(pipe2.read_nodes(range(8)))})")
+    print(f"embedding table size: {len(pipe.embeddings())} "
+          f"(read_nodes on 8 vids: {len(pipe.read_nodes(range(8)))})")
     print("serve driver OK")
 
 

@@ -869,6 +869,212 @@ class D3Pipeline:
             return 0.0
         return self.metrics.stage_idle / total
 
+    # --------------------------------------------- live elastic resharding
+    def reshard(self, new_mesh, cfg: Optional[PipelineConfig] = None):
+        """LIVE Alg. 5 elastic reshard (ISSUE 10): relay the whole carry —
+        layer tables, defer rings, the inter-stage ring, QueryState,
+        TrainState + optimizer state — from the current mesh onto
+        `new_mesh` (another D-shard or S'xD' grid, or None for the
+        LocalRouter) without dropping in-flight work.
+
+        State arrays are keyed by LOGICAL part (fixed at n_parts), so the
+        [P, ...] tables relayout with one `jax.device_put` onto the new
+        shardings — no host round-trip per array, no graph
+        re-partitioning. Only the three packed row buffers whose LAYOUT
+        depends on the device count need re-blocking (ft/elastic.py):
+        defer rings compact into the new global capacity (rows are
+        destination-addressed — the router recomputes dst = part // p_loc
+        at exchange time), and inter-stage ring slabs re-block by part
+        ownership under the new p_loc (delivery drops rows outside the
+        owner's block). Held `consistent` queries ride the QueryState
+        tables and answer after the move exactly as without it.
+
+        `cfg` optionally replaces the config (defaults to the current one
+        with n_stages matched to the new mesh); it is validated against
+        the new grid and installed — the PREVIOUS config object is never
+        mutated. A stage-count change requires an empty inter-stage ring
+        (flush() first); a reshard that would overflow the new defer
+        capacities raises instead of silently dropping rows. Returns the
+        installed config."""
+        from repro.ft.elastic import repack_defer_ring, repack_stage_slab
+
+        L = len(self.layers)
+        mesh_shape = dict(new_mesh.shape) if new_mesh is not None else {}
+        S = int(mesh_shape.get("stage", 1))
+        n_dev = int(mesh_shape.get("data", 1))
+        if cfg is None:
+            cfg = replace(self.cfg, n_stages=S)
+        if new_mesh is not None and S != cfg.n_stages:
+            raise ValueError(
+                f"new mesh has stage={S} but cfg.n_stages={cfg.n_stages}: "
+                "the stage counts must agree")
+        cfg.validate(n_devices=S * n_dev, n_layers=L,
+                     local=new_mesh is None)
+        if (self.train_state is not None) != (cfg.train_cap > 0):
+            raise ValueError(
+                "reshard cannot turn the training plane on or off: "
+                f"train_state is {'set' if self.train_state is not None else 'None'} "
+                f"but cfg.train_cap={cfg.train_cap}")
+        dims = [l.in_dim for l in self.layers] + [self.layers[-1].out_dim]
+        caps = cfg.capacities(n_dev)
+        p_loc = cfg.n_parts // n_dev
+        old_S = self.n_stages
+
+        def _lost(n, what):
+            if int(n):
+                raise RuntimeError(
+                    f"reshard would drop {int(n)} in-flight {what} rows — "
+                    "flush() to quiescence first or raise route_defer_cap")
+
+        # per-LAYER view of the carry (unstacks the hybrid rounds); defer
+        # rings compact into the new global capacities
+        layer_states = [self.layer_state(l) for l in range(L)]
+        for i, ls in enumerate(layer_states):
+            b, bok, lb = repack_defer_ring(ls.bc_defer, ls.bc_defer_ok,
+                                           caps.bc_defer_rows)
+            r, rok, lr = repack_defer_ring(ls.rmi_defer, ls.rmi_defer_ok,
+                                           caps.rmi_defer_rows)
+            _lost(lb, f"layer {i} broadcast-defer")
+            _lost(lr, f"layer {i} RMI-defer")
+            layer_states[i] = replace(ls, bc_defer=b, bc_defer_ok=bok,
+                                      rmi_defer=r, rmi_defer_ok=rok)
+        qw, qok, lq = repack_defer_ring(self.queries.wire_defer,
+                                        self.queries.wire_defer_ok,
+                                        caps.query_defer_rows)
+        _lost(lq, "query-wire-defer")
+        queries = replace(self.queries, wire_defer=qw, wire_defer_ok=qok)
+
+        # inter-stage ring: a stage-count change cannot relabel in-flight
+        # rows' (stage, round) coordinates, so it needs an empty ring; a
+        # data-axis-only reshard re-blocks rows by part ownership
+        cap_pp = caps.outbox_per_part
+        ring_caps = (max(cfg.feat_cap, p_loc * cap_pp), dims[0] + 3)
+        in_flight = self._ring_occupancy_host()
+        if S != old_S and in_flight:
+            raise RuntimeError(
+                f"reshard {old_S}->{S} stages with {in_flight} rows in the "
+                "inter-stage ring — flush() to quiescence first "
+                "(data-axis-only reshards keep in-flight rows)")
+        new_ring = None
+        if S > 1:
+            if old_S == 1:
+                self._check_uniform_layers(dims)
+            n_rounds = L // S
+            new_ring = jnp.zeros((S, n_rounds, n_dev * ring_caps[0],
+                                  ring_caps[1]), jnp.float32)
+            if old_S == S and self.stage_ring is not None:
+                proto = ev.empty_feat_batch(1, dims[0])
+                pcol = field_col(proto, "part")
+                vcol = field_col(proto, "valid")
+                slabs = []
+                for s_i in range(S):
+                    per_round = []
+                    for r_i in range(self._n_rounds):
+                        slab, lost = repack_stage_slab(
+                            self.stage_ring[s_i, r_i], pcol, vcol,
+                            p_loc, n_dev, ring_caps[0])
+                        _lost(lost, f"stage-ring ({s_i},{r_i})")
+                        per_round.append(slab)
+                    slabs.append(jnp.stack(per_round))
+                new_ring = jnp.stack(slabs)
+            states = [jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[layer_states[r * S + s]
+                                     for s in range(S)])
+                      for r in range(n_rounds)]
+            rounds = (StagedActLayer(
+                base=replace(self.layers[0], act=False)),) * n_rounds
+        else:
+            n_rounds = L
+            states = layer_states
+            rounds = None
+
+        # install the new grid: router, bookkeeping, device placement
+        self.mesh = new_mesh
+        self.cfg = cfg
+        self.n_stages = S
+        self._n_data = n_dev
+        self._n_rounds = n_rounds
+        self.rounds = rounds
+        self.router = (MeshRouter(cfg.n_parts, n_dev,
+                                  route_cap=cfg.route_cap,
+                                  pack_backend=cfg.delivery_backend,
+                                  stage_axis="stage" if S > 1 else None,
+                                  n_stages=S, telemetry=cfg.telemetry)
+                       if new_mesh is not None else LocalRouter(cfg.n_parts))
+        self._ring_caps = ring_caps
+        self._wire_bytes_per_tick = self._static_wire_bytes(dims, n_dev, S)
+        if new_mesh is not None and S > 1:
+            sh = stage_carry_shardings(new_mesh, n_rounds)
+            self.topo = jax.device_put(self.topo, sh.topo)
+            self.states = [jax.device_put(s, sh.layers[i])
+                           for i, s in enumerate(states)]
+            self.sink = jax.device_put(self.sink, sh.sink)
+            self.sink_seen = jax.device_put(self.sink_seen, sh.sink_seen)
+            self.queries = jax.device_put(queries, sh.queries)
+            self.stage_ring = jax.device_put(new_ring, sh.stage_ring)
+        elif new_mesh is not None:
+            sh = carry_shardings(new_mesh, L)
+            self.topo = jax.device_put(self.topo, sh.topo)
+            self.states = [jax.device_put(s, sh.layers[i])
+                           for i, s in enumerate(states)]
+            self.sink = jax.device_put(self.sink, sh.sink)
+            self.sink_seen = jax.device_put(self.sink_seen, sh.sink_seen)
+            self.queries = jax.device_put(queries, sh.queries)
+            self.stage_ring = None
+        else:
+            dev = jax.devices()[0]
+            self.topo = jax.device_put(self.topo, dev)
+            self.states = [jax.device_put(s, dev) for s in states]
+            self.sink = jax.device_put(self.sink, dev)
+            self.sink_seen = jax.device_put(self.sink_seen, dev)
+            self.queries = jax.device_put(queries, dev)
+            self.stage_ring = None
+        if self.train_state is not None:
+            self.train_state = (
+                jax.device_put(self.train_state,
+                               train_shardings(new_mesh, self.train_state))
+                if new_mesh is not None
+                else jax.device_put(self.train_state, jax.devices()[0]))
+        if cfg.telemetry:
+            if self.trace is not None:
+                self.trace.meta["n_devices"] = n_dev
+                self.trace.meta["n_stages"] = S
+                self.trace.meta.setdefault("reshards", []).append(
+                    {"tick": int(self.now), "n_devices": n_dev,
+                     "n_stages": S})
+            self.straggler = StragglerMitigator(n_shards=max(n_dev, 1))
+        return cfg
+
+    def mitigate_stragglers(self):
+        """Consume the StragglerMitigator's persistent-straggler flags
+        (fed live by the telemetry plane) end-to-end: a shard that stays
+        flagged past `patience` is treated as fail-slow == fail-stop and
+        the pipeline LIVE-reshards onto fewer data shards, re-mapping
+        `parts_per_shard()` so the slow shard owns nothing. Returns the
+        RescalePlan when a reshard happened, else None.
+
+        Block sharding keeps parts contiguous, so the survivor count is
+        the largest divisor of n_parts below the current D that also
+        keeps the stage grid intact — work-steal overrides
+        (`plan_work_steal`) stay the planner's advisory view; the reshard
+        is the executable re-map."""
+        from repro.ft.elastic import rescale_parts
+        if self.straggler is None or self.mesh is None or self._n_data <= 1:
+            return None
+        slow = self.straggler.persistent_stragglers()
+        if not slow:
+            return None
+        old_d = self._n_data
+        new_d = old_d - len(set(slow))
+        while new_d > 1 and self.cfg.n_parts % new_d:
+            new_d -= 1
+        new_d = max(new_d, 1)
+        from repro.launch.mesh import survivor_mesh
+        new_mesh = survivor_mesh(self.mesh, slow, n_data=new_d)
+        plan = rescale_parts(old_d, new_d, self.cfg.n_parts)
+        self.reshard(new_mesh)
+        return plan
+
     # ------------------------------------------------------------ host side
     def _resolve_queries(self, queries, issue_tick: int) -> dict:
         """Resolve host query requests [(qid, kind, vid, [vid2], consistent)]

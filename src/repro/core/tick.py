@@ -335,6 +335,34 @@ def round_b_emit(layer, params, topo: TopoState, ls: LayerState, feat_flat,
             n_supp)
 
 
+def canon_msg_batch(b: MsgBatch, part0, P_loc: int, N: int,
+                    n_parts: int) -> MsgBatch:
+    """Deterministic delivery (ISSUE 10): reorder a DELIVERED additive
+    batch into the canonical (local destination index, source part) order
+    with a stable sort.
+
+    The all_to_all concatenates arrivals by SOURCE DEVICE, so the order
+    in which two records from different shards reach the same aggregator
+    depends on the device count — the one place the mesh program's f32
+    sums depend on D. Rows from the SAME source part always arrive in
+    that part's emission order (route_pack and the defer rings are
+    order-preserving), so a stable sort keyed by
+    (dst_idx * n_parts + src_part) is a TOTAL canonical order: uncapped
+    mesh runs become bit-equal across any device count, which is what
+    lets a live reshard (D -> D') be verified against the uninterrupted
+    run with assert_array_equal rather than allclose. Invalid rows carry
+    the one-past-the-end sentinel index and sort to the back.
+
+    Key fits int32 for any realistic config (P_loc * N * n_parts < 2^31).
+    """
+    idx, _ = local_index(b.part, b.slot, part0, P_loc, N, b.valid)
+    key = idx * jnp.int32(n_parts) + jnp.clip(b.src_part, 0, n_parts - 1)
+    order = jnp.argsort(key, stable=True)
+    return MsgBatch(part=b.part[order], slot=b.slot[order],
+                    vec=b.vec[order], cnt=b.cnt[order],
+                    src_part=b.src_part[order], valid=b.valid[order])
+
+
 def apply_rmis(ls: LayerState, rmis_d: MsgBatch, part0, busy, delivery):
     """Apply DELIVERED aggregator RMIs at local masters: one delivery
     regardless of the reduce/replace/remove mix (flat scatter-add on
@@ -494,7 +522,10 @@ def layer_tick_body(layer, params, topo: TopoState, ls: LayerState,
         extra_out = (extra_d, xdefer_new)
     rcpt = add_receipts(rcpt, rcpt_b)
 
-    # ---- apply RMIs at local masters
+    # ---- apply RMIs at local masters (canonical order first: the additive
+    # scatter is the one delivery whose f32 result depends on arrival
+    # order, and arrival order is the one thing that depends on D)
+    rmis_d = canon_msg_batch(rmis_d, part0, P_loc, N, router.n_parts)
     agg_flat, cnt_flat, agg_dirty, busy = apply_rmis(ls, rmis_d, part0,
                                                      busy, delivery)
 

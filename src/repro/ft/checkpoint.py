@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import json
 import threading
+import warnings
 import zlib
 from dataclasses import dataclass
 from pathlib import Path
@@ -34,33 +35,67 @@ try:                                    # optional: zstd when installed
 except ImportError:                     # clean env: stdlib fallback
     zstandard = None
 
-# codec tags (format header): every blob starts with one of these bytes
+# codec tags (format header): every blob starts with one of these bytes.
+# \x01/\x02 are the legacy CRC-less formats (restore-only); since ISSUE 10
+# writes use \x03/\x04 = tag + CRC32(compressed payload, 4 bytes LE) +
+# payload, so a truncated or bit-flipped .ckpt fails loudly at the header
+# instead of surfacing a deep zlib/msgpack error.
 _CODEC_ZSTD = b"\x01"
 _CODEC_ZLIB = b"\x02"
+_CODEC_ZSTD_CRC = b"\x03"
+_CODEC_ZLIB_CRC = b"\x04"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint blob failed its integrity check (CRC mismatch,
+    truncation, or undecodable payload). `CheckpointManager.restore`
+    raises it annotated with step + path; step=None restores fall back to
+    the previous kept generation with a warning."""
 
 
 def _compress(raw: bytes) -> bytes:
     if zstandard is not None:
-        return _CODEC_ZSTD + zstandard.ZstdCompressor(level=3).compress(raw)
-    return _CODEC_ZLIB + zlib.compress(raw, 6)
+        tag = _CODEC_ZSTD_CRC
+        body = zstandard.ZstdCompressor(level=3).compress(raw)
+    else:
+        tag = _CODEC_ZLIB_CRC
+        body = zlib.compress(raw, 6)
+    return tag + (zlib.crc32(body) & 0xFFFFFFFF).to_bytes(4, "little") + body
 
 
 def _decompress(blob: bytes) -> bytes:
-    tag, body = blob[:1], blob[1:]
+    tag = blob[:1]
+    if tag in (_CODEC_ZSTD_CRC, _CODEC_ZLIB_CRC):
+        if len(blob) < 5:
+            raise CheckpointCorruptError(
+                "truncated checkpoint: blob ends inside the CRC header")
+        want = int.from_bytes(blob[1:5], "little")
+        body = blob[5:]
+        got = zlib.crc32(body) & 0xFFFFFFFF
+        if got != want:
+            raise CheckpointCorruptError(
+                f"payload CRC mismatch (stored {want:#010x}, computed "
+                f"{got:#010x}) — the blob is truncated or bit-flipped")
+        if tag == _CODEC_ZSTD_CRC:
+            if zstandard is None:
+                raise RuntimeError("checkpoint is zstd-compressed but the "
+                                   "'zstandard' package is not installed")
+            return zstandard.ZstdDecompressor().decompress(body)
+        return zlib.decompress(body)
     if tag == _CODEC_ZSTD:
         if zstandard is None:
             raise RuntimeError("checkpoint is zstd-compressed but the "
                                "'zstandard' package is not installed")
-        return zstandard.ZstdDecompressor().decompress(body)
+        return zstandard.ZstdDecompressor().decompress(blob[1:])
     if tag == _CODEC_ZLIB:
-        return zlib.decompress(body)
+        return zlib.decompress(blob[1:])
     if blob[:4] == b"\x28\xb5\x2f\xfd":
         # legacy checkpoint from before the codec tag: a bare zstd frame
         if zstandard is None:
             raise RuntimeError("legacy zstd checkpoint needs the "
                                "'zstandard' package to restore")
         return zstandard.ZstdDecompressor().decompress(blob)
-    raise ValueError(f"unknown checkpoint codec tag {tag!r}")
+    raise CheckpointCorruptError(f"unknown checkpoint codec tag {tag!r}")
 
 
 def _pack_tree(tree) -> bytes:
@@ -137,22 +172,57 @@ class CheckpointManager:
             t.join()
         self._pending.clear()
 
+    def _load_leaves(self, info: CheckpointInfo):
+        """Decode one blob; any integrity failure surfaces as a
+        CheckpointCorruptError carrying step + path."""
+        try:
+            return _unpack_leaves(info.path.read_bytes())
+        except CheckpointCorruptError as e:
+            raise CheckpointCorruptError(
+                f"corrupt checkpoint at step {info.step} "
+                f"({info.path}): {e}") from e
+        except Exception as e:   # zlib.error / msgpack / struct depths
+            raise CheckpointCorruptError(
+                f"corrupt checkpoint at step {info.step} ({info.path}): "
+                f"{type(e).__name__}: {e}") from e
+
+    def checkpoints(self) -> list[CheckpointInfo]:
+        return [CheckpointInfo(int(p.stem.split(".")[0]), p)
+                for p in sorted(self.dir.glob("*.ckpt"))]
+
     def restore(self, template, step: int | None = None):
-        """Restore into the structure of `template` (shape/dtype checked)."""
-        info = self.latest() if step is None else CheckpointInfo(
-            step, self.dir / f"{step:010d}.ckpt")
-        if info is None:
+        """Restore into the structure of `template` (shape/dtype checked).
+
+        step=None restores the newest checkpoint; if its blob fails the
+        integrity check the restore FALLS BACK to the previous kept
+        generation (newest -> oldest) with a warning — a torn write never
+        strands recovery while an older consistent cut exists. An
+        explicit step raises CheckpointCorruptError instead."""
+        infos = ([CheckpointInfo(step, self.dir / f"{step:010d}.ckpt")]
+                 if step is not None else list(reversed(self.checkpoints())))
+        if not infos:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        leaves = _unpack_leaves(info.path.read_bytes())
-        t_leaves, treedef = jax.tree.flatten(template)
-        assert len(leaves) == len(t_leaves), \
-            f"checkpoint has {len(leaves)} leaves, template {len(t_leaves)}"
-        out = []
-        for got, want in zip(leaves, t_leaves):
-            w = np.asarray(want)
-            assert tuple(got.shape) == tuple(w.shape), (got.shape, w.shape)
-            out.append(jnp.asarray(got.astype(w.dtype)))
-        return jax.tree.unflatten(treedef, out), info.step
+        errors: list[CheckpointCorruptError] = []
+        for info in infos:
+            try:
+                leaves = self._load_leaves(info)
+            except CheckpointCorruptError as e:
+                if step is not None:
+                    raise
+                errors.append(e)
+                warnings.warn(f"{e} — falling back to the previous kept "
+                              "generation")
+                continue
+            t_leaves, treedef = jax.tree.flatten(template)
+            assert len(leaves) == len(t_leaves), \
+                f"checkpoint has {len(leaves)} leaves, template {len(t_leaves)}"
+            out = []
+            for got, want in zip(leaves, t_leaves):
+                w = np.asarray(want)
+                assert tuple(got.shape) == tuple(w.shape), (got.shape, w.shape)
+                out.append(jnp.asarray(got.astype(w.dtype)))
+            return jax.tree.unflatten(treedef, out), info.step
+        raise errors[0]
 
     def restore_aux(self, step: int | None = None) -> dict:
         info = self.latest() if step is None else CheckpointInfo(

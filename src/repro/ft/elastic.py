@@ -8,15 +8,30 @@ recovery deterministic.
 
 In the mesh runtime, "physical sub-operator" = mesh shard: re-scaling is a
 re-sharding of the [P_logical, ...] state arrays onto a different number of
-data-axis shards. On one host this is a pure relayout (the arrays are
-already keyed by logical part); the function below verifies the invariants
-and produces the shard assignment + per-shard state views used by the
-launcher and the benchmarks.
+data-axis shards. Since ISSUE 10 this is LIVE: `D3Pipeline.reshard(mesh)`
+relays the whole carry — layer tables, defer rings, the inter-stage ring,
+QueryState, TrainState — onto the new mesh with `jax.device_put` (no host
+round-trip per array) using the helpers below to re-block the three packed
+row buffers whose LAYOUT (not content) is device-count dependent:
+
+  * defer rings are [D*K, W] row-compacted FIFOs whose rows are
+    DESTINATION-addressed (the router recomputes dst = part // p_loc at
+    exchange time), so under a new D they only need compacting into the
+    new global capacity (`repack_defer_ring`);
+  * the inter-stage ring's [D*C, W] slabs hold rows already routed to
+    their owning data shard — delivery drops rows outside the local part
+    block — so rows must be re-blocked by part ownership under the new
+    p_loc (`repack_stage_slab`).
+
+`simulate_failure_and_recover` is now a thin wrapper over
+checkpoint-restore + `reshard`; it returns the NEW validated
+PipelineConfig instead of mutating the caller's config in place.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.explosion import physical_part
@@ -54,15 +69,77 @@ def shard_views(state_leading_parts: int, parallelism: int,
     return [np.nonzero(phys == p)[0] for p in range(parallelism)]
 
 
+# ------------------------------------------------- packed-row re-blocking
+def repack_defer_ring(rows, ok, new_rows: int):
+    """Re-capacity a [K, W] defer ring to [new_rows, W].
+
+    Valid rows compact to the front with a STABLE sort (FIFO order — and
+    therefore delivery order after the reshard — is preserved), then the
+    buffer is padded or truncated to the new global capacity. Returns
+    (rows', ok', n_lost) where n_lost counts valid rows that did not fit
+    (the caller raises — a reshard must never silently drop in-flight
+    work)."""
+    order = jnp.argsort(~ok, stable=True)
+    rows_s, ok_s = rows[order], ok[order]
+    k, w = rows_s.shape
+    if new_rows >= k:
+        pad = new_rows - k
+        return (jnp.concatenate(
+                    [rows_s, jnp.zeros((pad, w), rows_s.dtype)]),
+                jnp.concatenate([ok_s, jnp.zeros((pad,), bool)]),
+                jnp.zeros((), jnp.int32))
+    lost = jnp.sum(ok_s[new_rows:].astype(jnp.int32))
+    return rows_s[:new_rows], ok_s[:new_rows], lost
+
+
+def repack_stage_slab(rows, part_col: int, valid_col: int,
+                      p_loc_new: int, d_new: int, cap_new: int):
+    """Re-block one inter-stage ring slab [K, W] -> [d_new * cap_new, W].
+
+    Ring rows are consumed through the drop-sentinel delivery index, which
+    silently ignores rows sitting outside their owner's part block — so
+    after a reshard every valid row must live in the block of the data
+    shard that owns its part under the NEW p_loc. Row order within a block
+    is irrelevant (ring rows deliver to unique (part, slot) targets).
+    Returns (slab', n_lost) with n_lost the valid rows that overflowed a
+    block (cannot happen for capacities derived from the same config —
+    kept as a loud invariant)."""
+    valid = rows[:, valid_col] > 0.5
+    part = rows[:, part_col].astype(jnp.int32)
+    dst = jnp.where(valid, part // jnp.int32(p_loc_new), d_new)
+    order = jnp.argsort(dst, stable=True)
+    rows_s, dst_s = rows[order], dst[order]
+    # rank of each row within its destination run of the sorted array
+    starts = jnp.searchsorted(dst_s, jnp.arange(d_new + 1))
+    rank = jnp.arange(dst_s.shape[0]) - starts[jnp.clip(dst_s, 0, d_new)]
+    in_cap = (dst_s < d_new) & (rank < cap_new)
+    slot = jnp.where(in_cap, dst_s * cap_new + rank, d_new * cap_new)
+    out = jnp.zeros((d_new * cap_new + 1, rows.shape[1]), rows.dtype)
+    out = out.at[slot].set(jnp.where(in_cap[:, None], rows_s, 0.0))
+    lost = jnp.sum(((dst_s < d_new) & ~in_cap).astype(jnp.int32))
+    return out[:-1], lost
+
+
 def simulate_failure_and_recover(pipe, ckpt_mgr, step: int,
-                                 new_parallelism: int):
-    """Fail-stop drill: restore the latest checkpoint into a fresh pipeline
-    and re-map logical parts onto `new_parallelism` sub-operators. Returns
-    (restored_step, RescalePlan). The engine state arrays are keyed by
-    logical part, so no graph data is touched — exactly the paper's claim.
-    """
+                                 new_parallelism: int, new_mesh=None):
+    """Fail-stop drill: restore the checkpoint into `pipe`, then LIVE
+    reshard the recovered carry onto the survivor mesh. Returns
+    (restored_step, RescalePlan, new_cfg).
+
+    The engine state arrays are keyed by logical part, so no graph data
+    is touched — exactly the paper's claim. `new_mesh=None` on a meshed
+    pipeline builds a `make_stream_mesh(new_parallelism * S, stage=S)`
+    survivor grid; on a local pipeline it re-validates the config at the
+    new parallelism without moving anything. The caller's config object
+    is never mutated — the new validated `PipelineConfig` is installed on
+    the pipeline and returned."""
     restored = ckpt_mgr.restore_pipeline(pipe, step)
     plan = rescale_parts(pipe.cfg.base_parallelism, new_parallelism,
                          pipe.cfg.n_parts)
-    pipe.cfg.base_parallelism = new_parallelism
-    return restored, plan
+    if new_mesh is None and pipe.mesh is not None:
+        from repro.launch.mesh import make_stream_mesh
+        new_mesh = make_stream_mesh(new_parallelism * pipe.n_stages,
+                                    stage=pipe.n_stages)
+    new_cfg = replace(pipe.cfg, base_parallelism=new_parallelism)
+    pipe.reshard(new_mesh, cfg=new_cfg)
+    return restored, plan, pipe.cfg

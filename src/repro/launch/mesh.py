@@ -55,6 +55,34 @@ def make_stream_mesh(n_devices: int | None = None, stage: int = 1):
                 ("stage", "data"))
 
 
+def survivor_mesh(mesh, lost_data_shards, n_data: int | None = None):
+    """Mesh after fail-stop loss of `lost_data_shards` (data-axis column
+    indices of `mesh`): keeps the stage extent, drops the lost data
+    columns, and optionally trims to the first `n_data` surviving columns
+    (block sharding needs n_parts % n_data == 0, so recovery may keep
+    fewer shards than survived). The lost devices own nothing afterwards —
+    `D3Pipeline.reshard(survivor_mesh(...))` relays all state onto the
+    survivors."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = np.asarray(mesh.devices)
+    stage_grid = devs.ndim == 2
+    if not stage_grid:
+        devs = devs[None, :]
+    lost = {int(s) for s in lost_data_shards}
+    keep = [i for i in range(devs.shape[1]) if i not in lost]
+    if n_data is not None:
+        keep = keep[: int(n_data)]
+    if not keep:
+        raise ValueError("no surviving data shards after "
+                         f"losing {sorted(lost)}")
+    grid = devs[:, keep]
+    if not stage_grid:
+        return Mesh(grid[0], ("data",))
+    return Mesh(grid, ("stage", "data"))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """The data-parallel axes: ("pod","data") on multi-pod else ("data",)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

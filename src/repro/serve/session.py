@@ -21,6 +21,26 @@ pipeline runs with the telemetry plane on (cfg.telemetry, ISSUE 9)
 they are also annotated into the trace recorder's metadata
 (`serving_p50_ms`/`p95`/`p99`) so a recorded trace carries the serving
 latency alongside the per-tick occupancy rows.
+
+Degraded-mode serving (ISSUE 10): under overload or mid-recovery the
+session sheds instead of stalling —
+
+  * `degrade(reason)` declares degraded mode (e.g. around a
+    `pipe.reshard`): `stale_ok` submissions keep flowing while
+    `consistent` submissions are HELD in the host queue until
+    `restore_normal()` (consistent queries already admitted ride the
+    device QueryState across the reshard and answer normally);
+  * `shed_threshold` bounds `outstanding`: submissions beyond it get an
+    immediate ok=False shed answer instead of unbounded queue growth;
+  * `max_retries > 0` gives retriable ok=False answers (admission
+    overflow, endpoint not yet materialized) an in-session bounded
+    retry: same qid resubmitted after an exponential tick backoff
+    (`retry_backoff_ticks * 2**attempt`), capped at `max_retries`
+    attempts, retry state capped by the existing `max_retained` bound.
+
+All of it is observable, never silent: `latency_stats()` carries
+retried/shed/retry_exhausted/degraded_ticks counters and the declared
+degraded reason.
 """
 from __future__ import annotations
 
@@ -57,6 +77,10 @@ class Answer:
 class _PendingMeta:
     enqueued_at: float
     kind: int
+    row: tuple = None         # (kind, u, v, consistent) — the original
+                              # submission, kept so a failed answer can
+                              # be resubmitted under the same qid
+    attempts: int = 0         # bounded-retry attempts consumed so far
 
 
 @dataclass
@@ -80,9 +104,23 @@ class ServeSession:
                                                    # evicted (dict insertion
                                                    # order). Read results
                                                    # promptly or raise it.
+    max_retries: int = 0                           # bounded in-session retry
+                                                   # of ok=False answers
+                                                   # (0 = off)
+    retry_backoff_ticks: int = 2                   # exponential backoff base:
+                                                   # attempt k waits
+                                                   # base * 2**(k-1) ticks
+    shed_threshold: int | None = None              # outstanding bound: beyond
+                                                   # it new submissions shed
+                                                   # (immediate ok=False)
     answers: dict = field(default_factory=dict)    # qid -> Answer
+    counters: dict = field(default_factory=lambda: {
+        "retried": 0, "shed": 0, "retry_exhausted": 0,
+        "degraded_ticks": 0})
     _queue: list = field(default_factory=list)     # un-admitted submissions
     _meta: dict = field(default_factory=dict)      # qid -> _PendingMeta
+    _retry_queue: list = field(default_factory=list)  # (due_tick, qid)
+    _degraded: str | None = None                   # declared reason or None
     _next_qid: int = 0
 
     def __post_init__(self):
@@ -99,6 +137,57 @@ class ServeSession:
                 "the retained-answer dict, not whether answers arrive)")
         self._next_qid = max(self._next_qid, int(self.qid_base))
 
+    # --------------------------------------------------------- degradation
+    @property
+    def degraded(self) -> str | None:
+        """The declared degraded-mode reason, or None when normal."""
+        return self._degraded
+
+    def degrade(self, reason: str = "recovery") -> None:
+        """Declare degraded mode (overload / mid-recovery): `stale_ok`
+        submissions keep admitting, `consistent` submissions are held in
+        the host queue until `restore_normal()`. Queries already admitted
+        are untouched — held consistent queries ride the device state
+        (incl. across a `pipe.reshard`) and answer normally."""
+        self._degraded = str(reason)
+
+    def restore_normal(self) -> None:
+        self._degraded = None
+
+    def _shed(self, qid: int, kind: int) -> None:
+        self.counters["shed"] += 1
+        self.answers[qid] = Answer(
+            qid=qid, kind=kind, ok=False,
+            vec=np.zeros(getattr(self.pipe, "d_out", 0), np.float32),
+            score=0.0, issue_tick=-1, answer_tick=-1, latency_s=None)
+
+    def _release_due_retries(self) -> None:
+        """Move retries whose backoff expired to the queue front (same
+        qid, original enqueue time — end-to-end latency stays honest)."""
+        if not self._retry_queue:
+            return
+        now = self.pipe.now
+        due = sorted(x for x in self._retry_queue if x[0] <= now)
+        self._retry_queue = [x for x in self._retry_queue if x[0] > now]
+        released = [(qid,) + self._meta[qid].row for _, qid in due
+                    if qid in self._meta]
+        self._queue = released + self._queue
+
+    def _take(self, n: int) -> list:
+        """Dequeue up to n submissions for admission; degraded mode holds
+        `consistent` submissions back (row = (qid, kind, u, v, cons))."""
+        if self._degraded is None:
+            q, self._queue = self._queue[:n], self._queue[n:]
+            return q
+        take, keep = [], []
+        for row in self._queue:
+            if len(take) < n and not row[4]:
+                take.append(row)
+            else:
+                keep.append(row)
+        self._queue = keep
+        return take
+
     # ------------------------------------------------------------- submit
     def _submit(self, rows) -> list:
         now = time.perf_counter()
@@ -106,9 +195,14 @@ class ServeSession:
         for row in rows:
             qid = self._next_qid
             self._next_qid += 1
-            self._queue.append((qid,) + row)
-            self._meta[qid] = _PendingMeta(enqueued_at=now, kind=row[0])
             qids.append(qid)
+            if (self.shed_threshold is not None
+                    and self.outstanding >= self.shed_threshold):
+                self._shed(qid, row[0])
+                continue
+            self._queue.append((qid,) + row)
+            self._meta[qid] = _PendingMeta(enqueued_at=now, kind=row[0],
+                                           row=tuple(row))
         return qids
 
     def submit_embed(self, vids, consistent: bool = False) -> list:
@@ -126,7 +220,10 @@ class ServeSession:
         """One micro-tick (driver='tick'): queued submissions admit now,
         up to the per-tick admission budget (the rest stay queued)."""
         cap = self.pipe.cfg.capacities().query_admissions
-        q, self._queue = self._queue[:cap], self._queue[cap:]
+        self._release_due_retries()
+        q = self._take(cap)
+        if self._degraded is not None:
+            self.counters["degraded_ticks"] += 1
         stats = self.pipe.tick(edges, feats, window=window,
                                queries=q or None)
         self._harvest()
@@ -146,7 +243,10 @@ class ServeSession:
         n = max(len(edge_chunks), len(feat_chunks), 1)
         T = int(T) if T is not None else n
         per_tick = self.pipe.cfg.capacities().query_admissions
-        q, self._queue = self._queue[:per_tick * T], self._queue[per_tick * T:]
+        self._release_due_retries()
+        q = self._take(per_tick * T)
+        if self._degraded is not None:
+            self.counters["degraded_ticks"] += T
         q_chunks = [q[i * per_tick: (i + 1) * per_tick] for i in range(T)]
         out = self.pipe.run_super_tick(edge_chunks, feat_chunks, T=T,
                                        window=window, quiet0=quiet0,
@@ -179,9 +279,38 @@ class ServeSession:
         t_now = time.perf_counter()
         for i in range(len(cols["qid"])):
             qid = int(cols["qid"][i])
-            meta = self._meta.pop(qid, None)
+            ok = bool(cols["ok"][i])
+            meta = self._meta.get(qid)
+            if (not ok and self.max_retries > 0 and meta is not None
+                    and meta.row is not None
+                    and meta.attempts < self.max_retries):
+                # bounded in-session retry: resubmit the same qid after
+                # an exponential tick backoff instead of surfacing the
+                # retriable failure (admission overflow / endpoint not
+                # yet materialized) to the client
+                meta.attempts += 1
+                due = int(self.pipe.now) + self.retry_backoff_ticks * (
+                    2 ** (meta.attempts - 1))
+                self._retry_queue.append((due, qid))
+                self.counters["retried"] += 1
+                # retry state rides the max_retained bound too — beyond
+                # it the OLDEST retry gives up with a final failed answer
+                while len(self._retry_queue) > self.max_retained:
+                    _, old = self._retry_queue.pop(0)
+                    m = self._meta.pop(old, None)
+                    self.counters["retry_exhausted"] += 1
+                    self.answers[old] = Answer(
+                        qid=old, kind=m.kind if m else 0, ok=False,
+                        vec=np.zeros(getattr(self.pipe, "d_out", 0),
+                                     np.float32),
+                        score=0.0, issue_tick=-1, answer_tick=-1,
+                        latency_s=None)
+                continue
+            self._meta.pop(qid, None)
+            if not ok and meta is not None and meta.attempts > 0:
+                self.counters["retry_exhausted"] += 1
             self.answers[qid] = Answer(
-                qid=qid, kind=int(cols["kind"][i]), ok=bool(cols["ok"][i]),
+                qid=qid, kind=int(cols["kind"][i]), ok=ok,
                 vec=np.asarray(cols["vec"][i]),
                 score=float(cols["score"][i]),
                 issue_tick=int(cols["issue"][i]),
@@ -213,16 +342,18 @@ class ServeSession:
         separate `adopted` count."""
         timed = [a for a in self.answers.values()
                  if a.latency_s is not None]
+        degr = {"degraded": self._degraded, **self.counters}
         if not timed:
             return {"answered": len(self.answers),
                     "adopted": len(self.answers),
-                    "outstanding": self.outstanding}
+                    "outstanding": self.outstanding, **degr}
         lats = np.asarray([a.latency_s for a in timed])
         stale = np.asarray([a.staleness_ticks for a in timed])
         out = {
             "answered": len(self.answers),
             "adopted": len(self.answers) - len(timed),
             "outstanding": self.outstanding,
+            **degr,
             "p50_ms": float(np.percentile(lats, 50) * 1e3),
             "p95_ms": float(np.percentile(lats, 95) * 1e3),
             "p99_ms": float(np.percentile(lats, 99) * 1e3),

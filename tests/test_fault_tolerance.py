@@ -134,6 +134,29 @@ def test_checkpoint_async(tmp_path):
     assert step == 7
 
 
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    """ISSUE 10: every checkpoint payload carries a CRC32 of the
+    compressed blob. Flip ONE byte of a real checkpoint: an explicit-step
+    restore fails loudly (step + path in the message), and a latest-step
+    restore warns and falls back to the previous kept generation."""
+    from repro.ft.checkpoint import CheckpointCorruptError
+    mgr = CheckpointManager(tmp_path, keep=3)
+    x1 = np.arange(64, dtype=np.float32).reshape(8, 8)
+    mgr.save(1, {"x": x1})
+    mgr.save(2, {"x": x1 + 1.0})
+    info = mgr.latest()
+    blob = bytearray(info.path.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF                      # one flipped byte
+    info.path.write_bytes(bytes(blob))
+
+    with pytest.raises(CheckpointCorruptError, match=r"step 2"):
+        mgr.restore({"x": np.zeros((8, 8), np.float32)}, step=2)
+    with pytest.warns(UserWarning, match="falling back"):
+        tree, step = mgr.restore({"x": np.zeros((8, 8), np.float32)})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["x"]), x1)
+
+
 def test_rescale_plan_properties():
     plan = rescale_parts(8, 16, 64)
     # every logical part lands on a valid new shard; moves are minimal-ish
@@ -160,9 +183,14 @@ def test_failure_recovery_rescale(tmp_path):
 
     _, _, pipe2 = make_pipe(seed=2)
     from repro.ft.elastic import simulate_failure_and_recover
-    step, plan = simulate_failure_and_recover(pipe2, mgr, 5,
-                                              new_parallelism=1)
+    cfg_before = pipe2.cfg
+    step, plan, new_cfg = simulate_failure_and_recover(pipe2, mgr, 5,
+                                                       new_parallelism=1)
     assert step == 5 and pipe2.cfg.base_parallelism == 1
+    # the recovery must NOT mutate the old config in place: it returns a
+    # fresh validated PipelineConfig and installs it on the pipeline
+    assert new_cfg is pipe2.cfg and new_cfg is not cfg_before
+    assert cfg_before.base_parallelism == 2
     pipe2.run_stream(edges[60:], feats, tick_edges=16)
     pipe2.flush(max_ticks=128)
     g, _ = build_snapshot(edges, feats, 6, 40)
